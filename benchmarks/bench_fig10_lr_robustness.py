@@ -1,0 +1,25 @@
+"""Fig. 10 analogue: final-score scatter over learning rates for all four
+methods (robustness / stability: no collapse in the good-lr band)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+ALGOS = ["a3c", "n_step_q", "one_step_q", "one_step_sarsa"]
+
+
+def run(n_lrs: int = 5, frames: int = 20_000) -> list:
+    rng = np.random.RandomState(2)
+    lrs = np.exp(rng.uniform(np.log(1e-3), np.log(3e-2), n_lrs))
+    rows = []
+    for algo in ALGOS:
+        for lr in lrs:
+            env, st, round_fn, cfg = common.make_rl_runner(
+                algo, "catch", workers=8, lr=float(lr))
+            st, hist = common.run_frames(st, round_fn, cfg, frames)
+            rows.append({"bench": "fig10", "algo": algo,
+                         "lr": round(float(lr), 5),
+                         "final_ep_ret": round(hist[-1][1], 3)})
+    common.save_rows("fig10_lr", rows)
+    return rows

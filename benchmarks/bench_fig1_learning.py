@@ -1,0 +1,28 @@
+"""Fig. 1 analogue: learning-speed comparison of the four asynchronous
+methods (and DQN-replay) on the Catch (Atari-proxy) and GridMaze
+(Labyrinth-proxy) environments."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+ALGOS = ["a3c", "n_step_q", "one_step_q", "one_step_sarsa"]
+
+
+def run(frames: int = 40_000, envs=("catch",)) -> list:
+    rows = []
+    for env_name in envs:
+        for algo in ALGOS:
+            env, st, round_fn, cfg = common.make_rl_runner(
+                algo, env_name, workers=8, lr=1e-2)
+            t0 = time.time()
+            st, hist = common.run_frames(st, round_fn, cfg, frames,
+                                         trace_every=50)
+            rows.append({
+                "bench": "fig1", "env": env_name, "algo": algo,
+                "frames": frames, "final_ep_ret": hist[-1][1],
+                "curve": hist, "wall_s": round(time.time() - t0, 1),
+            })
+    common.save_rows("fig1_learning", rows)
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 3/4 analogue: continuous-action A3C (Gaussian heads) on the MuJoCo-
+proxy domains (pointmass2d, pendulum)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(frames: int = 30_000, envs=("pointmass", "pendulum")) -> list:
+    rows = []
+    for env_name in envs:
+        # tuned: lr 1e-3, differential-entropy coefficient 1e-2 (the
+        # paper's 1e-4 under-explores at our tiny frame budgets)
+        env, st, round_fn, cfg = common.make_rl_runner(
+            "a3c", env_name, workers=8, lr=1e-3, hidden=128)
+        st, hist = common.run_frames(st, round_fn, cfg, frames,
+                                     trace_every=100)
+        rows.append({"bench": "fig4", "env": env_name, "frames": frames,
+                     "final_ep_ret": round(hist[-1][1], 3),
+                     "curve": hist[-8:]})
+    common.save_rows("fig4_continuous", rows)
+    return rows

@@ -1,0 +1,36 @@
+"""Fig. 8 analogue: robustness of Momentum SGD vs RMSProp vs Shared RMSProp
+across learning rates and initializations (sorted final-score curves)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+SETUPS = [
+    ("momentum_sgd", False),
+    ("rmsprop", False),       # per-worker statistics
+    ("shared_rmsprop", True),
+]
+
+
+def run(n_trials: int = 6, frames: int = 25_000, algo: str = "a3c") -> list:
+    rng = np.random.RandomState(0)
+    lrs = np.exp(rng.uniform(np.log(1e-3), np.log(1e-1), n_trials))
+    rows = []
+    for opt, shared in SETUPS:
+        finals = []
+        for t in range(n_trials):
+            env, st, round_fn, cfg = common.make_rl_runner(
+                algo, "catch", workers=8, lr=float(lrs[t]), seed=t,
+                optimizer=opt, shared_stats=shared)
+            st, hist = common.run_frames(st, round_fn, cfg, frames)
+            finals.append(hist[-1][1])
+        finals.sort(reverse=True)
+        rows.append({
+            "bench": "fig8", "optimizer": opt, "shared_stats": shared,
+            "sorted_final_scores": [round(f, 3) for f in finals],
+            "mean": round(float(np.mean(finals)), 3),
+            "area_under_curve": round(float(np.sum(finals)), 3),
+        })
+    common.save_rows("fig8_optimizers", rows)
+    return rows

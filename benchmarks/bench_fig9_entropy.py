@@ -1,0 +1,23 @@
+"""Fig. 9 analogue: effect of the entropy-regularization coefficient."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(n_trials: int = 4, frames: int = 25_000) -> list:
+    rng = np.random.RandomState(1)
+    lrs = np.exp(rng.uniform(np.log(3e-3), np.log(3e-2), n_trials))
+    rows = []
+    for beta in (0.0, 0.01):
+        for t in range(n_trials):
+            env, st, round_fn, cfg = common.make_rl_runner(
+                "a3c", "gridmaze", workers=8, lr=float(lrs[t]), seed=t,
+                beta=beta)
+            st, hist = common.run_frames(st, round_fn, cfg, frames)
+            rows.append({"bench": "fig9", "beta": beta,
+                         "lr": round(float(lrs[t]), 5),
+                         "final_ep_ret": round(hist[-1][1], 3)})
+    common.save_rows("fig9_entropy", rows)
+    return rows

@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — indicative only) vs
+the jnp reference path; plus the blockwise flash vs naive attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def run() -> list:
+    key = jax.random.key(0)
+    rows = []
+    b, s, hq, hkv, d = 1, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+
+    ref_fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us_ref = common.timed(ref_fn, q, k, v, iters=3)
+    rows.append({"name": "attention_ref_jnp", "us_per_call": us_ref,
+                 "derived": f"s={s}"})
+    from repro.models.flash_jnp import flash_attention_jnp
+    fl_fn = jax.jit(lambda q, k, v: flash_attention_jnp(q, k, v, True,
+                                                        None, 256))
+    us_fl = common.timed(fl_fn, q, k, v, iters=3)
+    rows.append({"name": "attention_flash_jnp", "us_per_call": us_fl,
+                 "derived": f"vs_ref={us_ref/us_fl:.2f}x"})
+
+    # decode attention
+    kc = jax.random.normal(ks[1], (b, 4096, hkv, d))
+    vc = jax.random.normal(ks[2], (b, 4096, hkv, d))
+    pos = jnp.asarray(4095)
+    kpos = jnp.arange(4096)
+    qd = jax.random.normal(ks[0], (b, hq, d))
+    dec_ref = jax.jit(lambda q, k, v, kp, p: ref.decode_attention_ref(
+        q, k, v, kp, p))
+    us_dref = common.timed(dec_ref, qd, kc, vc, kpos, pos, iters=3)
+    rows.append({"name": "decode_ref_jnp", "us_per_call": us_dref,
+                 "derived": "L=4096"})
+
+    # fused rmsprop (jnp ref — the pallas path is interpret-mode on CPU)
+    g = jnp.abs(jax.random.normal(ks[0], (1024, 1024)))
+    dg = jax.random.normal(ks[1], (1024, 1024))
+    rms_ref = jax.jit(lambda g, d: ref.rmsprop_update_ref(g, d, lr=1e-3))
+    us_rms = common.timed(rms_ref, g, dg, iters=5)
+    rows.append({"name": "rmsprop_ref_jnp", "us_per_call": us_rms,
+                 "derived": "1M params"})
+    common.save_rows("kernels_micro", rows)
+    return rows

@@ -1,0 +1,48 @@
+"""Reduced-architecture train/serve step timings on CPU (per-step us and
+derived tokens/s) — one row per assigned architecture family."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+ARCHS = ["stablelm-1.6b", "granite-moe-1b-a400m", "zamba2-1.2b",
+         "xlstm-1.3b", "whisper-base", "qwen2-vl-72b"]
+
+
+def run(seq: int = 64, batch: int = 4) -> list:
+    from repro.configs import get_config
+    from repro.core import llm_a3c
+    from repro.data.pipeline import TokenPipeline
+    from repro.models import model as M
+    from repro.optim import optimizers as opt_mod
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = M.init_params(cfg, jax.random.key(0))
+        opt = opt_mod.shared_rmsprop()
+        opt_state = opt.init(params)
+        pipe = TokenPipeline(vocab=cfg.vocab_size, seq_len=seq,
+                             global_batch=batch)
+        batch_data = pipe.batch(jax.random.key(1))
+        if cfg.family == "vlm":
+            batch_data["embeds"] = jnp.zeros((batch, seq, cfg.d_model))
+            batch_data["positions"] = jnp.broadcast_to(
+                jnp.arange(seq)[None, None], (3, batch, seq)).astype(
+                jnp.int32)
+            batch_data["actions"] = batch_data.pop("tokens")
+        if cfg.is_encdec:
+            batch_data["enc_frames"] = jnp.zeros(
+                (batch, cfg.encoder_seq, cfg.d_model))
+        step = jax.jit(llm_a3c.make_train_step(cfg, opt))
+
+        def call(p, o, b):
+            return step(p, o, b, jnp.asarray(0))
+
+        us = common.timed(call, params, opt_state, batch_data, iters=3)
+        rows.append({"name": f"train_step_{arch}", "us_per_call": us,
+                     "derived": f"tok/s={1e6 * seq * batch / us:.0f}"})
+    common.save_rows("llm_train_micro", rows)
+    return rows

@@ -1,0 +1,37 @@
+"""Beyond-paper ablation (paper Conclusions §6): does mixing experience
+replay into the asynchronous framework improve data efficiency of the
+value-based methods?  Compares async n-step Q with replay_weight in
+{0.0 (paper-faithful), 0.5, 1.0} at equal frame budgets."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core import agents, replay_async
+from repro.envs import make
+from repro.envs.api import flatten_obs
+from repro.models import atari as nets
+
+
+def run(frames: int = 30_000, weights=(0.0, 0.5, 1.0)) -> list:
+    env = flatten_obs(make("catch"))
+    rows = []
+    for w in weights:
+        algo = agents.ALGORITHMS["n_step_q"]()
+        params = nets.init_mlp_agent_params(
+            jax.random.key(0), env.obs_shape[0], env.n_actions, hidden=64)
+        cfg = replay_async.ReplayAsyncConfig(
+            n_workers=8, t_max=5, lr0=1e-2, replay_weight=w)
+        init_state, round_fn = replay_async.make_replay_runner(
+            algo, env, params, cfg)
+        st = init_state(jax.random.key(1))
+        ema = None
+        rounds = frames // (cfg.n_workers * cfg.t_max)
+        for _ in range(rounds):
+            st, m = round_fn(st)
+            r = float(m["ep_ret"])
+            ema = r if ema is None else 0.98 * ema + 0.02 * r
+        rows.append({"bench": "replay_ablation", "replay_weight": w,
+                     "frames": frames, "final_ep_ret": round(ema, 3)})
+    common.save_rows("replay_ablation", rows)
+    return rows

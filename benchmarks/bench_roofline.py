@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+
+
+def load(path=None) -> list:
+    path = path or os.path.join(common.RESULTS_DIR, "dryrun.jsonl")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def table(recs) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dominant':>10s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"{r.get('status'):>9s} ({r.get('reason', '')[:40]})")
+            continue
+        t = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        lines.append(
+            f"{r['variant']:24s} {r['shape']:12s} "
+            f"{t['t_compute']:9.2e} {t['t_memory']:9.2e} "
+            f"{t['t_collective']:9.2e} {t['dominant']:>10s} "
+            f"{(f'{ur:7.2f}' if ur else '    n/a')}")
+    return "\n".join(lines)
+
+
+def run() -> list:
+    recs = load()
+    print(table(recs))
+    return recs

@@ -1,0 +1,32 @@
+"""The paper's central claim (§4, §6): parallel actor-learners have a
+STABILIZING effect — multi-worker async Q-learning avoids the collapse /
+divergence single-worker online Q-learning suffers.
+
+Protocol: async one-step Q with 1 vs 16 workers, several seeds at a hot
+learning rate; report per-seed final scores and the collapse rate (final
+score below the random baseline after training)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+RANDOM_BASELINE = -0.6   # catch random policy
+
+
+def run(frames: int = 40_000, seeds: int = 4, lr: float = 3e-2) -> list:
+    rows = []
+    for workers in (1, 16):
+        finals = []
+        for seed in range(seeds):
+            env, st, round_fn, cfg = common.make_rl_runner(
+                "one_step_q", "catch", workers=workers, lr=lr, seed=seed)
+            st, hist = common.run_frames(st, round_fn, cfg, frames)
+            finals.append(round(hist[-1][1], 3))
+        collapsed = sum(f < RANDOM_BASELINE + 0.05 for f in finals)
+        rows.append({"bench": "stability", "workers": workers,
+                     "lr": lr, "final_scores": finals,
+                     "mean": round(float(np.mean(finals)), 3),
+                     "collapse_rate": f"{collapsed}/{seeds}"})
+    common.save_rows("stability", rows)
+    return rows

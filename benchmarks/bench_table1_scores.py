@@ -1,0 +1,54 @@
+"""Table 1 analogue: A3C vs the DQN-with-replay baseline at equal frame
+budgets (the "parallel actors replace experience replay" headline claim)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+
+
+def run_dqn(env_name: str, frames: int, seed: int = 0) -> float:
+    from repro.core import dqn_replay
+    from repro.envs import make
+    from repro.envs.api import flatten_obs
+    from repro.models import atari as nets
+
+    env = make(env_name)
+    if len(env.obs_shape) > 1:
+        env = flatten_obs(env)
+    params = nets.init_mlp_agent_params(jax.random.key(seed),
+                                        env.obs_shape[0], env.n_actions,
+                                        hidden=64)
+    cfg = dqn_replay.DQNConfig(buffer_size=5_000, batch_size=32, lr=1e-3,
+                               warmup=500, train_every=4,
+                               target_interval=1_000)
+    init_state, step_fn = dqn_replay.make_dqn(env, params, cfg)
+    st = init_state(jax.random.key(seed + 1))
+    ema = None
+    for _ in range(frames):
+        st = step_fn(st)
+        r = float(st["last_ep_ret"])
+        ema = r if ema is None else 0.999 * ema + 0.001 * r
+    return ema
+
+
+def run(frames: int = 30_000, envs=("catch",)) -> list:
+    rows = []
+    for env_name in envs:
+        t0 = time.time()
+        env, st, round_fn, cfg = common.make_rl_runner(
+            "a3c", env_name, workers=8, lr=1e-2)
+        st, hist = common.run_frames(st, round_fn, cfg, frames)
+        rows.append({"bench": "table1", "env": env_name, "method": "a3c",
+                     "frames": frames, "score": round(hist[-1][1], 3),
+                     "wall_s": round(time.time() - t0, 1)})
+        t0 = time.time()
+        score = run_dqn(env_name, frames)
+        rows.append({"bench": "table1", "env": env_name,
+                     "method": "dqn_replay", "frames": frames,
+                     "score": round(score, 3),
+                     "wall_s": round(time.time() - t0, 1)})
+    common.save_rows("table1_scores", rows)
+    return rows

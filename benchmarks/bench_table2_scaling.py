@@ -1,0 +1,48 @@
+"""Table 2 analogue: data efficiency / training speed-up vs number of
+parallel actor-learners.
+
+On 1 physical CPU wall-clock speedup is meaningless, so we measure the
+paper's *data-efficiency* claim (Fig. 6): frames needed to reach a reference
+score with k in {1,2,4,8,16} workers.  The paper's speedup = (frames-to-score
+with 1 worker) / (frames-to-score with k), assuming constant per-worker
+throughput (their Table 2 folds in compute; ours isolates the data term)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+WORKER_COUNTS = (1, 2, 4, 8, 16)
+
+
+def frames_to_score(algo: str, workers: int, target: float,
+                    max_frames: int, seed: int = 0) -> int:
+    env, st, round_fn, cfg = common.make_rl_runner(
+        algo, "catch", workers=workers, lr=1e-2, seed=seed)
+    ema, n = None, 0
+    while n < max_frames:
+        st, m = round_fn(st)
+        n = int(st["frames"])
+        r = float(m["ep_ret"])
+        ema = r if ema is None else 0.98 * ema + 0.02 * r
+        if ema is not None and ema >= target:
+            return n
+    return max_frames
+
+
+def run(algos=("a3c", "one_step_q"), target: float = 0.5,
+        max_frames: int = 120_000) -> list:
+    rows = []
+    for algo in algos:
+        base = None
+        for k in WORKER_COUNTS:
+            f = frames_to_score(algo, k, target, max_frames)
+            if k == 1:
+                base = f
+            rows.append({
+                "bench": "table2", "algo": algo, "workers": k,
+                "frames_to_target": f,
+                "data_speedup": round(base / f, 2) if base else None,
+            })
+    common.save_rows("table2_scaling", rows)
+    return rows

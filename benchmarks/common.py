@@ -1,0 +1,86 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_rows(name: str, rows: List[Dict[str, Any]]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return 1e6 * ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The scaffold's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def make_rl_runner(algo_name: str, env_name: str, *, workers: int = 8,
+                   lr: float = 1e-2, hidden: int = 64, seed: int = 0,
+                   optimizer: str = "shared_rmsprop", shared_stats=True,
+                   mode: str = "hogwild", beta: float = 0.01,
+                   beta_continuous: float = 1e-2,
+                   continuous: bool = False):
+    from repro.core import agents, async_runner
+    from repro.envs import make
+    from repro.envs.api import flatten_obs
+    from repro.models import atari as nets
+
+    env = make(env_name)
+    if len(env.obs_shape) > 1:
+        env = flatten_obs(env)
+    kwargs = {}
+    if continuous or env.continuous:
+        kwargs["continuous"] = True
+        kwargs["beta_continuous"] = beta_continuous
+    if algo_name == "a3c":
+        kwargs["beta"] = beta
+    algo = agents.ALGORITHMS[algo_name](**kwargs)
+    params = nets.init_mlp_agent_params(
+        jax.random.key(seed), env.obs_shape[0], env.n_actions,
+        hidden=hidden, continuous=env.continuous)
+    cfg = async_runner.RunnerConfig(
+        n_workers=workers, t_max=5, lr0=lr, total_frames=10**9,
+        mode=mode, optimizer=optimizer, shared_stats=shared_stats,
+        target_interval=2_000, anneal_frames=20_000)
+    init_state, round_fn = async_runner.make_runner(algo, env, params, cfg)
+    return env, init_state(jax.random.key(seed + 1)), round_fn, cfg
+
+
+def run_frames(state, round_fn, cfg, frames: int, *, trace_every: int = 0):
+    """Advance the runner; returns (state, history of (frames, ep_ret))."""
+    rounds = max(1, frames // (cfg.n_workers * cfg.t_max))
+    hist = []
+    ema = None
+    for i in range(rounds):
+        state, m = round_fn(state)
+        r = float(m["ep_ret"])
+        ema = r if ema is None else 0.95 * ema + 0.05 * r
+        if trace_every and i % trace_every == 0:
+            hist.append((int(state["frames"]), ema))
+    hist.append((int(state["frames"]), ema))
+    return state, hist

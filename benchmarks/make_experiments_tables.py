@@ -1,0 +1,135 @@
+"""Regenerate the §Dry-run / §Roofline tables in EXPERIMENTS.md from
+benchmarks/results/dryrun*.jsonl.  Sections outside the AUTOGEN markers
+(§Perf iteration log, §Repro) are preserved.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "results")
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+BEGIN = "<!-- AUTOGEN:DRYRUN BEGIN -->"
+END = "<!-- AUTOGEN:DRYRUN END -->"
+
+
+def load(*names):
+    """Load one or more jsonl files; later files/records override earlier
+    ones for the same (arch, shape, mode) key."""
+    recs = {}
+    for name in names:
+        path = os.path.join(RESULTS, name)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    r = json.loads(line)
+                    recs[(r["arch"], r["shape"], r.get("mode", "sync"))] = r
+    return list(recs.values())
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "n/a"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | kind | compile_s | per-dev peak | "
+           "collective/dev | status |",
+           "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} |  |  |  |  | "
+                       f"{r['status']}: {r.get('reason', r.get('error',''))[:60]} |")
+            continue
+        mem = r["memory"]
+        peak = (mem.get("peak_bytes") or 0) + (mem.get("argument_bytes") or 0)
+        out.append(
+            f"| {r['variant']} | {r['shape']} | {r['kind']} | "
+            f"{r['t_compile_s']} | {fmt_bytes(peak)} | "
+            f"{fmt_bytes(r['collective_bytes']['total'])} | ok |")
+    return "\n".join(out)
+
+
+def roofline_table(recs):
+    out = ["| arch | shape | t_compute | t_memory | t_collective | "
+           "dominant | MODEL/HLO flops | one-line lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        lever = LEVERS.get((r["arch"], r["shape"]),
+                           LEVERS.get(r["shape"], ""))
+        out.append(
+            f"| {r['variant']} | {r['shape']} | {t['t_compute']:.2e} | "
+            f"{t['t_memory']:.2e} | {t['t_collective']:.2e} | "
+            f"**{t['dominant']}** | "
+            f"{(f'{ur:.2f}' if ur else 'n/a')} | {lever} |")
+    return "\n".join(out)
+
+
+LEVERS = {
+    "train_4k": "cut AR->RS conversions + param-gather reuse across remat",
+    "prefill_32k": "head-local attention already; overlap FSDP gathers",
+    "decode_32k": "context-parallel cache read is the floor; batch decode "
+                  "steps to amortize weight reads",
+    "long_500k": "ring/native state already sub-quadratic; shard state not "
+                 "sequence for SSM",
+}
+
+
+def main():
+    single = load("dryrun.jsonl")
+    multi = load("dryrun_multipod.jsonl")
+    opt = load("dryrun_optimized.jsonl", "dryrun_optimized2.jsonl",
+               "dryrun_optimized3.jsonl")
+
+    parts = [BEGIN, "", "## §Dry-run — single pod (16x16 = 256 chips)", "",
+             dryrun_table(single), ""]
+    if multi:
+        parts += ["## §Dry-run — multi-pod (2x16x16 = 512 chips)", "",
+                  dryrun_table(multi), ""]
+    parts += ["## §Roofline — per (arch x shape), single-pod baseline", "",
+              "Terms in seconds/step (hardware: 197 TFLOP/s bf16, 819 GB/s "
+              "HBM, 50 GB/s/link ICI).  MODEL/HLO = 6·N·D (or 2·N·D for "
+              "inference) over trip-count-weighted compiled dot FLOPs — "
+              "values < 1 expose remat/attention/capacity overhead; the "
+              "memory term uses the analytic per-device traffic model "
+              "(launch/traffic.py).", "",
+              roofline_table(single), ""]
+    if opt:
+        parts += ["## §Roofline — optimized variants (see §Perf)", "",
+                  roofline_table(opt), ""]
+    parts += [END]
+    block = "\n".join(parts)
+
+    if os.path.exists(EXP):
+        text = open(EXP).read()
+        if BEGIN in text and END in text:
+            pre = text.split(BEGIN)[0]
+            post = text.split(END)[1]
+            text = pre + block + post
+        else:
+            text = text + "\n" + block + "\n"
+    else:
+        text = block + "\n"
+    open(EXP, "w").write(text)
+    n_ok = sum(r["status"] == "ok" for r in single)
+    print(f"wrote {EXP}: {n_ok} ok single-pod records, "
+          f"{sum(r['status'] == 'ok' for r in multi)} multi-pod")
+
+
+if __name__ == "__main__":
+    main()

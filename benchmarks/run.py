@@ -1,0 +1,62 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the scaffold contract; rich
+records land in benchmarks/results/*.json.  Budgets here are CPU-smoke
+sized; pass --full for paper-scale budgets (hours).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (hours on 1 CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    mult = 8 if args.full else 1
+
+    from benchmarks import (bench_fig1_learning, bench_fig4_continuous,
+                            bench_fig8_optimizers, bench_fig9_entropy,
+                            bench_fig10_lr_robustness, bench_kernels,
+                            bench_llm_train, bench_replay_ablation,
+                            bench_roofline, bench_stability,
+                            bench_table1_scores, bench_table2_scaling)
+
+    benches = {
+        "kernels": lambda: bench_kernels.run(),
+        "llm_train": lambda: bench_llm_train.run(),
+        "fig1": lambda: bench_fig1_learning.run(frames=120_000 * mult),
+        "table1": lambda: bench_table1_scores.run(frames=100_000 * mult),
+        "table2": lambda: bench_table2_scaling.run(
+            max_frames=150_000 * mult),
+        "fig8": lambda: bench_fig8_optimizers.run(
+            n_trials=6 if not args.full else 18, frames=30_000 * mult),
+        "fig9": lambda: bench_fig9_entropy.run(frames=60_000 * mult),
+        "fig10": lambda: bench_fig10_lr_robustness.run(
+            frames=60_000 * mult),
+        "fig4": lambda: bench_fig4_continuous.run(frames=80_000 * mult),
+        "replay": lambda: bench_replay_ablation.run(frames=40_000 * mult),
+        "stability": lambda: bench_stability.run(frames=40_000 * mult),
+        "roofline": lambda: bench_roofline.run(),
+    }
+    only = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    for name in only:
+        t0 = time.time()
+        rows = benches[name]()
+        wall = time.time() - t0
+        for r in rows:
+            if "us_per_call" in r:
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        n = len(rows)
+        print(f"bench_{name},{1e6 * wall / max(n,1):.0f},rows={n}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""All four asynchronous methods (paper §4) on one environment — the Fig. 1
+learning-speed comparison at CPU scale, plus the DQN-replay baseline the
+paper positions against.
+
+  PYTHONPATH=src python examples/four_methods_shootout.py [frames]
+"""
+import sys
+
+import jax
+
+from repro.core import agents, async_runner, dqn_replay
+from repro.envs import make
+from repro.envs.api import flatten_obs
+from repro.models import atari as nets
+
+
+def run_async(algo_name, env, frames):
+    algo = agents.ALGORITHMS[algo_name]()
+    params = nets.init_mlp_agent_params(
+        jax.random.key(0), env.obs_shape[0], env.n_actions, hidden=64)
+    cfg = async_runner.RunnerConfig(n_workers=8, t_max=5, lr0=1e-2,
+                                    total_frames=10**9)
+    init_state, round_fn = async_runner.make_runner(algo, env, params, cfg)
+    st = init_state(jax.random.key(1))
+    ema = 0.0
+    while int(st["frames"]) < frames:
+        st, m = round_fn(st)
+        ema = 0.98 * ema + 0.02 * float(m["ep_ret"])
+    return ema
+
+
+def run_dqn(env, frames):
+    params = nets.init_mlp_agent_params(
+        jax.random.key(0), env.obs_shape[0], env.n_actions, hidden=64)
+    init_state, step_fn = dqn_replay.make_dqn(env, params,
+                                              dqn_replay.DQNConfig())
+    st = init_state(jax.random.key(1))
+    ema = 0.0
+    for _ in range(frames):
+        st = step_fn(st)
+        ema = 0.999 * ema + 0.001 * float(st["last_ep_ret"])
+    return ema
+
+
+def main():
+    frames = int(sys.argv[1]) if len(sys.argv) > 1 else 40_000
+    env = flatten_obs(make("catch"))
+    print(f"{'method':18s} score@{frames} frames")
+    for algo in ["a3c", "n_step_q", "one_step_q", "one_step_sarsa"]:
+        print(f"{algo:18s} {run_async(algo, env, frames):+.2f}")
+    print(f"{'dqn_replay':18s} {run_dqn(env, frames):+.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""The Labyrinth experiment (paper §5.2.4) at CPU scale: A3C on procedurally
+generated GridMaze — a new random maze every episode, apples (+1) and a
+portal (+10, respawn).  The agent must learn a *general* exploration
+strategy, not one maze's layout.
+
+  PYTHONPATH=src python examples/labyrinth_maze.py
+"""
+import jax
+
+from repro.core import agents, async_runner
+from repro.envs import make
+from repro.envs.api import flatten_obs
+from repro.models import atari as nets
+
+
+def main():
+    env = flatten_obs(make("gridmaze"))
+    algo = agents.ALGORITHMS["a3c"](beta=0.01)
+    params = nets.init_mlp_agent_params(
+        jax.random.key(0), env.obs_shape[0], env.n_actions, hidden=128)
+    cfg = async_runner.RunnerConfig(n_workers=8, t_max=5, lr0=7e-3,
+                                    total_frames=10**9)
+    init_state, round_fn = async_runner.make_runner(algo, env, params, cfg)
+    st = init_state(jax.random.key(1))
+    for i in range(5001):
+        st, m = round_fn(st)
+        if i % 500 == 0:
+            print(f"frames={int(st['frames']):6d}  "
+                  f"avg_episode_return={float(m['ep_ret']):6.1f}")
+
+
+if __name__ == "__main__":
+    main()

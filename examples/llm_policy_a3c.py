@@ -1,0 +1,47 @@
+"""A3C at LLM scale: the paper's algorithm driving an assigned-architecture
+backbone as a token-level policy (TokenMDP).  Uses the reduced Granite MoE
+config so the run (including the MoE router + load-balance loss) finishes
+in ~2 minutes on CPU.  The same train_step lowers on the 256-chip production
+mesh in the dry-run.
+
+  PYTHONPATH=src python examples/llm_policy_a3c.py [--arch stablelm-1.6b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import llm_a3c
+from repro.data.pipeline import TokenPipeline
+from repro.models import model as M
+from repro.optim import optimizers as opt_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    opt = opt_mod.shared_rmsprop()
+    opt_state = opt.init(params)
+    pipe = TokenPipeline(vocab=cfg.vocab_size, seq_len=64, global_batch=4)
+    step = jax.jit(llm_a3c.make_train_step(cfg, opt, lr0=3e-3,
+                                           total_steps=10**9))
+    for i in range(args.steps):
+        batch = pipe.batch(jax.random.key(7), i % 4)
+        params, opt_state, m = step(params, opt_state, batch,
+                                    jnp.asarray(i))
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss={float(m['loss']):8.3f}  "
+                  f"mean_return={float(m['mean_return']):6.2f}  "
+                  f"aux={float(m['aux']):.4f}")
+    print("\npolicy return should trend up as the policy learns the "
+          "successor-token task")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Minimal pytree checkpointing (npz) — replicated-safe: arrays are pulled
+to host with fully-addressable gather before save."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(x))
+              for i, x in enumerate(leaves)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, treedef=str(treedef), **arrays)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path, allow_pickle=False)
+    leaves, treedef = _flatten(like)
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for old, new in zip(leaves, new_leaves):
+        assert old.shape == new.shape, (old.shape, new.shape)
+    return jax.tree.unflatten(treedef, new_leaves)

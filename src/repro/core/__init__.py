@@ -1,0 +1,3 @@
+from repro.core.agents import ALGORITHMS  # noqa: F401
+from repro.core.async_runner import RunnerConfig, make_runner  # noqa: F401
+from repro.core.returns import n_step_returns, gae_advantages  # noqa: F401

@@ -1,0 +1,202 @@
+"""The four asynchronous algorithms (paper §4.1–4.4) as (act, loss) pairs.
+
+Each algorithm supplies:
+  act(params, obs, net_state, key, eps)          -> (action, net_state)
+  segment_loss(params, target_params, traj, ...) -> (scalar loss, metrics)
+
+``traj`` is one rollout segment of t_max steps collected by
+``repro.core.rollout``: obs (T+1,...) including the bootstrap state, actions
+(T,), rewards (T,), dones (T,) and the LSTM state at segment start (so the
+loss re-runs the recurrent trunk exactly as the actor saw it — the paper's
+forward-view BPTT).
+
+Networks are the paper's own (repro.models.atari); the same losses are reused
+at LLM scale by repro.core.llm_a3c.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exploration
+from repro.core.returns import gae_advantages, n_step_returns
+from repro.models import atari as nets
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    name: str
+    act: Callable
+    segment_loss: Callable
+    needs_target: bool
+    policy_based: bool
+
+
+def _forward(params, obs, net_state):
+    feats, net_state = nets.trunk(params, obs, net_state)
+    return feats, net_state
+
+
+def _forward_segment(params, obs_seq, net_state0):
+    """Run the trunk over a (T+1, B?, ...) obs sequence, threading LSTM
+    state; feedforward nets just vmap."""
+    if "lstm" in params:
+        def step(st, ob):
+            feats, st = nets.trunk(params, ob[None], st)
+            return st, feats[0]
+        _, feats = jax.lax.scan(step, net_state0, obs_seq)
+        return feats
+    feats, _ = nets.trunk(params, obs_seq, None)
+    return feats
+
+
+# ---------------------------------------------------------------------------
+# A3C (Alg. 3) — discrete and continuous
+# ---------------------------------------------------------------------------
+
+def make_a3c(*, gamma: float = 0.99, beta: float = 0.01,
+             value_coef: float = 0.5, continuous: bool = False,
+             beta_continuous: float = 1e-4,
+             gae_lambda: float = 0.0) -> Algorithm:
+    """gae_lambda > 0 enables GAE(lambda) advantages (Schulman et al.
+    2015b) — the upgrade the paper's Conclusions explicitly propose;
+    gae_lambda == 0 is the paper-faithful n-step advantage."""
+
+    def act(params, obs, net_state, key, eps):
+        feats, net_state = _forward(params, obs[None], net_state)
+        if continuous:
+            h = nets.gaussian_heads(params, feats)
+            a = h["mu"][0] + jnp.sqrt(h["sigma2"][0]) * \
+                jax.random.normal(key, h["mu"][0].shape)
+            return a, net_state
+        h = nets.actor_critic_heads(params, feats)
+        a = jax.random.categorical(key, h["logits"][0])
+        return a, net_state
+
+    def segment_loss(params, target_params, traj, **_):
+        del target_params
+        feats = _forward_segment(params, traj["obs"], traj.get("net_state"))
+        discounts = gamma * (1.0 - traj["dones"].astype(jnp.float32))
+        if continuous:
+            h = nets.gaussian_heads(params, feats)
+            values = h["value"]
+            bootstrap = jax.lax.stop_gradient(values[-1])
+            rets = n_step_returns(traj["rewards"], discounts, bootstrap)
+            adv = jax.lax.stop_gradient(rets - values[:-1])
+            mu, s2 = h["mu"][:-1], h["sigma2"][:-1]
+            logp = -0.5 * (jnp.sum((traj["actions"] - mu) ** 2, -1)
+                           / s2
+                           + mu.shape[-1] * (jnp.log(2 * jnp.pi * s2)))
+            entropy = 0.5 * (jnp.log(2 * jnp.pi * s2) + 1.0)
+            pol_loss = -jnp.mean(logp * adv)
+            ent_loss = -beta_continuous * jnp.mean(entropy)
+        else:
+            h = nets.actor_critic_heads(params, feats)
+            values = h["value"]
+            bootstrap = jax.lax.stop_gradient(values[-1])
+            if gae_lambda > 0:
+                adv, rets = gae_advantages(
+                    traj["rewards"], discounts,
+                    jax.lax.stop_gradient(values[:-1]), bootstrap,
+                    lam=gae_lambda)
+                adv = jax.lax.stop_gradient(adv)
+            else:
+                rets = n_step_returns(traj["rewards"], discounts, bootstrap)
+                adv = jax.lax.stop_gradient(rets - values[:-1])
+            logits = h["logits"][:-1]
+            logp_all = jax.nn.log_softmax(logits)
+            logp = jnp.take_along_axis(
+                logp_all, traj["actions"][:, None], axis=-1)[:, 0]
+            entropy = -jnp.sum(jnp.exp(logp_all) * logp_all, -1)
+            pol_loss = -jnp.mean(logp * adv)
+            ent_loss = -beta * jnp.mean(entropy)
+        v_loss = value_coef * jnp.mean((rets - values[:-1]) ** 2)
+        loss = pol_loss + v_loss + ent_loss
+        metrics = {"loss": loss, "pol": pol_loss, "value": v_loss,
+                   "entropy": -ent_loss, "mean_return": jnp.mean(rets)}
+        return loss, metrics
+
+    return Algorithm("a3c", act, segment_loss, needs_target=False,
+                     policy_based=True)
+
+
+# ---------------------------------------------------------------------------
+# value-based: one-step Q (Alg. 1), one-step Sarsa (Eq. 6), n-step Q (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def _q_act(params, obs, net_state, key, eps):
+    feats, net_state = _forward(params, obs[None], net_state)
+    q = nets.q_heads(params, feats)[0]
+    return exploration.eps_greedy(key, q, eps), net_state
+
+
+def make_one_step_q(*, gamma: float = 0.99) -> Algorithm:
+
+    def segment_loss(params, target_params, traj, **_):
+        feats = _forward_segment(params, traj["obs"], traj.get("net_state"))
+        q = nets.q_heads(params, feats)                      # (T+1, A)
+        feats_t = _forward_segment(target_params, traj["obs"],
+                                   traj.get("net_state"))
+        q_t = jax.lax.stop_gradient(nets.q_heads(target_params, feats_t))
+        not_done = 1.0 - traj["dones"].astype(jnp.float32)
+        y = traj["rewards"] + gamma * not_done * jnp.max(q_t[1:], -1)
+        qa = jnp.take_along_axis(q[:-1], traj["actions"][:, None], -1)[:, 0]
+        loss = jnp.mean((y - qa) ** 2)
+        return loss, {"loss": loss, "q_mean": jnp.mean(qa)}
+
+    return Algorithm("one_step_q", _q_act, segment_loss, needs_target=True,
+                     policy_based=False)
+
+
+def make_one_step_sarsa(*, gamma: float = 0.99) -> Algorithm:
+
+    def segment_loss(params, target_params, traj, **_):
+        feats = _forward_segment(params, traj["obs"], traj.get("net_state"))
+        q = nets.q_heads(params, feats)
+        feats_t = _forward_segment(target_params, traj["obs"],
+                                   traj.get("net_state"))
+        q_t = jax.lax.stop_gradient(nets.q_heads(target_params, feats_t))
+        not_done = 1.0 - traj["dones"].astype(jnp.float32)
+        # Sarsa target needs a' actually taken at s'; within a segment that is
+        # actions[i+1], so the last transition has no on-policy a' yet and is
+        # excluded (t_max-1 updates per segment — noted in DESIGN.md).
+        q_next_a = jnp.take_along_axis(q_t[1:-1], traj["actions"][1:, None],
+                                       -1)[:, 0]
+        y = traj["rewards"][:-1] + gamma * not_done[:-1] * q_next_a
+        qa = jnp.take_along_axis(q[:-2], traj["actions"][:-1, None], -1)[:, 0]
+        loss = jnp.mean((y - qa) ** 2)
+        return loss, {"loss": loss, "q_mean": jnp.mean(qa)}
+
+    return Algorithm("one_step_sarsa", _q_act, segment_loss,
+                     needs_target=True, policy_based=False)
+
+
+def make_n_step_q(*, gamma: float = 0.99) -> Algorithm:
+
+    def segment_loss(params, target_params, traj, **_):
+        feats = _forward_segment(params, traj["obs"], traj.get("net_state"))
+        q = nets.q_heads(params, feats)
+        feats_t = _forward_segment(target_params, traj["obs"],
+                                   traj.get("net_state"))
+        q_t = jax.lax.stop_gradient(nets.q_heads(target_params, feats_t))
+        discounts = gamma * (1.0 - traj["dones"].astype(jnp.float32))
+        bootstrap = jnp.max(q_t[-1], -1)
+        rets = n_step_returns(traj["rewards"], discounts, bootstrap)
+        qa = jnp.take_along_axis(q[:-1], traj["actions"][:, None], -1)[:, 0]
+        loss = jnp.mean((rets - qa) ** 2)
+        return loss, {"loss": loss, "q_mean": jnp.mean(qa),
+                      "mean_return": jnp.mean(rets)}
+
+    return Algorithm("n_step_q", _q_act, segment_loss, needs_target=True,
+                     policy_based=False)
+
+
+ALGORITHMS = {
+    "a3c": make_a3c,
+    "one_step_q": make_one_step_q,
+    "one_step_sarsa": make_one_step_sarsa,
+    "n_step_q": make_n_step_q,
+}

@@ -1,0 +1,186 @@
+"""Asynchronous actor-learner runner — the paper's core mechanism, adapted.
+
+Tier T1 ("hogwild"): K workers roll out in parallel from the same parameter
+snapshot, then their gradients are applied SEQUENTIALLY to the shared
+parameters — worker k's gradient lands on parameters that k-1 other updates
+have already moved.  This is the standard bounded-staleness model of
+Hogwild!: gradient staleness ∈ [0, K-1], exactly the effect the lock-free
+threads produce (modulo word-level tearing, which has no SPMD analogue).
+
+Tier T2 ("sync"): same rollouts, one averaged update (A2C — the synchronous
+limit of A3C; used as ablation).
+
+Shared vs per-worker optimizer statistics (paper §4.5 / Fig. 8): with
+``shared_stats=True`` one RMSProp accumulator g is threaded through the
+sequential scan (the paper's Shared RMSProp); otherwise each worker owns a g
+(stacked state, vmap-applied), reproducing the per-thread variant.
+
+Target networks for the value-based methods are swapped every
+``target_interval`` global frames (paper's I_target).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exploration
+from repro.core.agents import Algorithm
+from repro.core.rollout import init_worker, rollout_segment
+from repro.envs.api import Env
+from repro.optim import optimizers as opt_mod
+from repro.optim import schedules
+
+
+@dataclasses.dataclass(frozen=True)
+class RunnerConfig:
+    n_workers: int = 16
+    t_max: int = 5
+    lr0: float = 7e-4
+    total_frames: int = 200_000
+    target_interval: int = 2_000
+    anneal_frames: int = 50_000
+    mode: str = "hogwild"          # hogwild (T1) | sync (T2)
+    optimizer: str = "shared_rmsprop"
+    shared_stats: bool = True
+    max_grad_norm: float = 40.0
+    lr_schedule: str = "linear"
+
+
+def _clip_grads(grads, max_norm):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-8))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def make_runner(algo: Algorithm, env: Env, net_params, cfg: RunnerConfig,
+                *, net_state0=None):
+    """Returns (state0, round_fn) where round_fn is jit-compiled and advances
+    all workers by one t_max segment + applies their updates."""
+    opt = opt_mod.OPTIMIZERS[cfg.optimizer]()
+    sched = schedules.SCHEDULES[cfg.lr_schedule]
+
+    def init_state(key):
+        k_w, k_eps, k_rng = jax.random.split(key, 3)
+        workers = jax.vmap(lambda k: init_worker(
+            env, k, net_state0))(jax.random.split(k_w, cfg.n_workers))
+        if cfg.shared_stats:
+            opt_state = opt.init(net_params)
+        else:
+            opt_state = jax.vmap(lambda _: opt.init(net_params))(
+                jnp.arange(cfg.n_workers))
+        return {
+            "params": net_params,
+            "target_params": net_params,
+            "opt_state": opt_state,
+            "workers": workers,
+            "eps_final": exploration.sample_eps_final(k_eps, cfg.n_workers),
+            "frames": jnp.zeros((), jnp.int32),
+            "last_target_sync": jnp.zeros((), jnp.int32),
+            "rng": k_rng,
+        }
+
+    def worker_segment(params, target_params, worker, eps_final, frames):
+        eps = exploration.eps_at(eps_final, frames, cfg.anneal_frames)
+
+        def act_fn(obs, net_state, key):
+            return algo.act(params, obs, net_state, key, eps)
+
+        new_worker, traj = rollout_segment(act_fn, env, worker, cfg.t_max)
+
+        def loss_fn(p):
+            loss, metrics = algo.segment_loss(p, target_params, traj)
+            return loss, metrics
+
+        grads, metrics = jax.grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = _clip_grads(grads, cfg.max_grad_norm)
+        metrics["grad_norm"] = gnorm
+        metrics["ep_ret"] = new_worker["last_ep_ret"]
+        return grads, new_worker, metrics
+
+    def round_fn(state):
+        params = state["params"]
+        lr = sched(cfg.lr0, state["frames"].astype(jnp.float32),
+                   float(cfg.total_frames))
+        grads, workers, metrics = jax.vmap(
+            worker_segment, in_axes=(None, None, 0, 0, None))(
+                params, state["target_params"], state["workers"],
+                state["eps_final"], state["frames"])
+
+        if cfg.mode == "sync":
+            g_mean = jax.tree.map(lambda g: jnp.mean(g, 0), grads)
+            opt_state = state["opt_state"]
+            if not cfg.shared_stats:
+                opt_state = jax.tree.map(lambda s: s[0], opt_state)
+            updates, opt_state = opt.update(g_mean, opt_state, lr)
+            params = opt_mod.apply_updates(params, updates)
+            if not cfg.shared_stats:
+                opt_state = jax.tree.map(
+                    lambda s: jnp.broadcast_to(s, (cfg.n_workers,) + s.shape),
+                    opt_state)
+        elif cfg.mode == "hogwild":
+            if cfg.shared_stats:
+                def apply_one(carry, g_w):
+                    p, ost = carry
+                    updates, ost = opt.update(g_w, ost, lr)
+                    return (opt_mod.apply_updates(p, updates), ost), None
+
+                (params, opt_state), _ = jax.lax.scan(
+                    apply_one, (params, state["opt_state"]), grads)
+            else:
+                def apply_one(p, inp):
+                    g_w, ost_w = inp
+                    updates, ost_w = opt.update(g_w, ost_w, lr)
+                    return opt_mod.apply_updates(p, updates), ost_w
+
+                params, opt_state = jax.lax.scan(
+                    apply_one, params, (grads, state["opt_state"]))
+        else:
+            raise ValueError(cfg.mode)
+
+        frames = state["frames"] + cfg.n_workers * cfg.t_max
+        # target network swap every target_interval frames
+        do_swap = (frames - state["last_target_sync"]) >= cfg.target_interval
+        target = jax.tree.map(
+            lambda t, p: jnp.where(do_swap, p, t),
+            state["target_params"], params) if algo.needs_target \
+            else state["target_params"]
+        new_state = dict(state, params=params, opt_state=opt_state,
+                         workers=workers, frames=frames,
+                         target_params=target,
+                         last_target_sync=jnp.where(
+                             do_swap, frames, state["last_target_sync"]))
+        mean_metrics = {k: jnp.mean(v) for k, v in metrics.items()}
+        return new_state, mean_metrics
+
+    return init_state, jax.jit(round_fn)
+
+
+def evaluate(algo: Algorithm, env: Env, params, key, *, n_episodes: int = 8,
+             max_steps: int = 1000, net_state0=None) -> jnp.ndarray:
+    """Greedy/near-greedy evaluation: mean undiscounted episode return."""
+
+    def one_episode(k):
+        k_env, k_steps = jax.random.split(k)
+        env_state, obs = env.reset(k_env)
+
+        def step(carry, k_t):
+            env_state, obs, net_state, ret, done_seen = carry
+            k_a, k_e = jax.random.split(k_t)
+            action, net_state = algo.act(params, obs, net_state, k_a,
+                                         jnp.asarray(0.01))
+            env_state, obs, reward, done = env.step(env_state, action, k_e)
+            ret = ret + reward * (1.0 - done_seen)
+            done_seen = jnp.maximum(done_seen, done.astype(jnp.float32))
+            return (env_state, obs, net_state, ret, done_seen), None
+
+        init = (env_state, obs, net_state0, jnp.zeros(()), jnp.zeros(()))
+        carry, _ = jax.lax.scan(step, init,
+                                jax.random.split(k_steps, max_steps))
+        return carry[3]
+
+    rets = jax.vmap(one_episode)(jax.random.split(key, n_episodes))
+    return jnp.mean(rets)

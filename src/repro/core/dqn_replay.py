@@ -1,0 +1,114 @@
+"""DQN with experience replay — the paper's comparison baseline (§3.2).
+
+Uniform replay buffer + target network, per Mnih et al. 2015, so the
+"parallel actors replace replay" ablation (Table 1 / Fig. 1 analogue) can be
+run: same network, same environment, replay instead of parallel
+actor-learners.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exploration
+from repro.envs.api import Env
+from repro.models import atari as nets
+from repro.optim import optimizers as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    buffer_size: int = 10_000
+    batch_size: int = 32
+    lr: float = 1e-3
+    gamma: float = 0.99
+    target_interval: int = 1_000
+    train_every: int = 4
+    warmup: int = 500
+    eps_final: float = 0.05
+    anneal_frames: int = 20_000
+
+
+def make_dqn(env: Env, params, cfg: DQNConfig):
+    opt = opt_mod.shared_rmsprop()
+    obs_shape = env.obs_shape
+
+    def init_state(key):
+        k_env, k_rng = jax.random.split(key)
+        env_state, obs = env.reset(k_env)
+        buf = {
+            "obs": jnp.zeros((cfg.buffer_size,) + obs_shape),
+            "next_obs": jnp.zeros((cfg.buffer_size,) + obs_shape),
+            "actions": jnp.zeros((cfg.buffer_size,), jnp.int32),
+            "rewards": jnp.zeros((cfg.buffer_size,)),
+            "dones": jnp.zeros((cfg.buffer_size,), bool),
+        }
+        return {"params": params, "target_params": params,
+                "opt_state": opt.init(params), "buffer": buf,
+                "ptr": jnp.zeros((), jnp.int32),
+                "filled": jnp.zeros((), jnp.int32),
+                "env_state": env_state, "obs": obs,
+                "frames": jnp.zeros((), jnp.int32), "rng": k_rng,
+                "ep_ret": jnp.zeros(()), "last_ep_ret": jnp.zeros(())}
+
+    def _loss(p, tp, batch):
+        feats, _ = nets.trunk(p, batch["obs"], None)
+        q = nets.q_heads(p, feats)
+        feats_t, _ = nets.trunk(tp, batch["next_obs"], None)
+        q_t = jax.lax.stop_gradient(nets.q_heads(tp, feats_t))
+        not_done = 1.0 - batch["dones"].astype(jnp.float32)
+        y = batch["rewards"] + cfg.gamma * not_done * jnp.max(q_t, -1)
+        qa = jnp.take_along_axis(q, batch["actions"][:, None], -1)[:, 0]
+        return jnp.mean((y - qa) ** 2)
+
+    @jax.jit
+    def step_fn(state):
+        rng, k_act, k_env, k_sample = jax.random.split(state["rng"], 4)
+        eps = exploration.eps_at(jnp.asarray(cfg.eps_final), state["frames"],
+                                 cfg.anneal_frames)
+        feats, _ = nets.trunk(state["params"], state["obs"][None], None)
+        q = nets.q_heads(state["params"], feats)[0]
+        action = exploration.eps_greedy(k_act, q, eps)
+        env_state, obs, reward, done = env.step(state["env_state"], action,
+                                                k_env)
+        ptr = state["ptr"] % cfg.buffer_size
+        buf = state["buffer"]
+        buf = {
+            "obs": buf["obs"].at[ptr].set(state["obs"]),
+            "next_obs": buf["next_obs"].at[ptr].set(obs),
+            "actions": buf["actions"].at[ptr].set(action),
+            "rewards": buf["rewards"].at[ptr].set(reward),
+            "dones": buf["dones"].at[ptr].set(done),
+        }
+        filled = jnp.minimum(state["filled"] + 1, cfg.buffer_size)
+        frames = state["frames"] + 1
+
+        def do_train(p, ost):
+            idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, filled)
+            mb = jax.tree.map(lambda a: a[idx], buf)
+            grads = jax.grad(_loss)(p, state["target_params"], mb)
+            updates, ost = opt.update(grads, ost, cfg.lr)
+            return opt_mod.apply_updates(p, updates), ost
+
+        train = (frames % cfg.train_every == 0) & (frames >= cfg.warmup)
+        p2, ost2 = do_train(state["params"], state["opt_state"])
+        params_n = jax.tree.map(lambda a, b: jnp.where(train, b, a),
+                                state["params"], p2)
+        ost_n = jax.tree.map(lambda a, b: jnp.where(train, b, a),
+                             state["opt_state"], ost2)
+        swap = frames % cfg.target_interval == 0
+        target_n = jax.tree.map(lambda t, p: jnp.where(swap, p, t),
+                                state["target_params"], params_n)
+        ep_ret = state["ep_ret"] + reward
+        return dict(state, params=params_n, opt_state=ost_n, buffer=buf,
+                    ptr=state["ptr"] + 1, filled=filled, env_state=env_state,
+                    obs=obs, frames=frames, rng=rng,
+                    target_params=target_n,
+                    ep_ret=jnp.where(done, 0.0, ep_ret),
+                    last_ep_ret=jnp.where(done, ep_ret,
+                                          state["last_ep_ret"]))
+
+    return init_state, step_fn

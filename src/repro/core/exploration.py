@@ -1,0 +1,35 @@
+"""Per-worker exploration policies (paper §4.1, §5.1).
+
+The value-based methods use ε-greedy where each worker's *final* ε is sampled
+from {0.1, 0.01, 0.5} with probabilities {0.4, 0.3, 0.3} and ε is annealed
+from 1.0 to that value over the first ``anneal_frames`` frames.  Keeping the
+per-worker diversity is the paper's stated stabilization mechanism — it is
+preserved verbatim here (one ε stream per actor-learner group).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS_FINALS = jnp.array([0.1, 0.01, 0.5])
+EPS_PROBS = jnp.array([0.4, 0.3, 0.3])
+
+
+def sample_eps_final(key, n_workers: int) -> jnp.ndarray:
+    idx = jax.random.choice(key, 3, (n_workers,), p=EPS_PROBS)
+    return EPS_FINALS[idx]
+
+
+def eps_at(eps_final: jnp.ndarray, frame: jnp.ndarray,
+           anneal_frames: int = 100_000) -> jnp.ndarray:
+    frac = jnp.clip(frame / anneal_frames, 0.0, 1.0)
+    return 1.0 + frac * (eps_final - 1.0)
+
+
+def eps_greedy(key, q_values: jnp.ndarray, eps) -> jnp.ndarray:
+    """q_values (..., A) -> actions (...,)."""
+    k1, k2 = jax.random.split(key)
+    greedy = jnp.argmax(q_values, axis=-1)
+    rand = jax.random.randint(k1, greedy.shape, 0, q_values.shape[-1])
+    explore = jax.random.uniform(k2, greedy.shape) < eps
+    return jnp.where(explore, rand, greedy)

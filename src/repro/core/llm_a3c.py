@@ -1,0 +1,108 @@
+"""A3C at LLM scale: the paper's Alg. 3 loss applied to a token-level MDP.
+
+State s_t = token prefix, action a_t = tokens[t+1], policy = LM head softmax,
+critic = value head.  The n-step return recursion runs over the sequence
+axis — every position gets the "longest possible" forward-view return exactly
+as in the paper, with the final position's value as bootstrap.
+
+This is the ``train_step`` that the multi-pod dry-run lowers for every
+assigned architecture: the actor-learner groups live on the ``data`` mesh
+axis, tensor parallelism on ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.returns import n_step_returns
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def a3c_token_loss(cfg: ModelConfig, params, batch: Dict[str, Any], *,
+                   gamma: float = 0.99, beta: float = 0.01,
+                   value_coef: float = 0.5, backend: str = "jnp"):
+    """batch: tokens (B,S) [or embeds/enc_frames per family], rewards (B,S),
+    discounts (B,S) = gamma * (1 - done).  Position t's reward is for the
+    transition prefix[:t] --tokens[t+1]--> prefix[:t+1]."""
+    out = M.forward(cfg, params, batch, backend=backend)
+    logits = out["logits"].astype(jnp.float32)        # (B, S, V)
+    values = out["value"]                             # (B, S)
+
+    if "actions" in batch:
+        actions = batch["actions"]                    # (B, S) explicit
+    else:
+        actions = jnp.roll(batch["tokens"], -1, axis=1)
+    rewards = batch["rewards"]
+    discounts = batch["discounts"]
+
+    # returns over the sequence axis (time-major for the scan)
+    bootstrap = jax.lax.stop_gradient(values[:, -1])
+    rets = n_step_returns(jnp.moveaxis(rewards, 1, 0),
+                          jnp.moveaxis(discounts, 1, 0),
+                          bootstrap)
+    rets = jnp.moveaxis(rets, 0, 1)                   # (B, S)
+
+    valid = jnp.ones_like(rewards).at[:, -1].set(0.0)  # last pos: no action
+    nvalid = jnp.maximum(valid.sum(), 1.0)
+    adv = jax.lax.stop_gradient(rets - values)
+
+    logp_all = jax.nn.log_softmax(logits)
+    logp_a = jnp.take_along_axis(logp_all, actions[..., None], -1)[..., 0]
+    entropy = -jnp.sum(jnp.exp(logp_all) * logp_all, -1)
+
+    pol_loss = -jnp.sum(logp_a * adv * valid) / nvalid
+    v_loss = value_coef * jnp.sum((rets - values) ** 2 * valid) / nvalid
+    ent_loss = -beta * jnp.sum(entropy * valid) / nvalid
+    aux = cfg.aux_loss_weight * out.get("aux_loss", 0.0)
+    loss = pol_loss + v_loss + ent_loss + aux
+    metrics = {"loss": loss, "pol": pol_loss, "value": v_loss,
+               "entropy": -ent_loss / max(beta, 1e-9), "aux": aux,
+               "mean_return": jnp.sum(rets * valid) / nvalid}
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
+                    beta: float = 0.01, lr0: float = 7e-4,
+                    total_steps: int = 100_000, backend: str = "jnp"):
+    """Synchronous (T2) data-parallel train step — the A2C limit of A3C.
+    Under pjit the cross-group gradient reduction is the all-reduce the
+    compiler inserts for the data axis."""
+    from repro.optim import optimizers as opt_mod
+    from repro.optim import schedules
+
+    def train_step(params, opt_state, batch, step):
+        lr = schedules.linear_anneal(lr0, step.astype(jnp.float32),
+                                     float(total_steps))
+        grads, metrics = jax.grad(
+            lambda p: a3c_token_loss(cfg, p, batch, gamma=gamma, beta=beta,
+                                     backend=backend),
+            has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, lr)
+        params = opt_mod.apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, backend: str = "jnp",
+                    sample: bool = True):
+    """One-token decode step for the actor/serving path (decode shapes).
+    Returns (token (B,), value (B,), cache)."""
+
+    def serve_step(params, cache, batch, pos, seed):
+        out, cache = M.decode_step(cfg, params, cache, batch, pos,
+                                   backend=backend)
+        logits = out["logits"][:, -1].astype(jnp.float32)
+        if sample:
+            key = jax.random.key(seed)
+            token = jax.random.categorical(key, logits, axis=-1)
+        else:
+            token = jnp.argmax(logits, axis=-1)
+        value = out["value"][:, -1] if "value" in out else \
+            jnp.zeros(logits.shape[0])
+        return token, value, cache
+
+    return serve_step

@@ -1,0 +1,70 @@
+"""Forward-view n-step returns (paper §4.3/4.4) and advantage estimators.
+
+The paper computes, for a rollout segment of up to t_max steps, the "longest
+possible n-step return" for every state in the segment:
+
+    R_i = r_i + γ r_{i+1} + ... + γ^{t-i} R_bootstrap        (Alg. 2/3)
+
+implemented as the reverse recursion R <- r_i + γ R seeded with the bootstrap
+value (0 at terminal, V(s_t) or max_a Q(s_t,a) otherwise).  ``discounts``
+carries γ * (1 - done) per step so episode boundaries inside a segment
+truncate the recursion exactly as the pseudocode's terminal check does.
+
+Also provides GAE(λ) (Schulman et al. 2015b) — the paper's Conclusions
+explicitly name it as the natural advantage-estimator upgrade; we ship it as
+a beyond-paper option.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def n_step_returns(rewards: jnp.ndarray, discounts: jnp.ndarray,
+                   bootstrap: jnp.ndarray) -> jnp.ndarray:
+    """rewards, discounts: (T, ...); bootstrap: (...)  -> returns (T, ...).
+
+    returns[i] = rewards[i] + discounts[i] * returns[i+1], seeded with
+    returns[T] = bootstrap.  Time is axis 0 (scan axis).
+    """
+    def body(carry, x):
+        r, d = x
+        carry = r + d * carry
+        return carry, carry
+
+    _, rets = jax.lax.scan(body, bootstrap, (rewards, discounts),
+                           reverse=True)
+    return rets
+
+
+def n_step_returns_ref(rewards, discounts, bootstrap):
+    """O(T^2) python oracle used by property tests."""
+    t = rewards.shape[0]
+    out = []
+    for i in range(t):
+        acc = bootstrap
+        for j in range(t - 1, i - 1, -1):
+            acc = rewards[j] + discounts[j] * acc
+        out.append(acc)
+    return jnp.stack(out)
+
+
+def gae_advantages(rewards: jnp.ndarray, discounts: jnp.ndarray,
+                   values: jnp.ndarray, bootstrap: jnp.ndarray,
+                   *, lam: float = 0.95):
+    """Generalized advantage estimation (beyond-paper option).
+
+    values: (T, ...) V(s_i) for the segment; bootstrap: V(s_T).
+    Returns (advantages (T, ...), returns = adv + values).
+    """
+    next_values = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    deltas = rewards + discounts * next_values - values
+
+    def body(carry, x):
+        delta, d = x
+        carry = delta + lam * d * carry
+        return carry, carry
+
+    _, adv = jax.lax.scan(body, jnp.zeros_like(bootstrap), (deltas, discounts),
+                          reverse=True)
+    return adv, adv + values

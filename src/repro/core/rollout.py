@@ -1,0 +1,66 @@
+"""Rollout collection: one t_max-step segment per actor-learner (paper Alg.
+2/3 inner loop), as a ``lax.scan`` so it vmaps across workers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env
+
+
+def init_worker(env: Env, key, net_state0=None) -> Dict[str, Any]:
+    k_env, k_rng = jax.random.split(key)
+    env_state, obs = env.reset(k_env)
+    w = {
+        "env_state": env_state,
+        "obs": obs,
+        "rng": k_rng,
+        "frame": jnp.zeros((), jnp.int32),
+        "ep_ret": jnp.zeros(()),
+        "last_ep_ret": jnp.zeros(()),
+    }
+    if net_state0 is not None:
+        w["net_state"] = net_state0
+    return w
+
+
+def rollout_segment(act_fn: Callable, env: Env, worker: Dict[str, Any],
+                    t_max: int):
+    """act_fn(obs, net_state, key) -> (action, net_state).
+
+    Returns (new_worker, traj) with traj["obs"] of length T+1 (bootstrap
+    state included) and traj["net_state"] = the segment-start LSTM state.
+    """
+    has_net_state = "net_state" in worker
+    net_state0 = worker.get("net_state")
+
+    def step(c, _):
+        rng, k_act, k_env = jax.random.split(c["rng"], 3)
+        action, net_state = act_fn(c["obs"], c.get("net_state"), k_act)
+        env_state, obs, reward, done = env.step(c["env_state"], action,
+                                                k_env)
+        ep_ret = c["ep_ret"] + reward
+        c2 = dict(c, env_state=env_state, obs=obs, rng=rng,
+                  frame=c["frame"] + 1,
+                  ep_ret=jnp.where(done, 0.0, ep_ret),
+                  last_ep_ret=jnp.where(done, ep_ret, c["last_ep_ret"]))
+        if has_net_state:
+            # recurrent agents: reset LSTM state at episode boundaries
+            c2["net_state"] = jax.tree.map(
+                lambda a: jnp.where(done, jnp.zeros_like(a), a), net_state)
+        return c2, (c["obs"], action, reward, done)
+
+    final, (obs_seq, actions, rewards, dones) = jax.lax.scan(
+        step, worker, None, length=t_max)
+    traj = {
+        "obs": jnp.concatenate([obs_seq, final["obs"][None]], axis=0),
+        "actions": actions,
+        "rewards": rewards,
+        "dones": dones,
+    }
+    if has_net_state:
+        traj["net_state"] = net_state0
+    return final, traj

@@ -1,0 +1,46 @@
+"""Synthetic token data pipeline with per-worker seeding.
+
+Produces the batched TokenMDP training inputs (tokens, rewards, discounts)
+used by the LLM-scale A3C train path.  Each actor-learner group gets an
+independent stream (per-worker seeds — the paper's exploration-diversity
+principle applied to data order).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.token_mdp import TokenMDP
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    gamma: float = 0.99
+    episode_len: int = 0   # 0 = one episode per sequence
+
+    def batch(self, key, step: int = 0):
+        """Sample one training batch.  Sequences are behaviour rollouts of a
+        noisy successor policy so rewards are informative but imperfect."""
+        k1, k2 = jax.random.split(jax.random.fold_in(key, step))
+        first = jax.random.randint(k1, (self.global_batch, 1), 0, self.vocab)
+        noise = jax.random.bernoulli(k2, 0.3,
+                                     (self.global_batch, self.seq_len))
+        rand = jax.random.randint(jax.random.fold_in(k2, 1),
+                                  (self.global_batch, self.seq_len), 0,
+                                  self.vocab)
+        steps = jnp.arange(self.seq_len)[None]
+        succ = (first + steps) % self.vocab
+        tokens = jnp.where(noise, rand, succ).astype(jnp.int32)
+
+        mdp = TokenMDP(self.vocab, self.seq_len, self.seq_len)
+        rewards = mdp.reward_for_sequence(tokens)
+        ep = self.episode_len or self.seq_len
+        done = ((steps + 1) % ep == 0).astype(jnp.float32)
+        done = jnp.broadcast_to(done, rewards.shape)
+        discounts = self.gamma * (1.0 - done)
+        return {"tokens": tokens, "rewards": rewards, "discounts": discounts}

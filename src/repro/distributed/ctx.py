@@ -1,0 +1,37 @@
+"""Sharding context: lets mesh-agnostic model code request activation
+sharding constraints that only take effect when the launcher has installed a
+rule set (no-ops on single-device CPU runs, so tests/benches are unaffected).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, jax.sharding.PartitionSpec]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Dict[str, jax.sharding.PartitionSpec]):
+    """rules: logical-name -> PartitionSpec (e.g. "residual", "expert_buffer").
+    Installed by the launcher around trace/lower time."""
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, name: str):
+    """Apply the named activation constraint if a rule set is installed."""
+    rules = current_rules()
+    if rules is None or name not in rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules[name])

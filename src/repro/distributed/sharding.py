@@ -1,0 +1,283 @@
+"""Sharding rules for the production mesh.
+
+Mesh axes:
+  pod    — outer replica groups (multi-pod only; delayed-sync merge axis)
+  data   — actor-learner groups (the paper's "threads"); batch + FSDP axis
+  model  — tensor parallelism: heads / d_ff / vocab / experts / SSM heads
+
+Parameter layout is 2-D sharded (FSDP x TP), MaxText-style: the contracting
+d_model dim of every big matrix lives on ``data``, the parallel dim (heads,
+ffn, vocab, experts) on ``model``.  Caches for decode are context-parallel:
+the sequence dim of KV caches is sharded (over ``model``, and additionally
+over ``data`` when the batch is too small to use it).
+
+All rules are name-based on the pytree path, with a leading ``None`` added
+automatically for stacked (scanned) layers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding
+# ---------------------------------------------------------------------------
+
+# (regex on path, spec for the UNSTACKED param). "F" = fsdp/data axis,
+# "M" = model axis; resolved per-mesh.
+_PARAM_RULES = [
+    (r"embed/table$",              ("M", "F")),
+    (r"lm_head/w$",                ("F", "M")),
+    (r"value_head/w$",             ("F", None)),
+    (r"(wq|wk|wv|up_x|up_z|w_in|ff_gate|ff_up)/w$", ("F", "M")),
+    (r"(wo|down|ff_down|out_proj)/w$",              ("M", "F")),
+    (r"(gate|up)/w$",              ("F", "M")),
+    (r"(mlp/fc1|fc1)/w$",          ("F", "M")),
+    (r"(mlp/fc2|fc2)/w$",          ("M", "F")),
+    (r"in_proj/w$",                ("F", "M")),
+    (r"(wq|wk|wv)/b$",             ("M",)),
+    (r"(gate|up|fc1)/b$",          ("M",)),
+    (r"router$",                   ("F", None)),
+    # expert weights: EP over model only (shard_map all-to-all dispatch
+    # owns them per-device; replicating over data costs ~MBs and removes a
+    # per-layer gather — perf iter #4)
+    (r"w_(gate|up)$",              ("M", None, None)),  # (E, d, f)
+    (r"w_down$",                   ("M", None, None)),  # (E, f, d)
+    (r"conv_w$",                   (None, "M")),
+    (r"conv_b$",                   ("M",)),
+    (r"(A_log|D|dt_bias)$",        ("M",)),
+    (r"(mamba|mlstm)/norm/scale$", ("M",)),
+    (r"w_[if]/w$",                 ("F", None)),
+    # sLSTM recurrent weights: sharded (iter #9 measured the alternative —
+    # replicating them moves the per-step collective from a 1 MB activation
+    # psum to a 16.8 MB gradient-accumulator psum, 2x worse; the real fix
+    # is a shard_map'd recurrence with deferred dr reduction, future work)
+    (r"slstm/r$",                  (None, "F", "M")),   # (H, hd, 4hd)
+]
+
+
+def _resolve(spec_tpl, mesh: Mesh, *, fsdp: bool = True):
+    d_ax = data_axes(mesh)
+    out = []
+    for s in spec_tpl:
+        if s == "M":
+            out.append("model")
+        elif s == "F":
+            out.append(d_ax if (fsdp and d_ax) else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_spec(path_str: str, leaf, mesh: Mesh, *, stacked: bool,
+               fsdp: bool = True) -> P:
+    for pat, tpl in _PARAM_RULES:
+        if re.search(pat, path_str):
+            spec = _resolve(tpl, mesh, fsdp=fsdp)
+            if len(spec) > leaf.ndim:
+                return P()  # degenerate (smoke-size) leaf: replicate
+            if stacked and leaf.ndim == len(spec) + 1:
+                return P(*((None,) + tuple(spec)))
+            return spec
+    return P()  # norms, small biases, scalars: replicated
+
+
+def _divisible(leaf, spec: P, mesh: Mesh) -> bool:
+    for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size != 0:
+            return False
+    return True
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree,
+                    *, fsdp: bool = True):
+    """params_tree: pytree of ShapeDtypeStruct (or arrays)."""
+    from repro.models import model as M
+    stacked = M._use_scan(cfg)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        is_stacked = stacked and ps.startswith("layers")
+        spec = param_spec(ps, leaf, mesh, stacked=is_stacked, fsdp=fsdp)
+        if not _divisible(leaf, spec, mesh):
+            # drop offending axes rather than fail (e.g. 4-head xLSTM)
+            new = []
+            for dim, ax in zip(leaf.shape,
+                               tuple(spec) + (None,) * leaf.ndim):
+                if ax is None:
+                    new.append(None)
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                new.append(ax if dim % size == 0 else None)
+            spec = P(*new)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch and cache sharding
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_tree, *, batch_size: int):
+    """Shard the leading batch dim over the data axes (when divisible)."""
+    d_ax = data_axes(mesh)
+    dp_size = 1
+    for a in d_ax:
+        dp_size *= mesh.shape[a]
+    dp: Any = d_ax if (d_ax and batch_size % dp_size == 0) else None
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("positions"):               # (3, B, S)
+            return NamedSharding(mesh, P(None, dp, None))
+        return NamedSharding(mesh, P(*((dp,) + (None,) * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
+                    *, batch_size: int):
+    """Context-parallel decode caches.
+
+    KV caches (B, L, Hkv, hd): seq dim over 'model'; batch over data axes
+    when divisible, otherwise the seq dim additionally takes the data axes
+    (batch=1 long-context decode -> full-mesh context parallelism).
+    SSM/LSTM states: shard the head/state dims over 'model' when divisible.
+    """
+    from repro.models import model as M
+    stacked = M._use_scan(cfg)
+    d_ax = data_axes(mesh)
+    dp_size = 1
+    for a in d_ax:
+        dp_size *= mesh.shape[a]
+    batch_ok = bool(d_ax) and batch_size % dp_size == 0
+    b_ax: Any = d_ax if batch_ok else None
+    seq_ax: Any = "model" if batch_ok else (d_ax + ("model",)
+                                            if d_ax else "model")
+
+    def shard_state(ps, leaf, base_rank_offset):
+        """SSM / LSTM states: try model on the largest non-batch dim."""
+        nd = leaf.ndim
+        spec = [None] * nd
+        if nd >= 1:
+            spec[base_rank_offset] = b_ax          # batch dim
+        # choose the last dim divisible by model size for the model axis
+        for d in range(nd - 1, base_rank_offset, -1):
+            if leaf.shape[d] % mesh.shape["model"] == 0 and \
+                    leaf.shape[d] >= mesh.shape["model"]:
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        off = 1 if (stacked and ps.startswith("layers")) else 0
+        if leaf.ndim == 0 or ps.endswith("index"):
+            return NamedSharding(mesh, P())
+        if re.search(r"/(k|v)$", ps) and leaf.ndim >= 4:
+            # (B, L, Hkv, hd) [+leading stack dim]
+            cache_len = leaf.shape[off + 1]
+            seq = seq_ax
+            # guard divisibility of the seq dim
+            axes = seq if isinstance(seq, tuple) else (seq,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if cache_len % size != 0:
+                seq = None
+            spec = (None,) * off + (b_ax, seq, None, None)
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, shard_state(ps, leaf, off))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def decode_rules(cfg: ModelConfig, mesh: Mesh, *, batch_size: int):
+    """Context-parallel decode (flash-decoding combine) rule set."""
+    d_ax = data_axes(mesh)
+    dp_size = 1
+    for a in d_ax:
+        dp_size *= mesh.shape[a]
+    batch_ok = bool(d_ax) and batch_size % dp_size == 0
+    seq_axes = ("model",) if batch_ok else tuple(d_ax) + ("model",)
+    n = 1
+    for a in seq_axes:
+        n *= mesh.shape[a]
+    return {"decode_cp": {"mesh": mesh, "seq_axes": seq_axes,
+                          "dp_axes": d_ax if batch_ok else (),
+                          "n_shards": n}}
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh, params_shardings):
+    """Optimizer state mirrors the parameter layout (g has params' shape)."""
+    return {"g": params_shardings}
+
+
+def activation_rules(mesh: Mesh, *, batch_size: int,
+                     cfg: ModelConfig = None):
+    """Logical activation constraints installed via repro.distributed.ctx."""
+    d_ax = data_axes(mesh)
+    dp_size = 1
+    for a in d_ax:
+        dp_size *= mesh.shape[a]
+    dp: Any = d_ax if (d_ax and batch_size % dp_size == 0) else None
+    msize = mesh.shape["model"]
+    rules = {
+        # Megatron-style sequence parallelism for the saved residual stream
+        "residual": NamedSharding(mesh, P(dp, "model", None)),
+        # expert-parallel MoE buffer (E, C, d)
+        "expert_buffer": NamedSharding(mesh, P("model", None, None)),
+        # Megatron-TP attention: heads local to the model axis
+        "attn_q": NamedSharding(mesh, P(dp, None, "model", None)),
+        "attn_kv": NamedSharding(mesh, P(dp, None, "model", None)),
+    }
+    if cfg is not None:
+        # when the head count does not divide the TP degree, head-local
+        # attention is impossible; pin the SEQUENCE dim instead
+        # (context-parallel flash: q rows stay local, KV blocks broadcast
+        # per scan step — perf iters #7/#8).  Forcing replication here
+        # regressed minicpm/llama4 prefill 5-19x; free GSPMD choice left
+        # whisper prefill at 2.1 TB of per-block psums.
+        seq_sharded = NamedSharding(mesh, P(dp, "model", None, None))
+        if cfg.n_heads % msize != 0:
+            rules["attn_q"] = seq_sharded
+        if cfg.n_kv_heads % msize != 0:
+            rules["attn_kv"] = seq_sharded
+    if cfg is not None and cfg.n_experts:
+        rules["moe_ep"] = {"mesh": mesh, "tp": msize,
+                           "dp_axes": d_ax if dp is not None else ()}
+    return rules

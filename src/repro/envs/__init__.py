@@ -1,0 +1,13 @@
+from repro.envs.api import Env  # noqa: F401
+from repro.envs import catch, continuous, gridmaze, token_mdp  # noqa: F401
+
+REGISTRY = {
+    "catch": lambda: catch.make(),
+    "gridmaze": lambda: gridmaze.make(),
+    "pointmass": lambda: continuous.make_pointmass(),
+    "pendulum": lambda: continuous.make_pendulum(),
+}
+
+
+def make(name: str) -> Env:
+    return REGISTRY[name]()

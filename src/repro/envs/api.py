@@ -1,0 +1,66 @@
+"""Functional environment interface.
+
+Every env is a pair of pure functions so rollouts can live inside
+``lax.scan`` / ``vmap``:
+
+  reset(key)               -> (state, obs)
+  step(state, action, key) -> (state, obs, reward, done)
+
+``done`` auto-resets inside ``step`` (the returned state/obs are from the
+fresh episode) so parallel actors never have to synchronize on episode
+boundaries — matching the paper's per-thread independent episode streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    name: str
+    reset: Callable  # (key) -> (state, obs)
+    step: Callable   # (state, action, key) -> (state, obs, reward, done)
+    obs_shape: Tuple[int, ...]
+    n_actions: int           # discrete count, or action dim if continuous
+    continuous: bool = False
+    max_episode_len: int = 1000
+
+
+def flatten_obs(env: "Env") -> "Env":
+    """Flatten image observations to a vector (for the low-dim MLP trunk —
+    the CPU-scale stand-in for the conv trunk; see DESIGN.md §7)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    flat = int(np.prod(env.obs_shape))
+
+    def reset(key):
+        s, o = env.reset(key)
+        return s, o.reshape(flat)
+
+    def step(state, action, key):
+        s, o, r, d = env.step(state, action, key)
+        return s, o.reshape(flat), r, d
+
+    return dataclasses.replace(env, reset=reset, step=step,
+                               obs_shape=(flat,))
+
+
+def auto_reset(reset_fn, step_fn):
+    """Wrap a (reset, step) pair so ``done`` restarts the episode."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(state, action, key):
+        k_step, k_reset = jax.random.split(key)
+        next_state, obs, reward, done = step_fn(state, action, k_step)
+        fresh_state, fresh_obs = reset_fn(k_reset)
+        state_out = jax.tree.map(
+            lambda a, b: jnp.where(
+                jnp.reshape(done, (1,) * a.ndim) if a.ndim else done, b, a),
+            next_state, fresh_state)
+        obs_out = jnp.where(done, fresh_obs, obs)
+        return state_out, obs_out, reward, done
+
+    return step

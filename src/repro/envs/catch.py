@@ -1,0 +1,50 @@
+"""Catch — minimal Atari proxy (pixel observations, sparse terminal reward).
+
+A ball falls from a random column; the agent moves a paddle (left/stay/right)
+along the bottom row.  +1 for catching, -1 for missing.  Episode length =
+grid height.  Used for the paper's Atari-domain learning-speed experiments
+(Fig. 1 analogue) at CPU scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env, auto_reset
+
+
+class CatchState(NamedTuple):
+    ball: jnp.ndarray     # (2,) row, col
+    paddle: jnp.ndarray   # () col
+    t: jnp.ndarray
+
+
+def make(rows: int = 10, cols: int = 5) -> Env:
+
+    def reset(key):
+        col = jax.random.randint(key, (), 0, cols)
+        s = CatchState(jnp.array([0, 0], jnp.int32).at[1].set(col),
+                       jnp.array(cols // 2, jnp.int32),
+                       jnp.zeros((), jnp.int32))
+        return s, _obs(s)
+
+    def _obs(s: CatchState):
+        g = jnp.zeros((rows, cols), jnp.float32)
+        g = g.at[s.ball[0], s.ball[1]].set(1.0)
+        g = g.at[rows - 1, s.paddle].set(1.0)
+        return g[..., None]
+
+    def step(s: CatchState, action, key):
+        paddle = jnp.clip(s.paddle + action - 1, 0, cols - 1)
+        ball = s.ball.at[0].add(1)
+        done = ball[0] >= rows - 1
+        caught = done & (ball[1] == paddle)
+        reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+        s2 = CatchState(ball, paddle, s.t + 1)
+        return s2, _obs(s2), reward, done
+
+    return Env(name=f"catch{rows}x{cols}", reset=reset,
+               step=auto_reset(reset, step), obs_shape=(rows, cols, 1),
+               n_actions=3, max_episode_len=rows)

@@ -1,0 +1,91 @@
+"""Continuous-control proxies for the MuJoCo experiments (paper §5.2.3).
+
+PointMass2D: drive a point mass to a random target with 2-D force actions.
+Pendulum: classic torque-limited swing-up (1-D action).
+
+State observations are low-dimensional physical states (positions,
+velocities, target), matching the paper's "physical state as input" setup.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env, auto_reset
+
+
+class PMState(NamedTuple):
+    pos: jnp.ndarray
+    vel: jnp.ndarray
+    target: jnp.ndarray
+    t: jnp.ndarray
+
+
+def make_pointmass(episode_len: int = 100, dt: float = 0.05) -> Env:
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        s = PMState(jax.random.uniform(k1, (2,), minval=-1, maxval=1),
+                    jnp.zeros((2,)),
+                    jax.random.uniform(k2, (2,), minval=-1, maxval=1),
+                    jnp.zeros((), jnp.int32))
+        return s, _obs(s)
+
+    def _obs(s: PMState):
+        return jnp.concatenate([s.pos, s.vel, s.target]).astype(jnp.float32)
+
+    def step(s: PMState, action, key):
+        force = jnp.clip(action, -1, 1)
+        vel = 0.95 * s.vel + dt * force
+        pos = jnp.clip(s.pos + dt * vel * 10.0, -1.5, 1.5)
+        dist = jnp.linalg.norm(pos - s.target)
+        reward = -dist + jnp.where(dist < 0.1, 1.0, 0.0)
+        t = s.t + 1
+        done = t >= episode_len
+        s2 = PMState(pos, vel, s.target, t)
+        return s2, _obs(s2), reward, done
+
+    return Env(name="pointmass2d", reset=reset, step=auto_reset(reset, step),
+               obs_shape=(6,), n_actions=2, continuous=True,
+               max_episode_len=episode_len)
+
+
+class PendState(NamedTuple):
+    theta: jnp.ndarray
+    omega: jnp.ndarray
+    t: jnp.ndarray
+
+
+def make_pendulum(episode_len: int = 200, dt: float = 0.05) -> Env:
+    g, m, l, max_torque, max_speed = 10.0, 1.0, 1.0, 2.0, 8.0
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        s = PendState(jax.random.uniform(k1, (), minval=-jnp.pi,
+                                         maxval=jnp.pi),
+                      jax.random.uniform(k2, (), minval=-1.0, maxval=1.0),
+                      jnp.zeros((), jnp.int32))
+        return s, _obs(s)
+
+    def _obs(s: PendState):
+        return jnp.stack([jnp.cos(s.theta), jnp.sin(s.theta),
+                          s.omega / max_speed]).astype(jnp.float32)
+
+    def step(s: PendState, action, key):
+        u = jnp.clip(action[0] * max_torque, -max_torque, max_torque)
+        th = ((s.theta + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+        cost = th ** 2 + 0.1 * s.omega ** 2 + 0.001 * u ** 2
+        omega = s.omega + (3 * g / (2 * l) * jnp.sin(th)
+                           + 3.0 / (m * l ** 2) * u) * dt
+        omega = jnp.clip(omega, -max_speed, max_speed)
+        theta = s.theta + omega * dt
+        t = s.t + 1
+        done = t >= episode_len
+        s2 = PendState(theta, omega, t)
+        return s2, _obs(s2), -cost, done
+
+    return Env(name="pendulum", reset=reset, step=auto_reset(reset, step),
+               obs_shape=(3,), n_actions=1, continuous=True,
+               max_episode_len=episode_len)

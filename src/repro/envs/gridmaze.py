@@ -1,0 +1,88 @@
+"""GridMaze — Labyrinth proxy (paper §5.2.4).
+
+Randomly generated maze each episode: walls, apples (+1, consumed) and one
+portal (+10, agent respawns and apples regenerate).  Episode is time-limited.
+Observation is the full grid as a (H, W, 4) one-hot image (walls, apples,
+portal, agent) — a visual input, like Labyrinth's RGB frames, consumable by
+the paper's conv net.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env, auto_reset
+
+
+class MazeState(NamedTuple):
+    walls: jnp.ndarray     # (H, W) bool
+    apples: jnp.ndarray    # (H, W) bool
+    portal: jnp.ndarray    # (2,) int32
+    pos: jnp.ndarray       # (2,) int32
+    apples0: jnp.ndarray   # (H, W) bool — regenerated on portal entry
+    t: jnp.ndarray         # () int32
+
+
+def make(size: int = 9, wall_density: float = 0.2, n_apples: int = 5,
+         episode_len: int = 200) -> Env:
+    hw = size
+
+    def _random_free_cell(key, walls):
+        """Sample a cell, biased away from walls (resample once)."""
+        k1, k2 = jax.random.split(key)
+        flat_free = (~walls).reshape(-1).astype(jnp.float32)
+        idx = jax.random.categorical(k1, jnp.log(flat_free + 1e-9))
+        return jnp.stack([idx // hw, idx % hw]).astype(jnp.int32)
+
+    def reset(key):
+        k_w, k_a, k_p, k_s = jax.random.split(key, 4)
+        walls = jax.random.bernoulli(k_w, wall_density, (hw, hw))
+        # keep borders open is unnecessary: movement clamps to grid
+        apple_logits = jnp.where(walls.reshape(-1), -1e9, 0.0)
+        apple_idx = jax.random.choice(k_a, hw * hw, (n_apples,),
+                                      replace=False,
+                                      p=jax.nn.softmax(apple_logits))
+        apples = jnp.zeros((hw, hw), bool).reshape(-1).at[apple_idx] \
+            .set(True).reshape(hw, hw)
+        portal = _random_free_cell(k_p, walls | apples)
+        pos = _random_free_cell(k_s, walls)
+        walls = walls.at[pos[0], pos[1]].set(False)
+        walls = walls.at[portal[0], portal[1]].set(False)
+        state = MazeState(walls, apples, portal, pos, apples,
+                          jnp.zeros((), jnp.int32))
+        return state, _obs(state)
+
+    def _obs(s: MazeState):
+        agent = jnp.zeros((hw, hw), bool).at[s.pos[0], s.pos[1]].set(True)
+        portal = jnp.zeros((hw, hw), bool).at[s.portal[0], s.portal[1]] \
+            .set(True)
+        return jnp.stack([s.walls, s.apples, portal, agent],
+                         axis=-1).astype(jnp.float32)
+
+    MOVES = jnp.array([[-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+
+    def step(s: MazeState, action, key):
+        nxt = jnp.clip(s.pos + MOVES[action], 0, hw - 1)
+        blocked = s.walls[nxt[0], nxt[1]]
+        pos = jnp.where(blocked, s.pos, nxt)
+
+        got_apple = s.apples[pos[0], pos[1]]
+        apples = s.apples.at[pos[0], pos[1]].set(False)
+        got_portal = jnp.all(pos == s.portal)
+
+        # portal: respawn agent at a random cell, apples regenerate
+        respawn = _random_free_cell(key, s.walls)
+        pos = jnp.where(got_portal, respawn, pos)
+        apples = jnp.where(got_portal, s.apples0, apples)
+
+        reward = got_apple.astype(jnp.float32) + 10.0 * got_portal
+        t = s.t + 1
+        done = t >= episode_len
+        s2 = MazeState(s.walls, apples, s.portal, pos, s.apples0, t)
+        return s2, _obs(s2), reward, done
+
+    return Env(name=f"gridmaze{size}", reset=reset,
+               step=auto_reset(reset, step), obs_shape=(hw, hw, 4),
+               n_actions=4, max_episode_len=episode_len)

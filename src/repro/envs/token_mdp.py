@@ -1,0 +1,57 @@
+"""TokenMDP — the token-level MDP that turns any assigned LLM backbone into
+an A3C policy (state = token prefix, action = next token).
+
+This is the bridge between the paper's algorithm layer and the assigned
+architectures: the policy π(a|s) is the LM head softmax, V(s) the value head,
+and the environment rewards structured sequence continuation.  Default task
+"successor": emitting token (prev + 1) mod V earns +1 (dense rewards, so
+n-step returns propagate exactly as in the paper's Alg. 2/3).
+
+Unlike the pixel envs this one is batch-native: states are (B, S) token
+buffers advanced one position per step, matching the decode path
+(``serve_step``) of the serving stack.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TokenMDPState(NamedTuple):
+    tokens: jnp.ndarray   # (B, S) rolling context buffer
+    pos: jnp.ndarray      # () current length (clipped at S)
+    t: jnp.ndarray        # () step in episode
+
+
+class TokenMDP(NamedTuple):
+    vocab: int
+    context: int
+    episode_len: int
+
+    def reset(self, key, batch: int) -> TokenMDPState:
+        first = jax.random.randint(key, (batch, 1), 0, self.vocab)
+        tokens = jnp.zeros((batch, self.context), jnp.int32)
+        tokens = tokens.at[:, :1].set(first)
+        return TokenMDPState(tokens, jnp.ones((), jnp.int32),
+                             jnp.zeros((), jnp.int32))
+
+    def step(self, state: TokenMDPState, actions: jnp.ndarray):
+        """actions (B,) emitted tokens.  Returns (state, reward (B,), done)."""
+        prev = state.tokens[jnp.arange(actions.shape[0]),
+                            jnp.maximum(state.pos - 1, 0)]
+        reward = (actions == (prev + 1) % self.vocab).astype(jnp.float32)
+        pos = jnp.minimum(state.pos, self.context - 1)
+        tokens = state.tokens.at[:, pos].set(actions)
+        t = state.t + 1
+        done = t >= self.episode_len
+        return TokenMDPState(tokens, pos + 1, t), reward, done
+
+    def reward_for_sequence(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Teacher-forced per-position rewards for a full (B, S) sequence:
+        reward[t] = 1 iff tokens[t+1] == tokens[t] + 1 (mod V).  Used by the
+        batched train path (train_4k input shape)."""
+        nxt = jnp.roll(tokens, -1, axis=1)
+        r = (nxt == (tokens + 1) % self.vocab).astype(jnp.float32)
+        return r.at[:, -1].set(0.0)

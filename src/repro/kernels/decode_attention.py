@@ -1,0 +1,99 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+The memory-bound phase of serving: each step streams the KV cache from HBM
+once.  Grid: (batch, kv_heads, n_kv_blocks) — all G query heads that share a
+KV head are packed into one (G x D) @ (D x block_k) MXU matmul per block, so
+GQA costs one cache read regardless of the query-head fan-out.  Online
+softmax state lives in VMEM scratch across the innermost KV dimension.
+
+Empty/future cache slots are masked via ``kpos`` (absolute position per
+slot, -1 = unwritten), which also handles ring-buffer (sliding-window)
+caches where slot order is rotated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_k: int, n_k: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                         # (G, D)
+    k = k_ref[0, :, 0, :]                   # (bk, D)
+    v = v_ref[0, :, 0, :]                   # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = kpos_ref[...]                    # (bk,)
+    pos = pos_ref[0]
+    valid = (kpos >= 0) & (kpos <= pos)
+    s = jnp.where(valid[None, :], s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
+                         block_k: int = 1024,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,); pos () -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    length = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    bk = min(block_k, length)
+    assert length % bk == 0
+    n_k = length // bk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    qg = q.reshape(b, hkv, g, d)
+    kern = functools.partial(_kernel, block_k=bk, n_k=n_k, scale=d ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hkv, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # pos scalar
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
+            pl.BlockSpec((bk,), lambda b_, h, ik: (ik,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos.reshape(1), qg, k_cache, v_cache, kpos)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (prefill/train forward).
+
+TPU adaptation of the GPU flash algorithm: instead of warp-level softmax
+reductions, each grid step computes a (block_q x block_k) score tile as a
+single MXU matmul with the online-softmax state (m, l, acc) held in VMEM
+scratch across the innermost (arbitrary-order) KV grid dimension.  Block
+shapes are MXU-aligned (multiples of 128 on the contracting/lane dims).
+
+Grid: (batch, q_heads, n_q_blocks, n_k_blocks), KV innermost.
+GQA: the k/v BlockSpec index maps q-head h to kv-head h // group, so
+repeated KV heads are never materialized in HBM or VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: Optional[int], block_q: int, block_k: int,
+            n_k: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                      # (bq, D)
+    k = k_ref[0, :, 0, :]                # (bk, D)
+    v = v_ref[0, :, 0, :]                # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    n_q, n_k = s // bq, s // bk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    grid = (b, hq, n_q, n_k)
+    kern = functools.partial(
+        _kernel, causal=causal, window=window, block_q=bq, block_k=bk,
+        n_k=n_k, scale=d ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(jnp.moveaxis(q, 1, 2), k, v).swapaxes(1, 2)

@@ -1,0 +1,82 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the model/optimizer layers call with
+``backend="pallas"``; each handles layout, padding, and falls back to the
+jnp reference for shapes the kernels don't support (tiny smoke sizes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.shared_rmsprop import rmsprop_update_2d
+
+LANES = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    s = q.shape[1]
+    if s < 128 or s % 128 != 0:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    bq = bk = min(512, s)
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, kpos,
+                     pos=None) -> jnp.ndarray:
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) -> (B,Hq,D)."""
+    if pos is None:
+        pos = jnp.max(kpos)
+    length = k_cache.shape[1]
+    if length < 128 or length % 128 != 0:
+        return ref.decode_attention_ref(q, k_cache, v_cache, kpos, pos)
+    bk = min(1024, length)
+    while length % bk:
+        bk //= 2
+    return decode_attention_fwd(q, k_cache, v_cache, kpos, pos, block_k=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "alpha", "eps"))
+def rmsprop_update(g, grad, *, lr, alpha: float = 0.99,
+                   eps: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Shared-RMSProp for an arbitrary-shaped parameter leaf.
+    Returns (new_g, update)."""
+    shape = g.shape
+    n = g.size
+    if n < LANES:
+        return ref.rmsprop_update_ref(g, grad, lr=lr, alpha=alpha, eps=eps)
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    gf = jnp.pad(g.reshape(-1), (0, pad)).reshape(rows, LANES)
+    df = jnp.pad(grad.reshape(-1), (0, pad)).reshape(rows, LANES)
+    br = 256
+    while rows % br:
+        br //= 2
+    new_g, upd = rmsprop_update_2d(gf, df, jnp.asarray(lr, g.dtype),
+                                   alpha=alpha, eps=eps, block_rows=br)
+    unpad = lambda x: x.reshape(-1)[:n].reshape(shape)
+    return unpad(new_g), unpad(upd)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, *, eps: float = 1e-6) -> jnp.ndarray:
+    """Fused RMSNorm over the last dim of an arbitrary-rank activation."""
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    if rows < 8 or d % 128 != 0:
+        return ref.rmsnorm_ref(x, scale, eps=eps)
+    y = rmsnorm_fwd(x.reshape(rows, d), scale, eps=eps)
+    return y.reshape(shape)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D).  Naive softmax."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bshgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, :, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kpos, pos) -> jnp.ndarray:
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) absolute position per slot
+    (-1 = empty); pos () current position.  -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,blhd->bhgl", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = (kpos >= 0) & (kpos <= pos)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgl,blhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+def rmsprop_update_ref(g, grad, *, lr: float, alpha: float = 0.99,
+                       eps: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper Eq. 8-9 (non-centered, shared-statistics RMSProp).
+    Returns (new_g, update); caller applies params -= update."""
+    new_g = alpha * g + (1.0 - alpha) * jnp.square(grad)
+    update = lr * grad / jnp.sqrt(new_g + eps)
+    return new_g, update
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(dt)

@@ -1,0 +1,47 @@
+"""Pallas TPU fused RMSNorm (forward).
+
+Every block of every assigned architecture runs 2+ RMSNorms per layer; the
+naive HLO chain (square -> mean -> rsqrt -> mul -> mul) makes multiple HBM
+passes over the (B*S, d) activation.  This kernel reads x once and writes y
+once, with the f32 reduction done in VMEM.  Rows are tiled (block_rows x d);
+d is padded by ops.py to the 128-lane boundary if needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float, d_real: int):
+    x = x_ref[...].astype(jnp.float32)          # (br, d)
+    # mean of squares over the REAL feature width (padding contributes 0)
+    var = jnp.sum(x * x, axis=-1, keepdims=True) / d_real
+    y = x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_fwd(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """x (rows, d); scale (d,).  Returns normalized x, same dtype."""
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    while rows % br:
+        br //= 2
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    kern = functools.partial(_kernel, eps=eps, d_real=d)
+    return pl.pallas_call(
+        kern,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

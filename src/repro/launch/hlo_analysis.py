@@ -1,0 +1,275 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+XLA's ``compiled.cost_analysis()`` counts each While (lax.scan) body ONCE,
+not multiplied by trip count (verified in tests/test_hlo_analysis.py), which
+makes it useless for scanned-layer models.  This module does a trip-count-
+weighted walk of the optimized HLO text instead:
+
+  * the module is split into computations and a module-wide symbol table of
+    instruction result shapes is built (the compact printer omits operand
+    types, so operands are resolved through the table);
+  * ``while`` ops are matched to their condition/body computations and the
+    trip count is recovered from the bound constant in the condition;
+  * fusions/calls propagate weights into callee computations;
+  * per-computation tallies (dot FLOPs, collective bytes) are combined
+    bottom-up with the accumulated weights.
+
+Collective byte accounting (per device, ring-algorithm upper bounds):
+  all-gather: output bytes; all-reduce: 2x operand; reduce-scatter /
+  all-to-all: operand; collective-permute: operand (one hop).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Sum byte sizes of every shaped literal in a type string (handles
+    tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elems(type_str: str) -> int:
+    dims = _shape_dims(type_str)
+    if dims is None:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+class Computation:
+    def __init__(self, name: str, is_entry: bool):
+        self.name = name
+        self.is_entry = is_entry
+        self.lines: List[str] = []
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and "->" in line:
+            m = _HDR_RE.match(line)
+            if m and "=" not in line[:m.end()]:
+                cur = Computation(m.group(2), bool(m.group(1)))
+                comps[cur.name] = cur
+                continue
+        if line.startswith("}"):
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    return comps
+
+
+def build_symbols(comps: Dict[str, Computation]) -> Dict[str, str]:
+    """instruction name -> result type string."""
+    sym: Dict[str, str] = {}
+    for comp in comps.values():
+        for line in comp.lines:
+            m = _DEF_RE.match(line)
+            if m:
+                sym[m.group(1)] = m.group(2)
+    return sym
+
+
+def _operands(call_tail: str) -> List[str]:
+    """'(%a, %b), attr=...' -> ['a', 'b'] (top-level operand names)."""
+    out = []
+    depth = 0
+    for tok in re.finditer(r"[()]|%([\w.\-]+)", call_tail):
+        t = tok.group(0)
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            depth -= 1
+            if depth <= 0:
+                break
+        elif depth >= 1:
+            out.append(tok.group(1))
+    return out
+
+
+class Tally:
+    __slots__ = ("collectives", "dot_flops", "calls", "whiles")
+
+    def __init__(self):
+        self.collectives = {k: 0.0 for k in _COLLECTIVE_KINDS}
+        self.dot_flops = 0.0
+        self.calls: List[str] = []
+        self.whiles: List[Tuple[str, str]] = []   # (cond, body)
+
+
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\(?.+?\)?)\s+([\w\-]+)\(")
+
+
+def tally_computation(comp: Computation, sym: Dict[str, str]) -> Tally:
+    t = Tally()
+    for line in comp.lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        tail = line[m.end() - 1:]
+
+        if op in ("all-gather", "all-gather-start", "all-reduce",
+                  "all-reduce-start", "reduce-scatter", "all-to-all",
+                  "ragged-all-to-all", "collective-permute",
+                  "collective-permute-start"):
+            kind = op.replace("-start", "").replace("ragged-", "")
+            ops_ = _operands(tail)
+            operand_bytes = sum(_type_bytes(sym.get(o, "")) for o in ops_)
+            out_bytes = _type_bytes(result_type)
+            if kind == "all-gather":
+                b = out_bytes
+            elif kind == "all-reduce":
+                b = 2 * operand_bytes
+            else:
+                b = operand_bytes
+            t.collectives[kind] += b
+        elif op == "dot":
+            ops_ = _operands(tail)
+            out_elems = _elems(result_type)
+            cm_ = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            lhs_dims = _shape_dims(sym.get(ops_[0], "")) if ops_ else None
+            if cm_ and lhs_dims:
+                contract = 1
+                for i in (int(x) for x in cm_.group(1).split(",") if x):
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+                t.dot_flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            # flops ~= 2 * out_elems * (kernel spatial x in-channels)
+            ops_ = _operands(tail)
+            out_elems = _elems(result_type)
+            rhs_dims = _shape_dims(sym.get(ops_[1], "")) if len(ops_) > 1 \
+                else None
+            if rhs_dims:
+                k = 1
+                for d in rhs_dims[:-1]:   # all but output-feature dim
+                    k *= d
+                t.dot_flops += 2.0 * out_elems * k
+        elif op == "while":
+            cond = re.search(r"condition=%?([\w.\-]+)", line)
+            body = re.search(r"body=%?([\w.\-]+)", line)
+            if cond and body:
+                t.whiles.append((cond.group(1), body.group(1)))
+        else:
+            for callee in re.findall(
+                    r"(?:calls|to_apply|condition|body|"
+                    r"branch_computations)=\{?%?([\w.\-]+)", line):
+                t.calls.append(callee)
+    return t
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Largest scalar integer constant in the condition computation — the
+    loop bound (condition comps contain only the counter compare)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for line in cond.lines:
+        for c in re.findall(r"constant\((\d+)\)", line):
+            best = max(best, int(c))
+    return best
+
+
+def weighted_totals(hlo: str) -> Dict[str, float]:
+    comps = split_computations(hlo)
+    sym = build_symbols(comps)
+    tallies = {name: tally_computation(c, sym) for name, c in comps.items()}
+    entry = next((n for n, c in comps.items() if c.is_entry), None)
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def visit(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        t = tallies.get(name)
+        zero = {k: 0.0 for k in _COLLECTIVE_KINDS} | {"flops": 0.0}
+        if t is None or depth > 60:
+            return zero
+        tot = dict(t.collectives)
+        tot["flops"] = t.dot_flops
+        memo[name] = zero  # cycle guard
+        for callee in t.calls:
+            sub = visit(callee, depth + 1)
+            for k in tot:
+                tot[k] += sub[k]
+        for cond_name, body_name in t.whiles:
+            n = trip_count(comps, cond_name)
+            sub_b = visit(body_name, depth + 1)
+            sub_c = visit(cond_name, depth + 1)
+            for k in tot:
+                tot[k] += n * (sub_b[k] + sub_c[k])
+        memo[name] = tot
+        return tot
+
+    if entry is None:
+        total = {k: 0.0 for k in _COLLECTIVE_KINDS} | {"flops": 0.0}
+        for name in tallies:
+            sub = visit(name)
+    else:
+        total = visit(entry)
+    total["total"] = sum(total[k] for k in _COLLECTIVE_KINDS)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    t = weighted_totals(hlo_text)
+    return {k: t[k] for k in _COLLECTIVE_KINDS} | {"total": t["total"]}
+
+
+def roofline_terms(*, hlo_flops: float, hbm_bytes: float,
+                   collective_total: float, n_chips: int,
+                   peak_flops: float, hbm_bw: float, ici_bw: float
+                   ) -> Dict[str, float]:
+    """Seconds per step for each roofline term.
+
+    hlo_flops: whole-program weighted dot FLOPs -> / chips.
+    hbm_bytes: per-chip HBM traffic (analytic model, launch/traffic.py).
+    collective_total: per-chip collective bytes -> / per-chip link bw.
+    """
+    t_compute = hlo_flops / (n_chips * peak_flops)
+    t_memory = hbm_bytes / hbm_bw
+    t_coll = collective_total / ici_bw
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant}

@@ -1,0 +1,28 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run launcher sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, data: int = 1, model: int = 1):
+    """Tiny mesh for CPU integration tests (needs data*model <= #devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# hardware constants for the roofline model (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

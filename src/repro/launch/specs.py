@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture x input shape).
+
+``input_specs(cfg, shape_id)`` returns (kind, spec_dict) where kind is
+"train" | "prefill" | "decode" and spec_dict matches what train_step /
+forward / serve_step expect — weak-type-correct, shardable, no allocation.
+
+Decode shapes mean ONE new token against a cache of seq_len (the RL actor
+path); ``long_500k`` additionally requires sub-quadratic attention, which
+dense archs satisfy via the sliding-window variant (``variant="+sw"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+S = jax.ShapeDtypeStruct
+
+INPUT_SHAPES = {
+    "train_4k":    dict(seq=4_096,   batch=256, kind="train"),
+    "prefill_32k": dict(seq=32_768,  batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32_768,  batch=128, kind="decode"),
+    "long_500k":   dict(seq=524_288, batch=1,   kind="decode"),
+}
+
+# long_500k applicability (DESIGN.md §4): native sub-quadratic for SSM /
+# hybrid / chunked-local archs; dense & VLM run the sliding-window variant;
+# whisper (enc-dec, bounded decoder context by construction) is skipped.
+LONG_DECODE = {
+    "qwen2-72b": "sw",
+    "minicpm-2b": "sw",
+    "yi-6b": "sw",
+    "granite-moe-1b-a400m": "sw",
+    "whisper-base": None,          # skipped — noted in DESIGN.md
+    "zamba2-1.2b": "native",
+    "xlstm-1.3b": "native",
+    "llama4-scout-17b-a16e": "native",   # chunked-local attention layers
+    "qwen2-vl-72b": "sw",
+    "stablelm-1.6b": "sw",
+}
+
+SW_WINDOW = 8_192
+
+
+def sliding_window_variant(cfg: ModelConfig) -> ModelConfig:
+    """Dense arch -> all-local-attention variant for long-context decode."""
+    return dataclasses.replace(
+        cfg, name=cfg.name + "+sw",
+        block_cycle=tuple("attn_local" if k == "attn" else k
+                          for k in cfg.block_cycle),
+        sliding_window=SW_WINDOW)
+
+
+def maybe_long_variant(cfg: ModelConfig, shape_id: str) -> ModelConfig:
+    if shape_id == "long_500k" and LONG_DECODE.get(cfg.name) == "sw":
+        return sliding_window_variant(cfg)
+    return cfg
+
+
+def _token_batch(cfg: ModelConfig, b: int, s: int) -> Dict[str, Any]:
+    if cfg.family == "vlm":
+        # ViT stub: precomputed patch/text embeddings + M-RoPE position ids
+        return {
+            "embeds": S((b, s, cfg.d_model), jnp.bfloat16),
+            "positions": S((3, b, s), jnp.int32),
+        }
+    return {"tokens": S((b, s), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape_id: str) -> Tuple[str, Dict[str, Any]]:
+    sh = INPUT_SHAPES[shape_id]
+    b, s, kind = sh["batch"], sh["seq"], sh["kind"]
+    if kind == "train":
+        batch = _token_batch(cfg, b, s)
+        if cfg.is_encdec:
+            batch["enc_frames"] = S((b, cfg.encoder_seq, cfg.d_model),
+                                    jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["actions"] = S((b, s), jnp.int32)
+        batch["rewards"] = S((b, s), jnp.float32)
+        batch["discounts"] = S((b, s), jnp.float32)
+        return kind, batch
+    if kind == "prefill":
+        batch = _token_batch(cfg, b, s)
+        if cfg.is_encdec:
+            batch["enc_frames"] = S((b, cfg.encoder_seq, cfg.d_model),
+                                    jnp.bfloat16)
+        return kind, batch
+    # decode: one token + cache of length s
+    batch = ({"embeds": S((b, 1, cfg.d_model), jnp.bfloat16),
+              "positions": S((3, b, 1), jnp.int32)}
+             if cfg.family == "vlm" else
+             {"tokens": S((b, 1), jnp.int32)})
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, b, s, dtype=jnp.bfloat16))
+    return kind, {"batch": batch, "cache": cache,
+                  "pos": S((), jnp.int32), "seed": S((), jnp.uint32)}
+
+
+def params_specs(cfg: ModelConfig):
+    """ShapeDtypeStructs for the full parameter pytree (no allocation)."""
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.key(0))

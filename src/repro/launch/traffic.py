@@ -1,0 +1,65 @@
+"""Analytic per-device HBM traffic model for the roofline memory term.
+
+XLA's cost_analysis "bytes accessed" suffers the same While-body
+undercounting as its FLOPs (see hlo_analysis.py), so the memory term is
+computed from an explicit, implementation-aware traffic model instead.  All
+tensors below are sharded across the whole mesh (params 2-D FSDPxTP, batch
+on data, caches context-parallel), so totals are divided by n_chips.
+
+Accounting (bytes, whole cluster):
+
+train_step:
+  params    3 reads bf16 (fwd + remat-refwd + bwd access)      6 * P
+            master read+write f32, grad write+read f32,
+            RMSProp g read+write f32                          24 * P
+  residual  saved scan carries, write(fwd)+read(bwd), bf16:
+            4 * L * B * S * d
+  logits    f32 materialization + softmax passes: 16 * B * S * V
+prefill:
+  params    1 read bf16: 2 * P
+  acts      2 * L * B * S * d * 2 (block in/out, bf16)
+  kv        written once: cache_bytes
+  logits    4 * B * S * V (bf16 out + reads)
+decode (per token):
+  params    1 read bf16: 2 * P   (grouped-einsum MoE reads ALL experts —
+            an implementation property the roofline deliberately exposes)
+  cache     full read + one-slot write: cache_bytes
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import specs as specs_mod
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, seq, dtype=jnp.bfloat16))
+    return _tree_bytes(cache)
+
+
+def hbm_bytes(cfg: ModelConfig, shape_id: str, kind: str,
+              n_chips: int) -> float:
+    sh = specs_mod.INPUT_SHAPES[shape_id]
+    b, s = sh["batch"], sh["seq"]
+    p = cfg.param_count()
+    l, d, v = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    if kind == "train":
+        total = (30 * p
+                 + 4 * l * b * s * d
+                 + 16 * b * s * v)
+    elif kind == "prefill":
+        total = (2 * p
+                 + 4 * l * b * s * d
+                 + cache_bytes(cfg, b, s)
+                 + 4 * b * s * v)
+    else:  # decode
+        total = 2 * p + cache_bytes(cfg, b, s)
+    return total / n_chips

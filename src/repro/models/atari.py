@@ -1,0 +1,143 @@
+"""The paper's agent networks (Mnih et al. 2013/2016, §5.1).
+
+Conv 16x8x8/4 -> Conv 32x4x4/2 -> FC 256 -> heads; ReLU throughout.  Heads:
+  * actor-critic: softmax policy + scalar value (shared trunk, Alg. 3)
+  * value-based : one linear Q output per action (Alg. 1/2)
+  * continuous  : Gaussian mean (linear) + variance (softplus) heads (§5.2.3)
+  * recurrent   : 256-cell LSTM after the final hidden layer (A3C LSTM)
+
+These are the networks used for the *learning* experiments (the paper's
+actual claims); the assigned large architectures plug into the identical
+algorithm layer via the TokenMDP policy interface.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def _init_conv(key, h, w, cin, cout):
+    fan_in = h * w * cin
+    return {
+        "w": cm.trunc_normal(key, (h, w, cin, cout), (1.0 / fan_in) ** 0.5),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _conv(p, x, stride):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def init_atari_params(key, n_actions: int, *, input_hw: int = 84,
+                      in_channels: int = 4, lstm: bool = False,
+                      continuous: bool = False) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "conv1": _init_conv(ks[0], 8, 8, in_channels, 16),
+        "conv2": _init_conv(ks[1], 4, 4, 16, 32),
+    }
+    # conv output size for 84x84: ((84-8)/4+1)=20 -> ((20-4)/2+1)=9 -> 9*9*32
+    h1 = (input_hw - 8) // 4 + 1
+    h2 = (h1 - 4) // 2 + 1
+    flat = h2 * h2 * 32
+    p["fc"] = cm.init_linear(ks[2], flat, 256, bias=True)
+    d = 256
+    if lstm:
+        p["lstm"] = {
+            "wx": cm.init_linear(ks[3], 256, 4 * 256, bias=True),
+            "wh": cm.init_linear(ks[4], 256, 4 * 256),
+        }
+    if continuous:
+        p["mu"] = cm.init_linear(ks[5], d, n_actions, bias=True,
+                                 stddev=1e-2)
+        p["sigma"] = cm.init_linear(ks[6], d, 1, bias=True, stddev=1e-2)
+    else:
+        p["policy"] = cm.init_linear(ks[5], d, n_actions, bias=True,
+                                     stddev=1e-2)
+    p["value"] = cm.init_linear(ks[7], d, 1, bias=True, stddev=1e-2)
+    return p
+
+
+def init_mlp_agent_params(key, obs_dim: int, n_actions: int, *,
+                          hidden: int = 200, lstm: bool = False,
+                          lstm_size: int = 128,
+                          continuous: bool = False) -> Dict[str, Any]:
+    """Low-dimensional (MuJoCo-proxy) agent: 200 ReLU -> (128 LSTM) -> heads
+    (paper §5.2.3)."""
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"fc": cm.init_linear(ks[0], obs_dim, hidden,
+                                              bias=True)}
+    d = hidden
+    if lstm:
+        p["lstm"] = {
+            "wx": cm.init_linear(ks[1], hidden, 4 * lstm_size, bias=True),
+            "wh": cm.init_linear(ks[2], lstm_size, 4 * lstm_size),
+        }
+        d = lstm_size
+    if continuous:
+        p["mu"] = cm.init_linear(ks[3], d, n_actions, bias=True, stddev=1e-2)
+        p["sigma"] = cm.init_linear(ks[4], d, 1, bias=True, stddev=1e-2)
+    else:
+        p["policy"] = cm.init_linear(ks[3], d, n_actions, bias=True,
+                                     stddev=1e-2)
+    p["value"] = cm.init_linear(ks[5], d, 1, bias=True, stddev=1e-2)
+    return p
+
+
+def lstm_cell(p, x, state):
+    """Standard LSTM.  state = (h, c)."""
+    h, c = state
+    gates = cm.linear(p["wx"], x) + cm.linear(p["wh"], h)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, (h, c)
+
+
+def init_lstm_state(batch: int, size: int = 256):
+    z = jnp.zeros((batch, size), jnp.float32)
+    return (z, z)
+
+
+def trunk(params, obs, lstm_state=None):
+    """obs (B, H, W, C) pixels in [0,1] or (B, obs_dim) low-dim state."""
+    if obs.ndim == 4:
+        x = jax.nn.relu(_conv(params["conv1"], obs, 4))
+        x = jax.nn.relu(_conv(params["conv2"], x, 2))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(cm.linear(params["fc"], x))
+    else:
+        x = jax.nn.relu(cm.linear(params["fc"], obs))
+    if "lstm" in params:
+        if lstm_state is None:
+            lstm_state = init_lstm_state(x.shape[0],
+                                         params["lstm"]["wh"]["w"].shape[0])
+        x, lstm_state = lstm_cell(params["lstm"], x, lstm_state)
+    return x, lstm_state
+
+
+def actor_critic_heads(params, feats) -> Dict[str, jnp.ndarray]:
+    """Discrete A3C heads: log-policy + value."""
+    logits = cm.linear(params["policy"], feats)
+    value = cm.linear(params["value"], feats)[..., 0]
+    return {"logits": logits, "value": value}
+
+
+def gaussian_heads(params, feats) -> Dict[str, jnp.ndarray]:
+    """Continuous A3C heads (§5.2.3): mu linear, sigma^2 = softplus."""
+    mu = cm.linear(params["mu"], feats)
+    sigma2 = jax.nn.softplus(cm.linear(params["sigma"], feats))[..., 0] + 1e-4
+    value = cm.linear(params["value"], feats)[..., 0]
+    return {"mu": mu, "sigma2": sigma2, "value": value}
+
+
+def q_heads(params, feats) -> jnp.ndarray:
+    """Value-based methods: one linear output per action."""
+    return cm.linear(params["policy"], feats)

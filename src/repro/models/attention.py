@@ -1,0 +1,308 @@
+"""Grouped-query attention with RoPE / M-RoPE, sliding windows and KV caches.
+
+Three entry points:
+  * ``attend_train``   — full-sequence causal (or bidirectional) attention.
+  * ``attend_decode``  — one new token against a pre-filled KV cache.
+  * ``cross_attend``   — decoder query over encoder memory (Whisper).
+
+The jnp paths here are the reference implementations; the Pallas kernels in
+``repro.kernels`` implement the same math with explicit VMEM tiling and are
+validated against these in tests.  ``backend="pallas"`` routes train-time
+attention through the flash kernel (interpret-mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+from repro.models import common as cm
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    pass  # attention params are plain dicts; NamedTuple kept for doc purposes
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   out_bias: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": cm.init_linear(ks[0], d_model, n_heads * head_dim, bias=qkv_bias),
+        "wk": cm.init_linear(ks[1], d_model, n_kv_heads * head_dim, bias=qkv_bias),
+        "wv": cm.init_linear(ks[2], d_model, n_kv_heads * head_dim, bias=qkv_bias),
+        "wo": cm.init_linear(ks[3], n_heads * head_dim, d_model, bias=out_bias),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv * n_rep, D)."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d))
+    return x.reshape(b, s, h * n_rep, d)
+
+
+def sdpa(q, k, v, mask, *, scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B,Sq,H,D), k/v (B,Sk,H,D), mask broadcastable to (B,H,Sq,Sk)."""
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def causal_mask(sq: int, sk: int, *, window: Optional[int] = None,
+                offset: int = 0) -> jnp.ndarray:
+    """(1, 1, Sq, Sk) boolean mask.  ``offset`` = absolute position of q row 0
+    minus position of k col 0.  ``window`` keeps only the last ``window`` keys
+    (sliding-window / chunked-local attention)."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+def attend_train(params: dict, x: jnp.ndarray, cos, sin, cfg,
+                 *, window: Optional[int] = None, use_rope: bool = True,
+                 bidirectional: bool = False,
+                 backend: str = "jnp") -> jnp.ndarray:
+    """Full-sequence self attention.  x (B, S, d_model)."""
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
+    k = _split_heads(cm.linear(params["wk"], x), n_kv, hd)
+    v = _split_heads(cm.linear(params["wv"], x), n_kv, hd)
+    if use_rope:
+        rd = getattr(cfg, "rotary_dim", None)
+        q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
+        k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
+    # Megatron-TP: attention is head-local on the model axis; without these
+    # constraints GSPMD re-gathers K/V blocks inside the flash scan.
+    q = ctx.constrain(q, "attn_q")
+    k = ctx.constrain(k, "attn_kv")
+    v = ctx.constrain(v, "attn_kv")
+    s = x.shape[1]
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=not bidirectional,
+                                 window=window)
+    elif not bidirectional and s >= 2048 and s % 512 == 0:
+        # blockwise attention: never materializes the S x S score matrix
+        from repro.models.flash_jnp import flash_attention_jnp
+        o = flash_attention_jnp(q, k, v, True, window, 512)
+    else:
+        k = _repeat_kv(k, n_h // n_kv)
+        v = _repeat_kv(v, n_h // n_kv)
+        mask = None if bidirectional else causal_mask(s, s, window=window)
+        o = sdpa(q, k, v, mask)
+    b, s = x.shape[:2]
+    return cm.linear(params["wo"], o.reshape(b, s, n_h * hd))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode path)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    """Cache for one attention layer.  ``index`` is the next write slot; for
+    ring caches (sliding window) writes wrap modulo ``cache_len``."""
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+                  cfg, *, window: Optional[int] = None, use_rope: bool = True,
+                  backend: str = "jnp"):
+    """One-token decode.  x (B, 1, d_model); pos () absolute position.
+
+    Returns (out (B, 1, d_model), new_cache).  When ``window`` is set the
+    cache is a ring buffer of length == window (sub-linear memory for
+    long-context decode); otherwise cache_len == max seq and slot == pos.
+    """
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
+    k = _split_heads(cm.linear(params["wk"], x), n_kv, hd)
+    v = _split_heads(cm.linear(params["wv"], x), n_kv, hd)
+    if use_rope:
+        cos, sin = cm.rope_cos_sin(pos[None, None], hd, cfg.rope_theta)
+        rd = getattr(cfg, "rotary_dim", None)
+        q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
+        k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
+
+    cache_len = cache["k"].shape[1]
+    # full cache: slot == pos (pos < cache_len); ring cache: wrap around.
+    slot = pos % cache_len
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    new_cache = {"k": ck, "v": cv, "index": pos + 1}
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        kpos = _cache_positions(cache_len, pos, window)
+        o = kops.decode_attention(q[:, 0], ck, cv, kpos)
+        o = o[:, None]
+    else:
+        kk = _repeat_kv(ck.astype(q.dtype), n_h // n_kv)
+        vv = _repeat_kv(cv.astype(q.dtype), n_h // n_kv)
+        kpos = _cache_positions(cache_len, pos, window)
+        valid = (kpos >= 0) & (kpos <= pos)
+        mask = valid[None, None, None, :]
+        o = sdpa(q, kk, vv, mask)
+    return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
+
+
+def attend_decode_cp(params: dict, x: jnp.ndarray, cache: dict,
+                     pos: jnp.ndarray, cfg, *, window: Optional[int],
+                     mesh, seq_axes, dp_axes, backend: str = "jnp"):
+    """Context-parallel decode (flash-decoding pattern, perf iter #5).
+
+    The KV cache's sequence dim is sharded over ``seq_axes``; each device
+    computes a partial softmax over its cache slice and the combine is a
+    3-tensor psum of (m, l, acc) — O(B*Hq*D) bytes instead of all-gathering
+    the multi-GB cache every layer.  The cache write happens on the owning
+    shard only (predicated dynamic_update_slice).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
+    k = _split_heads(cm.linear(params["wk"], x), n_kv, hd)
+    v = _split_heads(cm.linear(params["wv"], x), n_kv, hd)
+    if True:  # rope (decode positions)
+        cos, sin = cm.rope_cos_sin(pos[None, None], hd, cfg.rope_theta)
+        rd = getattr(cfg, "rotary_dim", None)
+        q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
+        k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
+
+    cache_len = cache["k"].shape[1]
+    slot = pos % cache_len
+    g = n_h // n_kv
+    n_seq_shards = 1
+    for a in seq_axes:
+        n_seq_shards *= mesh.shape[a]
+    l_loc = cache_len // n_seq_shards
+
+    bspec = dp_axes if (dp_axes and b % max(
+        1, __import__("math").prod(mesh.shape[a] for a in dp_axes)) == 0) \
+        else None
+
+    def local_fn(q_, k_, v_, ck, cv):
+        # shard coordinate along the (possibly multi-axis) seq sharding
+        idx = jnp.zeros((), jnp.int32)
+        for a in seq_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        offset = idx * l_loc
+        local_slot = slot - offset
+        in_range = (local_slot >= 0) & (local_slot < l_loc)
+        ls = jnp.clip(local_slot, 0, l_loc - 1)
+        ck2 = jax.lax.dynamic_update_slice(
+            ck, k_.astype(ck.dtype), (0, ls, 0, 0))
+        cv2 = jax.lax.dynamic_update_slice(
+            cv, v_.astype(cv.dtype), (0, ls, 0, 0))
+        ck = jnp.where(in_range, ck2, ck)
+        cv = jnp.where(in_range, cv2, cv)
+
+        # absolute position per local cache slot (ring-aware)
+        sidx = offset + jnp.arange(l_loc)
+        if window is None:
+            kpos = jnp.where(sidx <= pos, sidx, -1)
+        else:
+            cand = pos - (pos % cache_len) + sidx
+            cand = jnp.where(cand > pos, cand - cache_len, cand)
+            kpos = jnp.where(cand >= 0, cand, -1)
+        valid = (kpos >= 0) & (kpos <= pos)
+
+        # GQA via grouped einsum — never materializes repeated KV
+        bl = q_.shape[0]   # local batch inside shard_map
+        qg = (q_[:, 0].astype(jnp.float32) * (hd ** -0.5)) \
+            .reshape(bl, n_kv, g, hd)
+        kk = ck.astype(jnp.float32)
+        vv = cv.astype(jnp.float32)
+        s_ = jnp.einsum("bkgd,blkd->bkgl", qg, kk)
+        s_ = jnp.where(valid[None, None, None, :], s_, -1e30)
+        m_loc = s_.max(-1)                                  # (B,Hkv,g)
+        p_ = jnp.exp(s_ - m_loc[..., None])
+        l_sum = p_.sum(-1)
+        acc = jnp.einsum("bkgl,blkd->bkgd", p_, vv)
+        # flash-decoding combine across seq shards
+        axes = tuple(seq_axes)
+        m_max = jax.lax.pmax(m_loc, axes)
+        corr = jnp.exp(m_loc - m_max)
+        l_tot = jax.lax.psum(l_sum * corr, axes)
+        acc_tot = jax.lax.psum(acc * corr[..., None], axes)
+        o = (acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]) \
+            .reshape(bl, n_h, hd)
+        return o.astype(x.dtype), ck, cv
+
+    seq_spec = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+    cache_spec = P(bspec, seq_spec, None, None)
+    rep_spec = P(bspec, None, None, None)
+    o, ck, cv = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec),
+        out_specs=(P(bspec, None, None), cache_spec, cache_spec),
+        check_rep=False,
+    )(q, k, v, cache["k"], cache["v"])
+    new_cache = {"k": ck, "v": cv, "index": pos + 1}
+    return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
+
+
+def _cache_positions(cache_len: int, pos: jnp.ndarray,
+                     window: Optional[int]) -> jnp.ndarray:
+    """Absolute position of each cache slot; -1 for not-yet-written slots."""
+    idx = jnp.arange(cache_len)
+    if window is None:
+        return jnp.where(idx <= pos, idx, -1)
+    # ring buffer: slot s holds position p iff p % cache_len == s and
+    # pos - cache_len < p <= pos.
+    cand = pos - (pos % cache_len) + idx
+    cand = jnp.where(cand > pos, cand - cache_len, cand)
+    return jnp.where(cand >= 0, cand, -1)
+
+
+# ---------------------------------------------------------------------------
+# cross attention (Whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attend(params: dict, x: jnp.ndarray, memory_kv: tuple, cfg
+                 ) -> jnp.ndarray:
+    """x (B, Sq, d); memory_kv = (k, v) each (B, Sm, Hkv, D) precomputed."""
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, sq, _ = x.shape
+    q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
+    k, v = memory_kv
+    k = _repeat_kv(k.astype(q.dtype), n_h // n_kv)
+    v = _repeat_kv(v.astype(q.dtype), n_h // n_kv)
+    o = sdpa(q, k, v, None)
+    return cm.linear(params["wo"], o.reshape(b, sq, n_h * hd))
+
+
+def memory_kv(params: dict, mem: jnp.ndarray, cfg) -> tuple:
+    """Precompute cross-attention K/V from encoder output (B, Sm, d)."""
+    n_kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = _split_heads(cm.linear(params["wk"], mem), n_kv, hd)
+    v = _split_heads(cm.linear(params["wv"], mem), n_kv, hd)
+    return (k, v)

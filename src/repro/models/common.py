@@ -1,0 +1,172 @@
+"""Common building blocks: norms, linears, embeddings, rotary embeddings.
+
+Pure-JAX (no flax): parameters are plain pytrees of jnp arrays, every layer is
+an ``init_*(key, ...) -> params`` / ``apply(params, x) -> y`` pair.  All
+matmul-bearing ops take an optional ``dtype`` so the backbone can run bf16 on
+TPU while accumulating in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of jnp arrays
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                stddev: Optional[float] = None, dtype=jnp.float32) -> Params:
+    stddev = stddev if stddev is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": trunc_normal(key, (d_in, d_out), stddev, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jnp.ndarray, *, dtype=None) -> jnp.ndarray:
+    w = p["w"].astype(dtype) if dtype is not None else p["w"]
+    y = x @ w
+    if "b" in p:
+        b = p["b"].astype(y.dtype)
+        y = y + b
+    return y
+
+
+def init_embedding(key, vocab: int, d_model: int, *, stddev: float = 0.02,
+                   dtype=jnp.float32) -> Params:
+    return {"table": trunc_normal(key, (vocab, d_model), stddev, dtype)}
+
+
+def embed(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dt)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+def apply_norm(kind: str, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(p, x)
+    if kind == "layernorm":
+        return layernorm(p, x)
+    raise ValueError(f"unknown norm {kind}")
+
+
+def init_norm(kind: str, d: int) -> Params:
+    if kind == "rmsnorm":
+        return init_rmsnorm(d)
+    if kind == "layernorm":
+        return init_layernorm(d)
+    raise ValueError(f"unknown norm {kind}")
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) int32 -> cos, sin of shape (..., head_dim // 2)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               *, rotary_dim: Optional[int] = None) -> jnp.ndarray:
+    """x (B, S, H, D); cos/sin (B, S, D'/2) broadcast over heads.
+
+    ``rotary_dim`` < D applies partial rotary (StableLM-2 style: first 25% of
+    head_dim rotated, rest passed through).
+    """
+    d = x.shape[-1]
+    rd = rotary_dim if rotary_dim is not None else d
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    cos = cos[..., None, : rd // 2]
+    sin = sin[..., None, : rd // 2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    y = jnp.concatenate([out1, out2], axis=-1)
+    if rd < d:
+        y = jnp.concatenate([y, xp], axis=-1)
+    return y.astype(x.dtype)
+
+
+def mrope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                  sections: Sequence[int]):
+    """Multimodal RoPE (Qwen2-VL).
+
+    positions: (3, B, S) int32 — temporal / height / width position ids.
+    sections: per-axis sizes in half-dims (e.g. (16, 24, 24); sum = D/2).
+    Each frequency slot takes its angle from the axis assigned by ``sections``
+    (selected with a one-hot mix so it stays a single einsum).
+    Returns cos, sin of shape (B, S, D/2).
+    """
+    assert positions.shape[0] == 3
+    inv = rope_freqs(head_dim, theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv    # (3, B, S, D/2)
+    idx = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])                                                      # (D/2,)
+    onehot = jax.nn.one_hot(idx, 3, dtype=jnp.float32)      # (D/2, 3)
+    mixed = jnp.einsum("absd,da->bsd", ang, onehot)
+    return jnp.cos(mixed), jnp.sin(mixed)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {"silu": silu, "gelu": gelu, "relu": jax.nn.relu}

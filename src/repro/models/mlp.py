@@ -1,0 +1,34 @@
+"""Feed-forward blocks: gated (SwiGLU) and plain MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": cm.init_linear(ks[0], d_model, d_ff),
+        "up": cm.init_linear(ks[1], d_model, d_ff),
+        "down": cm.init_linear(ks[2], d_ff, d_model),
+    }
+
+
+def gated_mlp(p: dict, x: jnp.ndarray, *, act: str = "silu") -> jnp.ndarray:
+    f = cm.ACTIVATIONS[act]
+    return cm.linear(p["down"], f(cm.linear(p["gate"], x)) * cm.linear(p["up"], x))
+
+
+def init_mlp(key, d_model: int, d_ff: int, *, bias: bool = True) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "fc1": cm.init_linear(ks[0], d_model, d_ff, bias=bias),
+        "fc2": cm.init_linear(ks[1], d_ff, d_model, bias=bias),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray, *, act: str = "gelu") -> jnp.ndarray:
+    f = cm.ACTIVATIONS[act]
+    return cm.linear(p["fc2"], f(cm.linear(p["fc1"], x)))

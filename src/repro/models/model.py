@@ -1,0 +1,421 @@
+"""Config-driven backbone assembly.
+
+Public API (uniform across all 10 assigned architectures):
+
+  init_params(cfg, key)                        -> params pytree
+  forward(cfg, params, batch)                  -> {"logits", "value", "aux_loss"}
+  init_cache(cfg, batch, cache_len)            -> cache pytree
+  decode_step(cfg, params, cache, batch, pos)  -> ({"logits", "value"}, cache)
+
+``batch`` is a dict: {"tokens": (B,S) int32} or {"embeds": (B,S,d)} (VLM /
+audio stub), optionally {"positions": (3,B,S)} for M-RoPE and
+{"enc_frames": (B,F,d)} for the Whisper encoder (handled in encdec.py).
+
+Layers whose pattern tiles evenly (and with no Zamba2 shared block) are
+stacked and driven by ``lax.scan`` so an 80-layer model compiles as one loop;
+heterogeneous stacks fall back to a python loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, kind: str, key) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "attn_local"):
+        p = {
+            "ln1": cm.init_norm(cfg.norm, d),
+            "attn": attn.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.hd, qkv_bias=cfg.qkv_bias),
+            "ln2": cm.init_norm(cfg.norm, d),
+        }
+        if cfg.n_experts:
+            p["moe"] = moe_mod.init_moe(ks[1], d, cfg.d_ff_expert,
+                                        cfg.n_experts)
+        elif cfg.d_ff:
+            p["mlp"] = mlp_mod.init_gated_mlp(ks[1], d, cfg.d_ff)
+        return p
+    if kind == "mamba2":
+        return {
+            "ln1": cm.init_norm(cfg.norm, d),
+            "mamba": ssm_mod.init_mamba2(
+                ks[0], d, d_state=cfg.ssm_state, n_heads=cfg.ssm_heads,
+                head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups,
+                conv_width=cfg.ssm_conv_width),
+        }
+    if kind == "mlstm":
+        return {
+            "ln1": cm.init_norm(cfg.norm, d),
+            "mlstm": xlstm_mod.init_mlstm(ks[0], d, n_heads=cfg.n_heads,
+                                          expand=cfg.lstm_expand,
+                                          conv_width=cfg.ssm_conv_width),
+        }
+    if kind == "slstm":
+        return {
+            "ln1": cm.init_norm(cfg.norm, d),
+            "slstm": xlstm_mod.init_slstm(ks[0], d, n_heads=cfg.n_heads),
+        }
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _apply_block_train(cfg: ModelConfig, kind: str, p: Params, x, cos, sin,
+                       aux, backend: str):
+    """One residual block, training (full-sequence) mode."""
+    window = cfg.sliding_window if kind == "attn_local" else None
+    if kind in ("attn", "attn_local"):
+        h = attn.attend_train(p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x),
+                              cos, sin, cfg, window=window, backend=backend)
+        # seq-parallel block outputs: turns the model-axis gradient
+        # all-reduce into a reduce-scatter (Megatron-SP, perf iter #2)
+        x = x + ctx.constrain(h, "residual")
+        y = cm.apply_norm(cfg.norm, p["ln2"], x)
+        if cfg.n_experts:
+            ep = (ctx.current_rules() or {}).get("moe_ep")
+            if ep is not None and y.shape[1] % ep["tp"] == 0:
+                # explicit expert-parallel all-to-all (perf iter #4)
+                from repro.models import moe_ep as moe_ep_mod
+                y, lb = moe_ep_mod.moe_apply_ep(
+                    p["moe"], y, top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor, act=cfg.act,
+                    mesh=ep["mesh"], dp_axes=ep["dp_axes"])
+            else:
+                y, lb = moe_mod.moe_apply(
+                    p["moe"], y, top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor, act=cfg.act)
+            aux = aux + lb
+        else:
+            y = mlp_mod.gated_mlp(p["mlp"], y, act=cfg.act)
+        return x + ctx.constrain(y, "residual"), aux
+    if kind == "mamba2":
+        return x + ctx.constrain(ssm_mod.mamba2_train(
+            p["mamba"], cm.apply_norm(cfg.norm, p["ln1"], x), cfg),
+            "residual"), aux
+    if kind == "mlstm":
+        return x + ctx.constrain(xlstm_mod.mlstm_train(
+            p["mlstm"], cm.apply_norm(cfg.norm, p["ln1"], x), cfg),
+            "residual"), aux
+    if kind == "slstm":
+        return x + ctx.constrain(xlstm_mod.slstm_train(
+            p["slstm"], cm.apply_norm(cfg.norm, p["ln1"], x), cfg),
+            "residual"), aux
+    raise ValueError(kind)
+
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                 dtype) -> Params:
+    if kind == "attn":
+        return attn.init_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.hd,
+                                  dtype)
+    if kind == "attn_local":
+        clen = min(cache_len, cfg.sliding_window or cache_len)
+        return attn.init_kv_cache(batch, clen, cfg.n_kv_heads, cfg.hd, dtype)
+    if kind == "mamba2":
+        return ssm_mod.init_mamba2_state(batch, cfg, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(batch, cfg.d_model, cfg.n_heads,
+                                          expand=cfg.lstm_expand,
+                                          conv_width=cfg.ssm_conv_width)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_state(batch, cfg.d_model, cfg.n_heads)
+    raise ValueError(kind)
+
+
+def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache,
+                        pos, backend: str):
+    window = cfg.sliding_window if kind == "attn_local" else None
+    if kind in ("attn", "attn_local"):
+        cp = (ctx.current_rules() or {}).get("decode_cp")
+        if cp is not None and cache["k"].shape[1] % cp["n_shards"] == 0 \
+                and cache["k"].shape[1] >= cp["n_shards"]:
+            h, cache = attn.attend_decode_cp(
+                p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, pos,
+                cfg, window=window, mesh=cp["mesh"],
+                seq_axes=cp["seq_axes"], dp_axes=cp["dp_axes"],
+                backend=backend)
+        else:
+            h, cache = attn.attend_decode(
+                p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x),
+                cache, pos, cfg, window=window, backend=backend)
+        x = x + h
+        y = cm.apply_norm(cfg.norm, p["ln2"], x)
+        if cfg.n_experts:
+            y, _ = moe_mod.moe_apply(p["moe"], y, top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     act=cfg.act)
+        else:
+            y = mlp_mod.gated_mlp(p["mlp"], y, act=cfg.act)
+        return x + y, cache
+    if kind == "mamba2":
+        h, cache = ssm_mod.mamba2_decode(
+            p["mamba"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, cfg)
+        return x + h, cache
+    if kind == "mlstm":
+        h, cache = xlstm_mod.mlstm_decode(
+            p["mlstm"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, cfg)
+        return x + h, cache
+    if kind == "slstm":
+        h, cache = xlstm_mod.slstm_decode(
+            p["slstm"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, cfg)
+        return x + h, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stacking helpers
+# ---------------------------------------------------------------------------
+
+def _use_scan(cfg: ModelConfig) -> bool:
+    return (cfg.n_layers % len(cfg.block_cycle) == 0
+            and cfg.shared_attn_every == 0
+            and not cfg.is_encdec)
+
+
+def _n_cycles(cfg: ModelConfig) -> int:
+    return cfg.n_layers // len(cfg.block_cycle)
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    if cfg.is_encdec:
+        from repro.models import encdec
+        return encdec.init_params(cfg, key)
+    keys = jax.random.split(key, cfg.n_layers + 5)
+    kinds = cfg.layer_kinds()
+    p: Dict[str, Params] = {
+        "embed": cm.init_embedding(keys[-1], cfg.vocab_size, cfg.d_model),
+        "final_norm": cm.init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.init_linear(keys[-2], cfg.d_model, cfg.vocab_size)
+    if cfg.value_head:
+        p["value_head"] = cm.init_linear(keys[-3], cfg.d_model, 1)
+    if cfg.shared_attn_every:
+        # Zamba2: one shared attention+MLP block reused at every k-th layer
+        p["shared_attn"] = _init_block(
+            cfg, "attn", keys[-4])
+
+    layer_ps = [_init_block(cfg, kinds[i], keys[i])
+                for i in range(cfg.n_layers)]
+    if _use_scan(cfg):
+        cyc = len(cfg.block_cycle)
+        cycles = [tuple(layer_ps[i * cyc + j] for j in range(cyc))
+                  for i in range(_n_cycles(cfg))]
+        p["layers"] = _stack(cycles)
+    else:
+        p["layers"] = layer_ps
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def cast_params(cfg: ModelConfig, params: Params) -> Params:
+    """Mixed precision: cast matrix params to the compute dtype (bf16 on
+    TPU); vectors (norm scales, biases, SSM time constants) stay f32.  Master
+    params and optimizer state remain f32 — this cast sits inside the loss so
+    gradients flow back to the f32 masters."""
+    dt = jnp.dtype(cfg.dtype)
+    if dt == jnp.float32:
+        return params
+
+    def c(x):
+        if hasattr(x, "dtype") and x.dtype == jnp.float32 and x.ndim >= 2:
+            return x.astype(dt)
+        return x
+
+    return jax.tree.map(c, params)
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = cm.embed(params["embed"], batch["tokens"])
+    return x.astype(cfg.dtype)
+
+
+def _rope_tables(cfg: ModelConfig, batch, s: int):
+    if cfg.mrope_sections is not None:
+        pos = batch.get("positions")
+        if pos is None:
+            b = (batch.get("tokens", batch.get("embeds"))).shape[0]
+            pos = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+        return cm.mrope_cos_sin(pos, cfg.hd, cfg.rope_theta,
+                                cfg.mrope_sections)
+    positions = jnp.arange(s)[None]                      # (1, S)
+    return cm.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            *, backend: str = "jnp") -> Dict[str, jnp.ndarray]:
+    params = cast_params(cfg, params)
+    if cfg.is_encdec:
+        from repro.models import encdec
+        return encdec.forward(cfg, params, batch, backend=backend)
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    cos, sin = _rope_tables(cfg, batch, s)
+    aux = jnp.zeros((), jnp.float32)
+    kinds = cfg.layer_kinds()
+
+    if _use_scan(cfg):
+        cyc_kinds = cfg.block_cycle
+
+        def cycle_fn(x, aux, cyc_params):
+            for j, kind in enumerate(cyc_kinds):
+                x, aux = _apply_block_train(cfg, kind, cyc_params[j], x,
+                                            cos, sin, aux, backend)
+            return x, aux
+
+        if cfg.remat:
+            cycle_fn = jax.checkpoint(cycle_fn)
+
+        def body(carry, cyc_params):
+            x, aux = carry
+            x, aux = cycle_fn(x, aux, cyc_params)
+            # sequence-parallel residual stream between cycles (Megatron-SP):
+            # keeps the saved scan carry sharded over the model axis.
+            x = ctx.constrain(x, "residual")
+            return (x, aux), None
+
+        x = ctx.constrain(x, "residual")
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+    else:
+        step_fn = _apply_block_train
+        if cfg.remat:
+            step_fn = jax.checkpoint(_apply_block_train,
+                                     static_argnums=(0, 1, 7))
+        for i, kind in enumerate(kinds):
+            x, aux = step_fn(cfg, kind, params["layers"][i], x, cos, sin,
+                             aux, backend)
+            x = ctx.constrain(x, "residual")
+            if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
+                x, aux = step_fn(cfg, "attn", params["shared_attn"], x,
+                                 cos, sin, aux, backend)
+                x = ctx.constrain(x, "residual")
+
+    x = cm.apply_norm(cfg.norm, params["final_norm"], x)
+    out = {"aux_loss": aux}
+    if cfg.tie_embeddings:
+        out["logits"] = (x @ params["embed"]["table"].T.astype(x.dtype))
+    else:
+        out["logits"] = cm.linear(params["lm_head"], x, dtype=x.dtype)
+    if cfg.value_head:
+        out["value"] = cm.linear(params["value_head"], x)[..., 0] \
+            .astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    if cfg.is_encdec:
+        from repro.models import encdec
+        return encdec.init_cache(cfg, batch, cache_len, dtype)
+    kinds = cfg.layer_kinds()
+    caches = [_block_cache(cfg, k, batch, cache_len, dtype) for k in kinds]
+    cache: Dict[str, Any] = {}
+    if _use_scan(cfg):
+        cyc = len(cfg.block_cycle)
+        per_cycle = [tuple(caches[i * cyc + j] for j in range(cyc))
+                     for i in range(_n_cycles(cfg))]
+        cache["layers"] = _stack(per_cycle)
+    else:
+        cache["layers"] = caches
+    if cfg.shared_attn_every:
+        n_apps = cfg.n_layers // cfg.shared_attn_every
+        cache["shared"] = [
+            _block_cache(cfg, "attn", batch, cache_len, dtype)
+            for _ in range(n_apps)]
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                batch: Dict[str, jnp.ndarray], pos: jnp.ndarray,
+                *, backend: str = "jnp"):
+    """One-token decode.  batch: {"tokens": (B,1)} or {"embeds": (B,1,d)};
+    pos () int32 — current absolute position.  Returns (out, new_cache)."""
+    params = cast_params(cfg, params)
+    if cfg.is_encdec:
+        from repro.models import encdec
+        return encdec.decode_step(cfg, params, cache, batch, pos,
+                                  backend=backend)
+    x = _embed_inputs(cfg, params, batch)
+    kinds = cfg.layer_kinds()
+
+    if _use_scan(cfg):
+        cyc_kinds = cfg.block_cycle
+
+        def body(x, inp):
+            cyc_params, cyc_cache = inp
+            new_caches = []
+            for j, kind in enumerate(cyc_kinds):
+                x, c = _apply_block_decode(cfg, kind, cyc_params[j], x,
+                                           cyc_cache[j], pos, backend)
+                new_caches.append(c)
+            return x, tuple(new_caches)
+
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["layers"], cache["layers"]))
+        cache = dict(cache)
+        cache["layers"] = new_cache
+    else:
+        new_caches = []
+        new_shared = []
+        shared_i = 0
+        for i, kind in enumerate(kinds):
+            x, c = _apply_block_decode(cfg, kind, params["layers"][i], x,
+                                       cache["layers"][i], pos, backend)
+            new_caches.append(c)
+            if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
+                x, cs = _apply_block_decode(cfg, "attn", params["shared_attn"],
+                                            x, cache["shared"][shared_i], pos,
+                                            backend)
+                new_shared.append(cs)
+                shared_i += 1
+        cache = dict(cache)
+        cache["layers"] = new_caches
+        if cfg.shared_attn_every:
+            cache["shared"] = new_shared
+
+    x = cm.apply_norm(cfg.norm, params["final_norm"], x)
+    out = {}
+    if cfg.tie_embeddings:
+        out["logits"] = (x @ params["embed"]["table"].T.astype(x.dtype))
+    else:
+        out["logits"] = cm.linear(params["lm_head"], x, dtype=x.dtype)
+    if cfg.value_head:
+        out["value"] = cm.linear(params["value_head"], x)[..., 0] \
+            .astype(jnp.float32)
+    return out, cache

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) block — TPU-adapted chunkwise-parallel implementation.
+
+The GPU reference implementation of Mamba2 is a fused Triton kernel built
+around warp-level parallel scans.  The TPU adaptation here uses the *chunked*
+SSD decomposition (Dao & Gu 2024, §6): split the sequence into chunks of Q
+steps, compute the within-chunk (quadratic in Q, MXU-friendly einsums) and
+cross-chunk (a short ``lax.scan`` over chunk states) parts separately.  This
+turns the recurrence into large matmuls — exactly what the MXU wants — while
+keeping O(S·Q) compute, i.e. sub-quadratic end-to-end.
+
+Decode is the plain O(1) recurrence ``h <- a*h + dt*B⊗x;  y = C·h + D*x``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init_mamba2(key, d_model: int, *, d_state: int, n_heads: int,
+                head_dim: int, n_groups: int = 1, conv_width: int = 4,
+                expand: int = 2) -> dict:
+    """d_inner = n_heads * head_dim (== expand * d_model by construction)."""
+    d_inner = n_heads * head_dim
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    conv_ch = d_inner + 2 * n_groups * d_state
+    return {
+        "in_proj": cm.init_linear(ks[0], d_model, d_in_proj),
+        "conv_w": cm.trunc_normal(ks[1], (conv_width, conv_ch), 0.2),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (n_heads,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))),
+        "norm": cm.init_rmsnorm(d_inner),
+        "out_proj": cm.init_linear(ks[3], d_inner, d_model),
+    }
+
+
+def _split_in_proj(z_all, d_inner, n_groups, d_state, n_heads):
+    zi = d_inner
+    xi = 2 * d_inner
+    bi = xi + n_groups * d_state
+    ci = bi + n_groups * d_state
+    return (z_all[..., :zi], z_all[..., zi:xi], z_all[..., xi:bi],
+            z_all[..., bi:ci], z_all[..., ci:])
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray = None):
+    """Depthwise causal conv.  x (B, S, C), w (W, C).  Returns (y, new_state)
+    where state holds the last W-1 inputs (for decode)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return y.astype(x.dtype), new_state
+
+
+def ssd_chunked(x, log_a, b, c, *, chunk: int = 256,
+                h0: jnp.ndarray = None):
+    """Chunked SSD scan.
+
+    x     (B, S, H, P)   per-head inputs (already dt-scaled)
+    log_a (B, S, H)      per-step log decay (<= 0)
+    b     (B, S, H, N)   input maps (already dt-free, group-expanded)
+    c     (B, S, H, N)   output maps
+    Returns (y (B,S,H,P), h_last (B,H,N,P)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    def r(t):  # (B, S, ...) -> (B, nc, q, ...)
+        return t.reshape((bsz, nc, q) + t.shape[2:])
+
+    x, log_a, b, c = r(x), r(log_a.astype(jnp.float32)), r(b), r(c)
+    cum = jnp.cumsum(log_a, axis=2)                       # (B,nc,q,H)
+    total = cum[:, :, -1]                                 # (B,nc,H)
+
+    # within-chunk: Y_diag[i] = sum_{j<=i} exp(cum_i - cum_j) (c_i.b_j) x_j
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :])   # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", c, b,
+                    preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", cb * decay, x,
+                        preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) b_j ⊗ x_j
+    w = jnp.exp(total[:, :, None] - cum)                  # (B,nc,q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", b, w, x,
+                        preferred_element_type=jnp.float32)
+
+    # cross-chunk scan over chunk states
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def body(carry, inp):
+        st, tot = inp                                     # (B,H,N,P), (B,H)
+        h_prev = carry
+        h_new = jnp.exp(tot)[:, :, None, None] * h_prev + st
+        return h_new, h_prev
+
+    h_last, h_prevs = jax.lax.scan(
+        body, h0, (states.swapaxes(0, 1), total.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                      # (B,nc,H,N,P)
+
+    # off-chunk contribution: Y_off[i] = c_i . (exp(cum_i) * h_prev_chunk)
+    y_off = jnp.einsum("bcihn,bcih,bchnp->bcihp", c, jnp.exp(cum), h_prevs,
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def mamba2_train(p: dict, xin: jnp.ndarray, cfg) -> jnp.ndarray:
+    """xin (B, S, d_model) -> (B, S, d_model)."""
+    h, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    d_inner = h * pd
+    zxbcdt = cm.linear(p["in_proj"], xin)
+    z, xs, bb, cc, dt = _split_in_proj(zxbcdt, d_inner, g, n, h)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_out = cm.silu(conv_out)
+    xs = conv_out[..., :d_inner]
+    bb = conv_out[..., d_inner:d_inner + g * n]
+    cc = conv_out[..., d_inner + g * n:]
+
+    bsz, s = xin.shape[:2]
+    xs = xs.reshape(bsz, s, h, pd)
+    bb = bb.reshape(bsz, s, g, n)
+    cc = cc.reshape(bsz, s, g, n)
+    rep = h // g
+    bb = jnp.repeat(bb, rep, axis=2)
+    cc = jnp.repeat(cc, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                      # (H,)
+    log_decay = dt * a                                            # (B,S,H)
+    x_dt = xs * dt[..., None].astype(xs.dtype)
+
+    y, _ = ssd_chunked(x_dt, log_decay, bb, cc, chunk=cfg.ssm_chunk)
+    y = y.astype(xin.dtype) + xs * p["D"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner)
+    y = cm.rmsnorm(p["norm"], y * cm.silu(z))
+    return cm.linear(p["out_proj"], y)
+
+
+def init_mamba2_state(batch: int, cfg, dtype=jnp.float32) -> dict:
+    h, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    d_inner = h * pd
+    conv_ch = d_inner + 2 * g * n
+    return {
+        "h": jnp.zeros((batch, h, n, pd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(p: dict, xin: jnp.ndarray, state: dict, cfg):
+    """One-token decode.  xin (B, 1, d_model) -> (y, new_state)."""
+    h, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    d_inner = h * pd
+    zxbcdt = cm.linear(p["in_proj"], xin)
+    z, xs, bb, cc, dt = _split_in_proj(zxbcdt, d_inner, g, n, h)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        state["conv"])
+    conv_out = cm.silu(conv_out)
+    xs = conv_out[..., :d_inner]
+    bb = conv_out[..., d_inner:d_inner + g * n]
+    cc = conv_out[..., d_inner + g * n:]
+
+    bsz = xin.shape[0]
+    xs = xs.reshape(bsz, h, pd)
+    bb = jnp.repeat(bb.reshape(bsz, g, n), h // g, axis=1)
+    cc = jnp.repeat(cc.reshape(bsz, g, n), h // g, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                             # (B,H)
+
+    hh = state["h"]
+    hh = a[:, :, None, None] * hh + jnp.einsum(
+        "bhn,bh,bhp->bhnp", bb.astype(jnp.float32), dt,
+        xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", cc.astype(jnp.float32), hh)
+    y = y.astype(xin.dtype) + xs * p["D"].astype(xs.dtype)[None, :, None]
+    y = y.reshape(bsz, 1, d_inner)
+    y = cm.rmsnorm(p["norm"], y * cm.silu(z))
+    return cm.linear(p["out_proj"], y), {"h": hh, "conv": conv_state}

@@ -1,0 +1,289 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with true recurrence), per Beck et al. 2024 (arXiv:2405.04517).
+
+TPU adaptation: the mLSTM training pass uses the same chunkwise decomposition
+as our Mamba2 SSD path — exponential gating with a running stabilizer maps to
+log-space decays, the within-chunk part is MXU einsums, the cross-chunk part
+is a short ``lax.scan`` over (C, n, m) chunk states.  sLSTM has a genuine
+step-to-step nonlinearity (recurrent R @ h_{t-1} inside the gates), so it
+cannot be chunk-parallelized — it runs as ``lax.scan`` over time, which is
+exactly the recurrent-agent setting of the A3C paper (their LSTM agents).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, *, n_heads: int, expand: int = 2,
+               conv_width: int = 4) -> dict:
+    d_inner = expand * d_model
+    hd = d_inner // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_x": cm.init_linear(ks[0], d_model, d_inner),
+        "up_z": cm.init_linear(ks[1], d_model, d_inner),
+        "conv_w": cm.trunc_normal(ks[2], (conv_width, d_inner), 0.2),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "wq": cm.init_linear(ks[3], d_inner, d_inner),
+        "wk": cm.init_linear(ks[4], d_inner, d_inner),
+        "wv": cm.init_linear(ks[5], d_inner, d_inner),
+        "w_i": cm.init_linear(ks[6], d_inner, n_heads, bias=True),
+        "w_f": cm.init_linear(ks[7], d_inner, n_heads, bias=True),
+        "norm": cm.init_rmsnorm(d_inner),   # stand-in for per-head groupnorm
+        "down": cm.init_linear(jax.random.fold_in(key, 99), d_inner, d_model),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, *, chunk: int, state=None):
+    """Chunkwise mLSTM with exponential-gating stabilizer.
+
+    q,k,v (B,S,H,D); log_f,log_i (B,S,H).  Returns (y, (C,n,m) final).
+    Math (xLSTM eq. 19-27): C_t = f_t C_{t-1} + i_t v_t k_t^T,
+    n_t = f_t n_{t-1} + i_t k_t, y_t = C_t q_t / max(|n_t.q_t|, 1), with all
+    gates stabilized by m_t = max(log f_t + m_{t-1}, log i_t).
+    """
+    bsz, s, h, d = q.shape
+    qc = min(chunk, s)
+    assert s % qc == 0
+    nc = s // qc
+
+    def r(t):
+        return t.reshape((bsz, nc, qc) + t.shape[2:])
+
+    q, k, v = r(q), r(k), r(v)
+    log_f = r(log_f.astype(jnp.float32))
+    log_i = r(log_i.astype(jnp.float32))
+    cum_f = jnp.cumsum(log_f, axis=2)                    # (B,nc,q,H)
+    total_f = cum_f[:, :, -1]                            # (B,nc,H)
+
+    # within-chunk attention-like term with decay exp(cum_i - cum_j + log_i_j)
+    logw = (cum_f[:, :, :, None] - cum_f[:, :, None, :]
+            + log_i[:, :, None, :, :])                   # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((qc, qc), bool))
+    logw = jnp.where(mask[None, None, :, :, None], logw, -jnp.inf)
+    # local stabilizer: row max of logw (i.e. max over j)
+    m_loc = jnp.max(logw, axis=3)                        # (B,nc,i,H)
+
+    # chunk-state contributions: weight exp(total_f - cum_f_j + log_i_j)
+    logs = total_f[:, :, None] - cum_f + log_i           # (B,nc,j,H)
+
+    scale = d ** -0.5
+    qk = jnp.einsum("bcihd,bcjhd->bcijh", q, k,
+                    preferred_element_type=jnp.float32) * scale
+
+    if state is None:
+        c0 = jnp.zeros((bsz, h, d, d), jnp.float32)
+        n0 = jnp.zeros((bsz, h, d), jnp.float32)
+        m0 = jnp.full((bsz, h), -1e30)
+    else:
+        c0, n0, m0 = state
+
+    # scan over chunks; each step consumes one chunk's tensors
+    cum_f_sw = jnp.moveaxis(cum_f, 1, 0)                 # (nc,B,q,H)
+    total_sw = jnp.moveaxis(total_f, 1, 0)
+    q_sw = jnp.moveaxis(q, 1, 0)
+    v_sw = jnp.moveaxis(v, 1, 0)
+    k_sw = jnp.moveaxis(k, 1, 0)
+    qk_sw = jnp.moveaxis(qk, 1, 0)                       # (nc,B,i,j,H)
+    logw_sw = jnp.moveaxis(logw, 1, 0)
+    logs_sw = jnp.moveaxis(logs, 1, 0)
+    m_loc_sw = jnp.moveaxis(m_loc, 1, 0)
+
+    def step(carry, inp):
+        c_prev, n_prev, m_prev = carry                   # (B,H,D,D),(B,H,D),(B,H)
+        qi, ki, vi, qki, logwi, logsi, cumfi, toti, mloci = inp
+        # stabilizer per row i: max(inherited m decayed, local max)
+        m_inh = m_prev[:, None, :] + cumfi               # (B,i,H)
+        m_row = jnp.maximum(m_inh, mloci)                # (B,i,H)
+        # within-chunk weights, stabilized
+        w_loc = jnp.exp(logwi - m_row[:, :, None, :])    # (B,i,j,H)
+        # inherited contribution, stabilized
+        w_inh = jnp.exp(m_inh - m_row)                   # (B,i,H)
+        num_loc = jnp.einsum("bijh,bijh,bjhd->bihd", qki, w_loc, vi)
+        # C is stored (v-index d, k-index e): contract q against the k index
+        num_inh = jnp.einsum("bihe,bhde->bihd", qi * w_inh[..., None] *
+                             (qi.shape[-1] ** -0.5), c_prev)
+        # denominator: n_t . q_t with same stabilization
+        nq_loc = jnp.einsum("bijh,bijh->bih", qki, w_loc)
+        nq_inh = jnp.einsum("bihd,bhd->bih", qi * (qi.shape[-1] ** -0.5),
+                            n_prev) * w_inh
+        den = jnp.maximum(jnp.abs(nq_loc + nq_inh), jnp.exp(-m_row))
+        y = (num_loc + num_inh) / den[..., None]
+        # chunk-state update (stabilized by new m at chunk end)
+        m_end = jnp.maximum(m_prev + toti, jnp.max(logsi + 0.0, axis=1))
+        s_w = jnp.exp(logsi - m_end[:, None, :])         # (B,j,H)
+        c_new = (jnp.exp(m_prev + toti - m_end)[:, :, None, None] * c_prev
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", s_w, vi, ki))
+        n_new = (jnp.exp(m_prev + toti - m_end)[:, :, None] * n_prev
+                 + jnp.einsum("bjh,bjhd->bhd", s_w, ki))
+        return (c_new, n_new, m_end), y
+
+    (c_f, n_f, m_f), ys = jax.lax.scan(
+        step, (c0, n0, m0),
+        (q_sw, k_sw, v_sw, qk_sw, logw_sw, logs_sw, cum_f_sw, total_sw,
+         m_loc_sw))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, d)
+    return y, (c_f, n_f, m_f)
+
+
+def mlstm_train(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x (B, S, d_model) -> (B, S, d_model)."""
+    bsz, s, _ = x.shape
+    h = cfg.n_heads
+    xi = cm.linear(p["up_x"], x)
+    z = cm.linear(p["up_z"], x)
+    xc, _ = _causal_conv_x(xi, p["conv_w"], p["conv_b"])
+    xc = cm.silu(xc)
+    d_inner = xi.shape[-1]
+    hd = d_inner // h
+    q = cm.linear(p["wq"], xc).reshape(bsz, s, h, hd)
+    k = cm.linear(p["wk"], xc).reshape(bsz, s, h, hd)
+    v = cm.linear(p["wv"], xi).reshape(bsz, s, h, hd)
+    log_i = cm.linear(p["w_i"], xc).astype(jnp.float32)            # (B,S,H)
+    log_f = jax.nn.log_sigmoid(cm.linear(p["w_f"], xc).astype(jnp.float32))
+    y, _ = _mlstm_chunked(q, k, v, log_f, log_i, chunk=cfg.ssm_chunk)
+    y = y.astype(x.dtype).reshape(bsz, s, d_inner)
+    y = cm.rmsnorm(p["norm"], y) * cm.silu(z)
+    return cm.linear(p["down"], y)
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int, *,
+                     expand: int = 2, conv_width: int = 4) -> dict:
+    d_inner = expand * d_model
+    hd = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30),
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), jnp.float32),
+    }
+
+
+def mlstm_decode(p: dict, x: jnp.ndarray, state: dict, cfg):
+    """One-token decode.  x (B, 1, d_model)."""
+    bsz = x.shape[0]
+    h = cfg.n_heads
+    xi = cm.linear(p["up_x"], x)
+    z = cm.linear(p["up_z"], x)
+    xc, conv_state = _causal_conv_x(xi, p["conv_w"], p["conv_b"],
+                                    state["conv"])
+    xc = cm.silu(xc)
+    d_inner = xi.shape[-1]
+    hd = d_inner // h
+    q = cm.linear(p["wq"], xc).reshape(bsz, h, hd).astype(jnp.float32)
+    k = cm.linear(p["wk"], xc).reshape(bsz, h, hd).astype(jnp.float32)
+    v = cm.linear(p["wv"], xi).reshape(bsz, h, hd).astype(jnp.float32)
+    log_i = cm.linear(p["w_i"], xc)[:, 0].astype(jnp.float32)      # (B,H)
+    log_f = jax.nn.log_sigmoid(cm.linear(p["w_f"], xc))[:, 0].astype(jnp.float32)
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    c_new = f_s[:, :, None, None] * state["C"] + \
+        i_s[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", v, k)
+    n_new = f_s[:, :, None] * state["n"] + i_s[:, :, None] * k
+    scale = hd ** -0.5
+    num = jnp.einsum("bhde,bhe->bhd", c_new, q * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q * scale)),
+                      jnp.exp(-m_new))
+    y = (num / den[:, :, None]).astype(x.dtype).reshape(bsz, 1, d_inner)
+    y = cm.rmsnorm(p["norm"], y) * cm.silu(z)
+    out = cm.linear(p["down"], y)
+    return out, {"C": c_new, "n": n_new, "m": m_new, "conv": conv_state}
+
+
+def _causal_conv_x(x, w, b, state=None):
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width)) + b
+    return y.astype(x.dtype), xp[:, -(width - 1):]
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, *, n_heads: int, ff_factor: float = 4 / 3
+               ) -> dict:
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    d_ff = int(ff_factor * d_model)
+    # round d_ff to a multiple of 64 for TPU-friendly shapes
+    d_ff = max(64, (d_ff // 64) * 64)
+    return {
+        "w_in": cm.init_linear(ks[0], d_model, 4 * d_model, bias=True),
+        # block-diagonal recurrent weights, one (hd, 4*hd) block per head
+        "r": cm.trunc_normal(ks[1], (n_heads, hd, 4 * hd), 1.0 / hd ** 0.5),
+        "norm": cm.init_rmsnorm(d_model),
+        "ff_gate": cm.init_linear(ks[2], d_model, d_ff),
+        "ff_up": cm.init_linear(ks[3], d_model, d_ff),
+        "ff_down": cm.init_linear(ks[4], d_ff, d_model),
+    }
+
+
+def init_slstm_state(batch: int, d_model: int, n_heads: int) -> dict:
+    hd = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones_like(z),
+            "m": jnp.zeros((batch, n_heads, hd), jnp.float32)}
+
+
+def _slstm_step(p, state, xt, n_heads):
+    """xt (B, 4*d_model) preactivations from input; recurrent part added here."""
+    bsz = xt.shape[0]
+    hd = state["h"].shape[-1]
+    rec = jnp.einsum("bhd,hde->bhe", state["h"], p["r"])    # (B,H,4*hd)
+    pre = xt.reshape(bsz, n_heads, 4 * hd).astype(jnp.float32) + rec
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)             # (B,H,hd) each
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    # exponential input gate + sigmoid-ish forget gate w/ stabilizer m
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + state["m"], ii)
+    i_s = jnp.exp(ii - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_s * state["c"] + i_s * zt
+    n_new = f_s * state["n"] + i_s
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_train(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """True recurrence: lax.scan over time.  x (B, S, d)."""
+    bsz, s, d = x.shape
+    n_heads = cfg.n_heads
+    pre = cm.linear(p["w_in"], x)                           # (B,S,4d)
+    state0 = init_slstm_state(bsz, d, n_heads)
+
+    def step(st, xt):
+        st2 = _slstm_step(p, st, xt, n_heads)
+        return st2, st2["h"]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, d).astype(x.dtype)
+    y = cm.rmsnorm(p["norm"], y)
+    ff = cm.linear(p["ff_down"],
+                   cm.gelu(cm.linear(p["ff_gate"], y)) * cm.linear(p["ff_up"], y))
+    return ff
+
+
+def slstm_decode(p: dict, x: jnp.ndarray, state: dict, cfg):
+    bsz, _, d = x.shape
+    pre = cm.linear(p["w_in"], x)[:, 0]
+    st2 = _slstm_step(p, state, pre, cfg.n_heads)
+    y = st2["h"].reshape(bsz, 1, d).astype(x.dtype)
+    y = cm.rmsnorm(p["norm"], y)
+    ff = cm.linear(p["ff_down"],
+                   cm.gelu(cm.linear(p["ff_gate"], y)) * cm.linear(p["ff_up"], y))
+    return ff, st2

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import OPTIMIZERS, apply_updates  # noqa: F401
+from repro.optim import schedules  # noqa: F401

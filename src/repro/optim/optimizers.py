@@ -1,0 +1,91 @@
+"""The paper's three optimizers (§4.5), as pure functional updates.
+
+  * shared_rmsprop — non-centered RMSProp whose second-moment accumulator g
+    is SHARED across actor-learners (Eq. 8–9).  The paper's key optimizer
+    finding (Fig. 8): sharing g greatly improves robustness.
+  * rmsprop        — identical math, but g is per-worker (the runner carries
+    one state per worker, i.e. vmapped).
+  * momentum_sgd   — per-worker momentum vector m_i = α m_i + (1-α) Δθ.
+
+API: ``opt.init(params) -> state``; ``opt.update(grads, state, lr) ->
+(updates, state)``; apply with ``apply_updates(params, updates)``.  Updates
+are *subtracted* (gradient descent).  The fused Pallas kernel in
+repro.kernels.shared_rmsprop implements the same elementwise math one HBM
+pass; ``shared_rmsprop(fused=True)`` routes through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    update: Callable[..., Tuple[Params, Any]]  # (grads, state, lr) -> ...
+
+
+def shared_rmsprop(*, alpha: float = 0.99, eps: float = 0.1,
+                   fused: bool = False) -> Optimizer:
+    def init(params):
+        return {"g": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, lr):
+        if fused:
+            from repro.kernels import ops as kops
+
+            def upd(g_acc, dg):
+                return kops.rmsprop_update(g_acc, dg, lr=lr, alpha=alpha,
+                                           eps=eps)
+            out = jax.tree.map(upd, state["g"], grads)
+            new_g = jax.tree.map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            updates = jax.tree.map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+            return updates, {"g": new_g}
+        new_g = jax.tree.map(
+            lambda g, dg: alpha * g + (1 - alpha) * jnp.square(dg),
+            state["g"], grads)
+        updates = jax.tree.map(
+            lambda dg, g: lr * dg / jnp.sqrt(g + eps), grads, new_g)
+        return updates, {"g": new_g}
+
+    return Optimizer("shared_rmsprop", init, update)
+
+
+# per-worker RMSProp is the same math; the distinction (shared vs per-worker
+# accumulator) lives in the async runner, which either carries ONE state or
+# one state PER worker.
+def rmsprop(**kw) -> Optimizer:
+    opt = shared_rmsprop(**kw)
+    return dataclasses.replace(opt, name="rmsprop")
+
+
+def momentum_sgd(*, alpha: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, lr):
+        new_m = jax.tree.map(lambda m, dg: alpha * m + (1 - alpha) * dg,
+                             state["m"], grads)
+        updates = jax.tree.map(lambda m: lr * m, new_m)
+        return updates, {"m": new_m}
+
+    return Optimizer("momentum_sgd", init, update)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p - u).astype(p.dtype), params, updates)
+
+
+OPTIMIZERS = {
+    "shared_rmsprop": shared_rmsprop,
+    "rmsprop": rmsprop,
+    "momentum_sgd": momentum_sgd,
+}

@@ -1,0 +1,38 @@
+"""Learning-rate schedules and per-worker hyperparameter sampling.
+
+The paper anneals lr linearly to 0 over training and samples the initial lr
+per experiment from LogUniform(1e-4, 1e-2) (§5.1).  MiniCPM's WSD
+(warmup-stable-decay) schedule is included because the assigned minicpm-2b
+config cites it as the model's training-recipe signature.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_anneal(lr0, step, total_steps):
+    frac = jnp.clip(1.0 - step / total_steps, 0.0, 1.0)
+    return lr0 * frac
+
+
+def log_uniform(key, lo: float = 1e-4, hi: float = 1e-2, shape=()):
+    u = jax.random.uniform(key, shape)
+    return jnp.exp(jnp.log(lo) + u * (jnp.log(hi) - jnp.log(lo)))
+
+
+def wsd(lr0, step, total_steps, *, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, floor: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395 §4)."""
+    warm = warmup_frac * total_steps
+    decay_start = (1.0 - decay_frac) * total_steps
+    warm_lr = lr0 * step / jnp.maximum(warm, 1)
+    decay_t = (step - decay_start) / jnp.maximum(total_steps - decay_start, 1)
+    decay_lr = lr0 * (floor ** jnp.clip(decay_t, 0.0, 1.0))
+    return jnp.where(step < warm, warm_lr,
+                     jnp.where(step < decay_start, lr0, decay_lr))
+
+
+SCHEDULES = {"linear": linear_anneal, "wsd": wsd,
+             "constant": lambda lr0, step, total: lr0 * jnp.ones_like(step,
+                                                                      jnp.float32)}

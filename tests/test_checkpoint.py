@@ -1,0 +1,15 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3)),
+                                        "d": jnp.asarray(3)}}
+    path = str(tmp_path / "ckpt.npz")
+    checkpoint.save(path, tree)
+    out = checkpoint.restore(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

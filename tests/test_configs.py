@@ -1,0 +1,66 @@
+"""Pin every assigned architecture config to its exact assigned spec."""
+import pytest
+
+from repro.configs import ALIASES, get_config
+
+SPEC = {
+    # arch: (L, d_model, H, kv, d_ff, vocab, family)
+    "qwen2-72b": (80, 8192, 64, 8, 29568, 152064, "dense"),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753, "dense"),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000, "dense"),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155, "moe"),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865, "audio"),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000, "hybrid"),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304, "ssm"),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048, "moe"),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064, "vlm"),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352, "dense"),
+}
+
+
+@pytest.mark.parametrize("arch", list(SPEC))
+def test_exact_assigned_config(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, dff, v, fam = SPEC[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert (cfg.d_ff or cfg.d_ff_expert) == dff
+    assert cfg.vocab_size == v
+    assert cfg.family == fam
+    assert cfg.source  # citation present
+
+
+def test_moe_specifics():
+    g = get_config("granite-moe-1b-a400m")
+    assert g.n_experts == 32 and g.top_k == 8
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.n_experts == 16 and l4.top_k == 1
+    assert l4.block_cycle.count("attn_local") == 3  # iRoPE 3:1
+
+
+def test_qwen2_qkv_bias_and_mrope():
+    assert get_config("qwen2-72b").qkv_bias
+    assert get_config("qwen2-vl-72b").mrope_sections == (16, 24, 24)
+
+
+def test_zamba2_hybrid_structure():
+    z = get_config("zamba2-1.2b")
+    assert z.shared_attn_every == 6 and z.ssm_state == 64
+
+
+def test_stablelm_partial_rotary():
+    assert get_config("stablelm-1.6b").rotary_dim == 16  # 25% of hd 64
+
+
+def test_whisper_encdec():
+    w = get_config("whisper-base")
+    assert w.is_encdec and w.encoder_layers == 6 and w.encoder_seq == 1500
+
+
+def test_all_archs_have_reduced_variants():
+    for arch in ALIASES:
+        r = get_config(arch).reduced()
+        assert r.n_layers <= 4 and r.d_model <= 512
+        assert r.n_experts <= 4

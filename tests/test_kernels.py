@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d,window,causal",
+    [
+        (2, 256, 4, 1, 64, None, True),
+        (1, 512, 8, 2, 64, None, True),
+        (2, 512, 4, 4, 128, 128, True),
+        (1, 256, 2, 2, 64, None, False),
+        (1, 1024, 8, 8, 64, 256, True),
+    ])
+def test_flash_attention_sweep(b, s, hq, hkv, d, window, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,length,hq,hkv,d,frac",
+    [
+        (2, 512, 4, 1, 64, 0.5),
+        (1, 1024, 8, 2, 128, 0.9),
+        (2, 256, 4, 4, 64, 0.1),
+        (1, 2048, 16, 2, 64, 1.0),
+    ])
+def test_decode_attention_sweep(b, length, hq, hkv, d, frac, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    kc = jax.random.normal(ks[1], (b, length, hkv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, length, hkv, d), dtype)
+    pos = jnp.array(int(frac * (length - 1)), jnp.int32)
+    kpos = jnp.where(jnp.arange(length) <= pos, jnp.arange(length), -1)
+    out = ops.decode_attention(q, kc, vc, kpos, pos)
+    want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_attention_ring_cache():
+    """Ring-buffer (sliding window) cache: slots hold rotated positions."""
+    b, length, h, d = 1, 256, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, length, h, d))
+    vc = jax.random.normal(ks[2], (b, length, h, d))
+    pos = jnp.array(1000, jnp.int32)   # far beyond cache_len
+    idx = jnp.arange(length)
+    cand = pos - (pos % length) + idx
+    kpos = jnp.where(cand > pos, cand - length, cand)
+    out = ops.decode_attention(q, kc, vc, kpos, pos)
+    want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000,), (128, 128), (7, 321),
+                                   (3, 5, 7)])
+@pytest.mark.parametrize("lr", [1e-4, 1e-2])
+def test_rmsprop_kernel_sweep(shape, lr):
+    ks = jax.random.split(KEY, 2)
+    g = jnp.abs(jax.random.normal(ks[0], shape))
+    dg = jax.random.normal(ks[1], shape)
+    new_g, upd = ops.rmsprop_update(g, dg, lr=lr)
+    ng_ref, upd_ref = ref.rmsprop_update_ref(g, dg, lr=lr)
+    np.testing.assert_allclose(new_g, ng_ref, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(upd, upd_ref, rtol=1e-5, atol=1e-9)
+
+
+def test_flash_jnp_blockwise_matches_kernel():
+    """The three implementations (naive, blockwise-jnp, Pallas) agree."""
+    from repro.models.flash_jnp import flash_attention_jnp
+    ks = jax.random.split(KEY, 3)
+    b, s, hq, hkv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True)
+    o_jnp = flash_attention_jnp(q, k, v, True, None, 128)
+    o_pl = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(o_jnp, o_ref, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(o_pl, o_ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (2, 16, 256), (64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_sweep(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    scale = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],))
+    out = ops.rmsnorm(x, scale)
+    want = ref.rmsnorm_ref(x, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)

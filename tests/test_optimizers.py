@@ -1,0 +1,72 @@
+"""Optimizer tests: paper Eq. 8-9 math, fused-kernel equivalence, and
+hypothesis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import optimizers as opt_mod
+
+
+def _tree():
+    return {"a": jnp.array([1.0, -2.0, 3.0]),
+            "b": {"w": jnp.ones((4, 5)) * 0.5}}
+
+
+def test_shared_rmsprop_formula():
+    opt = opt_mod.shared_rmsprop(alpha=0.9, eps=0.1)
+    params = _tree()
+    state = opt.init(params)
+    grads = jax.tree.map(lambda p: 2.0 * jnp.ones_like(p), params)
+    updates, state = opt.update(grads, state, 0.01)
+    g_expect = 0.1 * 4.0  # alpha*0 + (1-alpha)*g^2
+    np.testing.assert_allclose(state["g"]["a"], g_expect, rtol=1e-6)
+    np.testing.assert_allclose(
+        updates["a"], 0.01 * 2.0 / np.sqrt(g_expect + 0.1), rtol=1e-6)
+
+
+def test_fused_matches_unfused():
+    params = {"w": jnp.asarray(np.random.RandomState(0)
+                               .randn(64, 40).astype(np.float32))}
+    grads = {"w": jnp.asarray(np.random.RandomState(1)
+                              .randn(64, 40).astype(np.float32))}
+    o1 = opt_mod.shared_rmsprop()
+    o2 = opt_mod.shared_rmsprop(fused=True)
+    s1, s2 = o1.init(params), o2.init(params)
+    u1, s1 = o1.update(grads, s1, 1e-3)
+    u2, s2 = o2.update(grads, s2, 1e-3)
+    np.testing.assert_allclose(u1["w"], u2["w"], rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(s1["g"]["w"], s2["g"]["w"], rtol=1e-5)
+
+
+def test_momentum_sgd():
+    opt = opt_mod.momentum_sgd(alpha=0.5)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"w": jnp.ones(3)}
+    u1, state = opt.update(g, state, 1.0)
+    np.testing.assert_allclose(u1["w"], 0.5)          # (1-a)*g
+    u2, state = opt.update(g, state, 1.0)
+    np.testing.assert_allclose(u2["w"], 0.75)         # a*m + (1-a)*g
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 5))
+def test_g_stays_nonnegative_and_update_sign(seed, steps):
+    """Invariants: the second-moment accumulator is nonnegative; updates
+    have the sign of the gradient (descent direction)."""
+    rng = np.random.RandomState(seed)
+    opt = opt_mod.shared_rmsprop()
+    params = {"w": jnp.zeros(16)}
+    state = opt.init(params)
+    for _ in range(steps):
+        g = {"w": jnp.asarray(rng.randn(16).astype(np.float32))}
+        updates, state = opt.update(g, state, 1e-2)
+        assert bool(jnp.all(state["g"]["w"] >= 0))
+        assert bool(jnp.all(jnp.sign(updates["w"]) == jnp.sign(g["w"])))
+
+
+def test_apply_updates_subtracts():
+    params = {"w": jnp.ones(3)}
+    out = opt_mod.apply_updates(params, {"w": jnp.full((3,), 0.25)})
+    np.testing.assert_allclose(out["w"], 0.75)

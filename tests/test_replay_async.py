@@ -1,0 +1,41 @@
+"""Beyond-paper: replay mixed into the async framework (paper Conclusions)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import agents, replay_async
+from repro.envs import make
+from repro.envs.api import flatten_obs
+from repro.models import atari as nets
+
+
+def test_replay_async_runs_and_fills_buffers():
+    env = flatten_obs(make("catch"))
+    algo = agents.ALGORITHMS["n_step_q"]()
+    params = nets.init_mlp_agent_params(jax.random.key(0),
+                                        env.obs_shape[0], env.n_actions,
+                                        hidden=32)
+    cfg = replay_async.ReplayAsyncConfig(n_workers=4, t_max=5,
+                                         buffer_size=64, replay_batch=8,
+                                         warmup=16)
+    init_state, round_fn = replay_async.make_replay_runner(
+        algo, env, params, cfg)
+    st = init_state(jax.random.key(1))
+    for _ in range(8):
+        st, m = round_fn(st)
+    assert int(st["filled"][0]) == 40
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_gae_a3c_option():
+    env = flatten_obs(make("catch"))
+    from repro.core.rollout import init_worker, rollout_segment
+    for lam in (0.0, 0.95):
+        algo = agents.ALGORITHMS["a3c"](gae_lambda=lam)
+        params = nets.init_mlp_agent_params(jax.random.key(0),
+                                            env.obs_shape[0],
+                                            env.n_actions, hidden=16)
+        w = init_worker(env, jax.random.key(2))
+        _, traj = rollout_segment(
+            lambda o, n, k: algo.act(params, o, n, k, 0.1), env, w, 5)
+        loss, _ = algo.segment_loss(params, None, traj)
+        assert bool(jnp.isfinite(loss))

@@ -1,0 +1,75 @@
+"""n-step return tests: unit + hypothesis properties against the O(T^2)
+oracle (paper Alg. 2/3 forward-view recursion)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.returns import (gae_advantages, n_step_returns,
+                                n_step_returns_ref)
+
+
+def test_matches_hand_computed():
+    r = jnp.array([1.0, 0.0, 2.0])
+    d = jnp.array([0.9, 0.9, 0.9])
+    boot = jnp.array(10.0)
+    # R2 = 2 + .9*10 = 11; R1 = 0 + .9*11 = 9.9; R0 = 1 + .9*9.9 = 9.91
+    out = n_step_returns(r, d, boot)
+    np.testing.assert_allclose(out, [9.91, 9.9, 11.0], rtol=1e-6)
+
+
+def test_terminal_cuts_bootstrap():
+    r = jnp.array([0.0, 1.0])
+    d = jnp.array([0.9, 0.0])    # step 1 terminal
+    out = n_step_returns(r, d, jnp.array(100.0))
+    np.testing.assert_allclose(out, [0.9, 1.0], rtol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    t=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+    gamma=st.floats(0.0, 1.0),
+)
+def test_matches_oracle(t, seed, gamma):
+    rng = np.random.RandomState(seed)
+    r = jnp.asarray(rng.randn(t).astype(np.float32))
+    done = jnp.asarray(rng.rand(t) < 0.3)
+    d = gamma * (1.0 - done.astype(jnp.float32))
+    boot = jnp.asarray(rng.randn())
+    fast = n_step_returns(r, d, boot)
+    slow = n_step_returns_ref(r, d, boot)
+    np.testing.assert_allclose(fast, slow, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=st.integers(1, 10), seed=st.integers(0, 2**31 - 1))
+def test_recursion_identity(t, seed):
+    """returns[i] == r[i] + d[i] * returns[i+1] — the defining recursion."""
+    rng = np.random.RandomState(seed)
+    r = jnp.asarray(rng.randn(t).astype(np.float32))
+    d = jnp.asarray((0.9 * (rng.rand(t) > 0.2)).astype(np.float32))
+    boot = jnp.asarray(rng.randn())
+    rets = n_step_returns(r, d, boot)
+    nxt = jnp.concatenate([rets[1:], boot[None]])
+    np.testing.assert_allclose(rets, r + d * nxt, rtol=1e-5, atol=1e-5)
+
+
+def test_gae_lambda1_equals_nstep_advantage():
+    """GAE(lambda=1) == n-step returns - values."""
+    rng = np.random.RandomState(0)
+    t = 8
+    r = jnp.asarray(rng.randn(t).astype(np.float32))
+    d = jnp.full((t,), 0.95)
+    v = jnp.asarray(rng.randn(t).astype(np.float32))
+    boot = jnp.asarray(rng.randn())
+    adv, rets = gae_advantages(r, d, v, boot, lam=1.0)
+    expect = n_step_returns(r, d, boot) - v
+    np.testing.assert_allclose(adv, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_batched_shapes():
+    r = jnp.zeros((5, 7))
+    d = jnp.ones((5, 7))
+    boot = jnp.zeros((7,))
+    assert n_step_returns(r, d, boot).shape == (5, 7)

@@ -1,0 +1,43 @@
+"""LR schedules: paper's linear anneal + LogUniform sampling, MiniCPM WSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import schedules
+
+
+def test_linear_anneal_endpoints():
+    np.testing.assert_allclose(
+        float(schedules.linear_anneal(1e-2, jnp.asarray(0.0), 100.0)),
+        1e-2, rtol=1e-6)
+    np.testing.assert_allclose(
+        float(schedules.linear_anneal(1e-2, jnp.asarray(100.0), 100.0)),
+        0.0, atol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_log_uniform_in_paper_range(seed):
+    lr = float(schedules.log_uniform(jax.random.key(seed)))
+    assert 1e-4 <= lr <= 1e-2
+
+
+def test_log_uniform_is_log_uniform():
+    lrs = schedules.log_uniform(jax.random.key(0), shape=(20_000,))
+    logs = np.log(np.asarray(lrs))
+    # roughly uniform in log space: thirds have similar counts
+    lo, hi = np.log(1e-4), np.log(1e-2)
+    edges = np.linspace(lo, hi, 4)
+    counts = np.histogram(logs, edges)[0]
+    assert counts.min() > 0.8 * counts.max()
+
+
+def test_wsd_phases():
+    lr0, total = 1e-3, 1000.0
+    warm = float(schedules.wsd(lr0, jnp.asarray(5.0), total))
+    stable = float(schedules.wsd(lr0, jnp.asarray(500.0), total))
+    decay = float(schedules.wsd(lr0, jnp.asarray(990.0), total))
+    assert warm < stable
+    assert abs(stable - lr0) < 1e-9
+    assert decay < stable

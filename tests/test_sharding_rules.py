@@ -1,0 +1,82 @@
+"""Sharding-rule unit tests using an abstract 16x16 mesh (no devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding
+from repro.launch import specs as specs_mod
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _spec_of(shard):
+    return tuple(shard.spec)
+
+
+def test_param_rules_dense():
+    cfg = get_config("qwen2-72b")
+    p_specs = specs_mod.params_specs(cfg)
+    shards = sharding.param_shardings(cfg, MESH, p_specs)
+    flat = {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path): s
+            for path, s in jax.tree_util.tree_flatten_with_path(shards)[0]}
+    # scanned layers: leading stack dim unsharded, (F, M) layout for wq
+    wq = next(v for k, v in flat.items() if k.endswith("attn/wq/w"))
+    assert _spec_of(wq) == (None, "data", "model")
+    wo = next(v for k, v in flat.items() if k.endswith("attn/wo/w"))
+    assert _spec_of(wo) == (None, "model", "data")
+    emb = next(v for k, v in flat.items() if "embed/table" in k)
+    assert _spec_of(emb) == ("model", "data")
+
+
+def test_odd_vocab_drops_model_axis():
+    cfg = get_config("minicpm-2b")    # vocab 122753 (odd)
+    p_specs = specs_mod.params_specs(cfg)
+    shards = sharding.param_shardings(cfg, MESH, p_specs)
+    flat = {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path): s
+            for path, s in jax.tree_util.tree_flatten_with_path(shards)[0]}
+    emb = next(v for k, v in flat.items() if "embed/table" in k)
+    spec = _spec_of(emb)
+    assert spec[0] is None            # vocab axis dropped (not divisible)
+
+
+def test_batch_shardings_multi_pod():
+    tree = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((3, 256, 128), jnp.int32)}
+    shards = sharding.batch_shardings(MESH3, tree, batch_size=256)
+    assert tuple(shards["tokens"].spec)[0] == ("pod", "data")
+    assert tuple(shards["positions"].spec) == (None, ("pod", "data"), None)
+
+
+def test_cache_shardings_batch1_context_parallel():
+    cfg = get_config("qwen2-72b")
+    cache = jax.eval_shape(
+        lambda: __import__("repro.models.model", fromlist=["init_cache"])
+        .init_cache(cfg, 1, 4096, dtype=jnp.bfloat16))
+    shards = sharding.cache_shardings(cfg, MESH, cache, batch_size=1)
+    k_shard = jax.tree_util.tree_flatten_with_path(shards)[0]
+    kv = [s for path, s in k_shard
+          if str(path[-1].key) in ("k", "v")][0]
+    spec = tuple(kv.spec)
+    # batch=1: seq dim takes data+model (full-mesh context parallelism)
+    assert spec[2] == ("data", "model")
+
+
+def test_activation_rules_gqa_fallback():
+    cfg = get_config("qwen2-72b")     # kv=8 < model=16
+    rules = sharding.activation_rules(MESH, batch_size=256, cfg=cfg)
+    assert tuple(rules["attn_q"].spec)[2] == "model"
+    # non-divisible kv heads: sequence-sharded pin (perf iter #8)
+    assert tuple(rules["attn_kv"].spec)[1] == "model"
+
+
+def test_activation_rules_odd_heads_seq_sharded():
+    cfg = get_config("minicpm-2b")    # 36 heads, 16-way model axis
+    rules = sharding.activation_rules(MESH, batch_size=256, cfg=cfg)
+    assert tuple(rules["attn_q"].spec)[1] == "model"
+    assert tuple(rules["attn_q"].spec)[2] is None

@@ -1,0 +1,30 @@
+"""Analytic HBM-traffic model sanity (roofline memory term)."""
+import pytest
+
+from repro.configs import get_config
+from repro.launch import traffic
+
+
+def test_train_traffic_dominated_by_optimizer_and_params():
+    cfg = get_config("stablelm-1.6b")
+    per_chip = traffic.hbm_bytes(cfg, "train_4k", "train", 256)
+    p = cfg.param_count()
+    assert per_chip > 30 * p / 256  # at least the param/optimizer traffic
+
+
+def test_decode_traffic_scales_with_cache():
+    cfg = get_config("qwen2-72b")
+    small = traffic.hbm_bytes(cfg, "decode_32k", "decode", 256)
+    # long_500k has batch 1 but 16x the seq: cache term differs
+    big = traffic.cache_bytes(cfg, 128, 32_768)
+    assert big > 0
+    assert small >= (2 * cfg.param_count()) / 256
+
+
+def test_sw_variant_cache_is_sublinear():
+    from repro.launch import specs as specs_mod
+    cfg = get_config("qwen2-72b")
+    sw = specs_mod.sliding_window_variant(cfg)
+    full = traffic.cache_bytes(cfg, 1, 524_288)
+    ring = traffic.cache_bytes(sw, 1, 524_288)
+    assert ring < full / 32   # ring buffers: window/seq = 1/64

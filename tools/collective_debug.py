@@ -1,0 +1,92 @@
+"""Dump the top trip-count-weighted collective ops for one dry-run case."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.core import llm_a3c
+from repro.distributed import ctx, sharding
+from repro.launch import specs as specs_mod, hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import optimizers as opt_mod
+
+
+def compile_case(arch, shape):
+    cfg = get_config(arch)
+    cfg = specs_mod.maybe_long_variant(cfg, shape)
+    mesh = make_production_mesh()
+    kind, in_specs = specs_mod.input_specs(cfg, shape)
+    bsz = specs_mod.INPUT_SHAPES[shape]["batch"]
+    p_specs = specs_mod.params_specs(cfg)
+    p_shard = sharding.param_shardings(cfg, mesh, p_specs)
+    rules = sharding.activation_rules(mesh, batch_size=bsz, cfg=cfg)
+    with jax.sharding.set_mesh(mesh), ctx.sharding_rules(rules):
+        if kind == "train":
+            opt = opt_mod.shared_rmsprop()
+            opt_specs = jax.eval_shape(opt.init, p_specs)
+            b_shard = sharding.batch_shardings(mesh, in_specs, batch_size=bsz)
+            lowered = jax.jit(llm_a3c.make_train_step(cfg, opt),
+                in_shardings=(p_shard, {"g": p_shard}, b_shard, None),
+                out_shardings=(p_shard, {"g": p_shard}, None)).lower(
+                p_specs, opt_specs, in_specs, jax.ShapeDtypeStruct((), jnp.int32))
+        elif kind == "decode":
+            serve_step = llm_a3c.make_serve_step(cfg)
+            b_shard = sharding.batch_shardings(mesh, in_specs["batch"], batch_size=bsz)
+            c_shard = sharding.cache_shardings(cfg, mesh, in_specs["cache"], batch_size=bsz)
+            lowered = jax.jit(serve_step,
+                in_shardings=(p_shard, c_shard, b_shard, None, None),
+                out_shardings=(None, None, c_shard)).lower(
+                p_specs, in_specs["cache"], in_specs["batch"],
+                in_specs["pos"], in_specs["seed"])
+        else:
+            def prefill(params, batch):
+                out = M.forward(cfg, params, batch)
+                return out["logits"][:, -1]
+            b_shard = sharding.batch_shardings(mesh, in_specs, batch_size=bsz)
+            lowered = jax.jit(prefill, in_shardings=(p_shard, b_shard)).lower(p_specs, in_specs)
+        return lowered.compile()
+
+
+def top_collectives(text, n=15):
+    comps = H.split_computations(text)
+    sym = H.build_symbols(comps)
+    tallies = {name: H.tally_computation(c, sym) for name, c in comps.items()}
+    entry = next(nm for nm, c in comps.items() if c.is_entry)
+    weights = {}
+    def walk(name, w, depth=0):
+        t = tallies.get(name)
+        if t is None or depth > 40: return
+        for callee in t.calls:
+            weights[callee] = weights.get(callee, 0) + w
+            walk(callee, w, depth + 1)
+        for cond, body in t.whiles:
+            k = H.trip_count(comps, cond)
+            for cn in (cond, body):
+                weights[cn] = weights.get(cn, 0) + w * k
+                walk(cn, w * k, depth + 1)
+    weights[entry] = 1.0
+    walk(entry, 1.0)
+    rows = []
+    for name, c in comps.items():
+        w = weights.get(name, 0)
+        if not w: continue
+        for line in c.lines:
+            m = re.match(r"(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.+?\)?)\s+"
+                         r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(", line)
+            if m:
+                nm, rt, kd = m.groups()
+                ob = H._type_bytes(rt)
+                mult = 2 if kd == "all-reduce" else 1
+                meta = re.search(r'op_name="([^"]+)"', line)
+                rows.append((w * ob * mult, w, ob, kd, (meta.group(1) if meta else nm)[-110:]))
+    rows.sort(reverse=True)
+    tot = sum(r[0] for r in rows)
+    print(f"total weighted collective bytes/dev: {tot/1e9:.1f} GB")
+    for r in rows[:n]:
+        print(f"{r[0]/1e9:9.2f}GB w={r[1]:6.0f} sz={r[2]/1e6:8.1f}MB {r[3]:18s} {r[4]}")
+
+
+if __name__ == "__main__":
+    comp = compile_case(sys.argv[1], sys.argv[2])
+    top_collectives(comp.as_text())
