@@ -29,6 +29,19 @@ def run() -> list:
     rows.append({"name": "attention_flash_jnp", "us_per_call": us_fl,
                  "derived": f"vs_ref={us_ref/us_fl:.2f}x"})
 
+    # fwd+bwd through the Pallas kernel's custom VJP (interpret on CPU) vs
+    # AD through the blockwise-jnp path — the training hot-path comparison
+    grad_pl = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+        ops.flash_attention(q, k, v, causal=True)), argnums=(0, 1, 2)))
+    us_gpl = common.timed(grad_pl, q, k, v, iters=3)
+    rows.append({"name": "attention_pallas_fwd_bwd", "us_per_call": us_gpl,
+                 "derived": f"s={s} dq+dk+dv"})
+    grad_jnp = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+        flash_attention_jnp(q, k, v, True, None, 256)), argnums=(0, 1, 2)))
+    us_gj = common.timed(grad_jnp, q, k, v, iters=3)
+    rows.append({"name": "attention_flash_jnp_fwd_bwd", "us_per_call": us_gj,
+                 "derived": f"vs_pallas={us_gpl/us_gj:.2f}x"})
+
     # decode attention
     kc = jax.random.normal(ks[1], (b, 4096, hkv, d))
     vc = jax.random.normal(ks[2], (b, 4096, hkv, d))

@@ -1,0 +1,69 @@
+"""Version-tolerant shims over JAX APIs that moved between releases.
+
+The repo targets whatever JAX the image bakes in (currently 0.4.37) but is
+written against the newer public names; every drift goes through one helper
+here so call sites stay clean and a future JAX bump is a one-file change.
+
+Covered drifts:
+  * ``pltpu.CompilerParams``      — named ``TPUCompilerParams`` in <= 0.4.x.
+  * ``jax.sharding.set_mesh``     — absent in <= 0.4.x; ``Mesh`` itself is a
+    context manager there, and ``AbstractMesh`` needs no entry at all when
+    shardings are passed explicitly.
+  * ``AbstractMesh(...)``         — 0.4.x takes one tuple of (name, size)
+    pairs; newer JAX takes (axis_sizes, axis_names).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence, Tuple
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+_TPU_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` under either name."""
+    return _TPU_COMPILER_PARAMS_CLS(**kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Prefers ``jax.sharding.set_mesh`` / ``jax.set_mesh`` (newer JAX).  On
+    0.4.x a concrete ``Mesh`` is its own context manager; an
+    ``AbstractMesh`` has no context to enter — explicit NamedShardings
+    carry it — so we no-op.
+    """
+    setter = getattr(jax.sharding, "set_mesh", None) or \
+        getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict.
+
+    Depending on jax/XLA version this returns a dict or a one-element list
+    of per-module dicts; normalize to the (possibly empty) dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """``AbstractMesh`` under both constructor signatures."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        pairs: Tuple[Tuple[str, int], ...] = tuple(
+            zip(axis_names, axis_sizes))
+        return AbstractMesh(pairs)

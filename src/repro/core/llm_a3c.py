@@ -23,7 +23,7 @@ from repro.models.config import ModelConfig
 
 def a3c_token_loss(cfg: ModelConfig, params, batch: Dict[str, Any], *,
                    gamma: float = 0.99, beta: float = 0.01,
-                   value_coef: float = 0.5, backend: str = "jnp"):
+                   value_coef: float = 0.5, backend: str = "auto"):
     """batch: tokens (B,S) [or embeds/enc_frames per family], rewards (B,S),
     discounts (B,S) = gamma * (1 - done).  Position t's reward is for the
     transition prefix[:t] --tokens[t+1]--> prefix[:t+1]."""
@@ -66,7 +66,7 @@ def a3c_token_loss(cfg: ModelConfig, params, batch: Dict[str, Any], *,
 
 def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
                     beta: float = 0.01, lr0: float = 7e-4,
-                    total_steps: int = 100_000, backend: str = "jnp"):
+                    total_steps: int = 100_000, backend: str = "auto"):
     """Synchronous (T2) data-parallel train step — the A2C limit of A3C.
     Under pjit the cross-group gradient reduction is the all-reduce the
     compiler inserts for the data axis."""
@@ -87,7 +87,7 @@ def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
     return train_step
 
 
-def make_serve_step(cfg: ModelConfig, *, backend: str = "jnp",
+def make_serve_step(cfg: ModelConfig, *, backend: str = "auto",
                     sample: bool = True):
     """One-token decode step for the actor/serving path (decode shapes).
     Returns (token (B,), value (B,), cache)."""

@@ -83,7 +83,9 @@ def make_replay_runner(algo: Algorithm, env: Env, net_params,
             "ptr": jnp.zeros((cfg.n_workers,), jnp.int32),
             "filled": jnp.zeros((cfg.n_workers,), jnp.int32),
             "eps_final": exploration.sample_eps_final(k_eps, cfg.n_workers),
-            "frames": jnp.zeros((), jnp.int32), "rng": k_rng,
+            "frames": jnp.zeros((), jnp.int32),
+            "last_target_sync": jnp.zeros((), jnp.int32),
+            "rng": k_rng,
         }
 
     def worker_segment(params, target_params, worker, buf_w, ptr, filled,
@@ -154,12 +156,17 @@ def make_replay_runner(algo: Algorithm, env: Env, net_params,
         (params, opt_state), _ = jax.lax.scan(
             apply_one, (state["params"], state["opt_state"]), grads)
         frames = state["frames"] + cfg.n_workers * cfg.t_max
-        swap = (frames % cfg.target_interval) < (cfg.n_workers * cfg.t_max)
+        # accumulator-based swap (same as async_runner): the old
+        # ``frames % target_interval < increment`` test silently skipped
+        # swaps whenever one round advanced frames past a whole interval.
+        swap = (frames - state["last_target_sync"]) >= cfg.target_interval
         target = jax.tree.map(lambda t, p: jnp.where(swap, p, t),
                               state["target_params"], params)
         return dict(state, params=params, opt_state=opt_state,
                     workers=workers, buffer=buf, ptr=ptr, filled=filled,
-                    frames=frames, rng=rng, target_params=target), \
+                    frames=frames, rng=rng, target_params=target,
+                    last_target_sync=jnp.where(
+                        swap, frames, state["last_target_sync"])), \
             {k: jnp.mean(v) for k, v in metrics.items()}
 
     return init_state, round_fn

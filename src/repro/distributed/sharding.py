@@ -87,7 +87,11 @@ def _resolve(spec_tpl, mesh: Mesh, *, fsdp: bool = True):
         if s == "M":
             out.append("model")
         elif s == "F":
-            out.append(d_ax if (fsdp and d_ax) else None)
+            # newer jax canonicalizes P(('data',)) to P('data'); 0.4.x
+            # keeps the 1-tuple — emit the canonical bare name ourselves
+            ax = d_ax if (fsdp and d_ax) else None
+            out.append(ax[0] if isinstance(ax, tuple) and len(ax) == 1
+                       else ax)
         else:
             out.append(None)
     return P(*out)

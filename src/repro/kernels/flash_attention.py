@@ -20,10 +20,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def tile_mask(iq, ik, block_q: int, block_k: int, causal: bool,
+              window: Optional[int]):
+    """(block_q, block_k) validity mask for score tile (iq, ik).  Shared by
+    the forward and backward kernels — the backward reconstructs softmax
+    tiles from the forward's saved lse, so the masks must stay identical."""
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
             causal: bool, window: Optional[int], block_q: int, block_k: int,
             n_k: int, scale: float):
     iq = pl.program_id(2)
@@ -41,15 +60,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
-    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                   (block_q, block_k), 0)
-    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
-                                                   (block_q, block_k), 1)
-    mask = jnp.ones_like(s, dtype=jnp.bool_)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
+    mask = tile_mask(iq, ik, block_q, block_k, causal, window)
     s = jnp.where(mask, s, NEG)
 
     m_prev = m_ref[...]
@@ -66,13 +77,20 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _finish():
         l_safe = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        if lse_ref is not None:
+            lse_ref[0, 0] = m_ref[...] + jnp.log(l_safe)
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         block_q: int = 512, block_k: int = 512,
-                        interpret: Optional[bool] = None) -> jnp.ndarray:
-    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+                        save_residuals: bool = False,
+                        interpret: Optional[bool] = None):
+    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D).
+
+    With ``save_residuals`` also returns the per-row log-sum-exp
+    (B,Hq,S) f32 — the statistic the backward kernel needs to
+    reconstruct softmax tiles without a second online pass."""
     b, s, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
@@ -87,7 +105,17 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
     kern = functools.partial(
         _kernel, causal=causal, window=window, block_q=bq, block_k=bk,
         n_k=n_k, scale=d ** -0.5)
-    return pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, 1, bq, d),
+                              lambda b_, h, iq, ik: (b_, h, iq, 0))]
+    out_shape = [jax.ShapeDtypeStruct((b, hq, s, d), q.dtype)]
+    if save_residuals:
+        out_specs.append(pl.BlockSpec((1, 1, bq),
+                                      lambda b_, h, iq, ik: (b_, h, iq)))
+        out_shape.append(jax.ShapeDtypeStruct((b, hq, s), jnp.float32))
+    else:
+        def kern(q_ref, k_ref, v_ref, o_ref, *scratch, _full=kern):
+            _full(q_ref, k_ref, v_ref, o_ref, None, *scratch)
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
@@ -98,16 +126,19 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
             pl.BlockSpec((1, bk, 1, d),
                          lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, d),
-                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(jnp.moveaxis(q, 1, 2), k, v).swapaxes(1, 2)
+    )(jnp.moveaxis(q, 1, 2), k, v)
+    o = out[0].swapaxes(1, 2)
+    if save_residuals:
+        return o, out[1]
+    return o

@@ -15,22 +15,59 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention_bwd import flash_attention_bwd
 from repro.kernels.rmsnorm import rmsnorm_fwd
 from repro.kernels.shared_rmsprop import rmsprop_update_2d
 
 LANES = 1024
 
 
+def _flash_blocks(s: int) -> int:
+    # largest block <= 512 dividing s (s is a multiple of 128 on this
+    # path, so this terminates at >= 128)
+    b = min(512, s)
+    while s % b:
+        b //= 2
+    return b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_pallas(q, k, v, causal, window):
+    bq = bk = _flash_blocks(q.shape[1])
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk)
+
+
+def _flash_pallas_fwd(q, k, v, causal, window):
+    bq = bk = _flash_blocks(q.shape[1])
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 block_q=bq, block_k=bk,
+                                 save_residuals=True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_pallas_bwd(causal, window, res, do):
+    q, k, v, o, lse = res
+    bq = bk = _flash_blocks(q.shape[1])
+    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, block_q=bq, block_k=bk)
+
+
+_flash_pallas.defvjp(_flash_pallas_fwd, _flash_pallas_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None) -> jnp.ndarray:
-    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D).
+
+    Differentiable end-to-end: the Pallas path carries a custom VJP whose
+    backward is the fused recompute kernel in ``flash_attention_bwd``; the
+    small-shape fallback differentiates through the jnp reference."""
     s = q.shape[1]
     if s < 128 or s % 128 != 0:
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
-    bq = bk = min(512, s)
-    return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                               block_q=bq, block_k=bk)
+    return _flash_pallas(q, k, v, causal, window)
 
 
 @jax.jit

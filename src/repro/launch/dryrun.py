@@ -23,6 +23,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_config, ARCH_IDS, ALIASES
 from repro.core import llm_a3c
 from repro.distributed import ctx, sharding
@@ -74,7 +75,7 @@ def lower_case(arch: str, shape_id: str, *, multi_pod: bool = False,
     rules = sharding.activation_rules(mesh, batch_size=bsz, cfg=cfg)
 
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh), ctx.sharding_rules(rules):
+    with compat.set_mesh(mesh), ctx.sharding_rules(rules):
         if kind == "train" and mode == "delayed":
             # T3: paper-faithful pod-scale asynchrony — each pod updates a
             # local replica for H steps, merging on the 'pod' axis.
@@ -188,7 +189,7 @@ def lower_case(arch: str, shape_id: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     mem = _mem_summary(compiled)
     hlo_text = compiled.as_text()
     weighted = hlo_analysis.weighted_totals(hlo_text)

@@ -27,6 +27,24 @@ class AttnParams(NamedTuple):
     pass  # attention params are plain dicts; NamedTuple kept for doc purposes
 
 
+def resolve_backend(s: int) -> str:
+    """``backend="auto"`` dispatch: the Pallas flash kernel (now
+    differentiable via its fused backward) is the default train path on TPU
+    for MXU-aligned sequence lengths; on CPU the kernel only runs in
+    interpret mode, so the blockwise-jnp / sdpa paths stay the default.
+
+    Under active sharding rules (mesh-partitioned training/serving) the
+    jnp paths stay in charge: a bare ``pallas_call`` has no partitioning
+    rule, so GSPMD would gather/replicate q/k/v around it — shard_map'ing
+    the kernel is a ROADMAP follow-up.  This also keeps the CPU-host
+    dry-run honest: what it lowers for a mesh is what a mesh runs."""
+    if ctx.current_rules():
+        return "jnp"
+    if jax.default_backend() == "tpu" and s >= 128 and s % 128 == 0:
+        return "pallas"
+    return "jnp"
+
+
 def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
                    head_dim: int, *, qkv_bias: bool = False,
                    out_bias: bool = False) -> dict:
@@ -96,6 +114,8 @@ def attend_train(params: dict, x: jnp.ndarray, cos, sin, cfg,
     k = ctx.constrain(k, "attn_kv")
     v = ctx.constrain(v, "attn_kv")
     s = x.shape[1]
+    if backend == "auto":
+        backend = resolve_backend(s)
     if backend == "pallas":
         from repro.kernels import ops as kops
         o = kops.flash_attention(q, k, v, causal=not bidirectional,
@@ -149,6 +169,8 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
 
     cache_len = cache["k"].shape[1]
+    if backend == "auto":
+        backend = resolve_backend(cache_len)
     # full cache: slot == pos (pos < cache_len); ring cache: wrap around.
     slot = pos % cache_len
     ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),

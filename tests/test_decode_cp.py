@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs import get_config
 from repro.distributed import ctx, sharding
 from repro.models import model as M
@@ -25,7 +26,7 @@ def test_decode_cp_matches_dense(arch):
     for t in range(s):
         tb = {"tokens": tokens[:, t:t + 1]}
         o1, c1 = M.decode_step(cfg, params, c1, tb, jnp.asarray(t))
-        with jax.sharding.set_mesh(MESH), ctx.sharding_rules(rules):
+        with compat.set_mesh(MESH), ctx.sharding_rules(rules):
             o2, c2 = M.decode_step(cfg, params, c2, tb, jnp.asarray(t))
         np.testing.assert_allclose(np.asarray(o1["logits"]),
                                    np.asarray(o2["logits"]),
@@ -46,7 +47,7 @@ def test_decode_cp_ring_cache():
     cache = M.init_cache(cfg, b, s, dtype=jnp.float32)
     rules = sharding.decode_rules(cfg, MESH, batch_size=b)
     outs = []
-    with jax.sharding.set_mesh(MESH), ctx.sharding_rules(rules):
+    with compat.set_mesh(MESH), ctx.sharding_rules(rules):
         for t in range(s):
             out, cache = M.decode_step(cfg, params, cache,
                                        {"tokens": tokens[:, t:t + 1]},

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.models import moe as moe_mod
 from repro.models import moe_ep
 
@@ -52,6 +53,6 @@ def test_ep_activated_by_rules_in_train_step():
     plain, _ = llm_a3c.a3c_token_loss(cfg, params, batch)
     rules = sharding.activation_rules(MESH, batch_size=b, cfg=cfg)
     assert "moe_ep" in rules
-    with jax.sharding.set_mesh(MESH), ctx.sharding_rules(rules):
+    with compat.set_mesh(MESH), ctx.sharding_rules(rules):
         ep, _ = llm_a3c.a3c_token_loss(cfg, params, batch)
     np.testing.assert_allclose(float(plain), float(ep), rtol=1e-5)

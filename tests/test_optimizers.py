@@ -3,6 +3,8 @@ hypothesis invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import optimizers as opt_mod

@@ -3,6 +3,7 @@ oracle (paper Alg. 2/3 forward-view recursion)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.returns import (gae_advantages, n_step_returns,
