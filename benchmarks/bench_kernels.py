@@ -1,12 +1,16 @@
 """Kernel microbenchmarks: Pallas (interpret on CPU — indicative only) vs
-the jnp reference path; plus the blockwise flash vs naive attention."""
+the jnp reference path; plus the blockwise flash vs naive attention, the
+masked-tile skip fractions of the fused backward, and the shard_map'd
+(mesh-dispatched) fwd+bwd path."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.kernels import ops, ref
+from repro.distributed import ctx
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.flash_attention import masked_tile_fraction
 
 
 def run() -> list:
@@ -32,7 +36,8 @@ def run() -> list:
     # fwd+bwd through the Pallas kernel's custom VJP (interpret on CPU) vs
     # AD through the blockwise-jnp path — the training hot-path comparison
     grad_pl = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
-        ops.flash_attention(q, k, v, causal=True)), argnums=(0, 1, 2)))
+        ops.flash_attention(q, k, v, causal=True, backend="pallas")),
+        argnums=(0, 1, 2)))
     us_gpl = common.timed(grad_pl, q, k, v, iters=3)
     rows.append({"name": "attention_pallas_fwd_bwd", "us_per_call": us_gpl,
                  "derived": f"s={s} dq+dk+dv"})
@@ -41,6 +46,41 @@ def run() -> list:
     us_gj = common.timed(grad_jnp, q, k, v, iters=3)
     rows.append({"name": "attention_flash_jnp_fwd_bwd", "us_per_call": us_gj,
                  "derived": f"vs_pallas={us_gpl/us_gj:.2f}x"})
+
+    # masked-tile skip fractions: the share of (bq x bk) score tiles the
+    # fused backward predicates away instead of computing zero tiles
+    for name, win, blk in (("causal", None, 128), ("causal", None, 512),
+                           ("window128", 128, 128)):
+        frac = masked_tile_fraction(s, blk, blk, True, win)
+        rows.append({"name": f"bwd_skipped_tiles_{name}_b{blk}",
+                     "us_per_call": 0.0,
+                     "derived": f"s={s} skipped={frac:.3f}"})
+
+    # shard_map'd dispatch (mesh over local devices): fwd and fwd+bwd —
+    # on a multi-device host this is the path backend="auto" picks under
+    # a mesh; on one device it is the same kernels through a trivial mesh
+    n_dev = len(jax.devices())
+    if hkv % n_dev == 0:
+        mesh_shape = (1, n_dev)      # heads over model
+    elif b % n_dev == 0:
+        mesh_shape = (n_dev, 1)      # batch over data
+    else:
+        mesh_shape = (1, 1)          # trivial mesh, same kernels
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    with ctx.use_mesh(mesh):
+        sh_fwd = jax.jit(lambda q, k, v: dispatch.flash_attention(
+            q, k, v, causal=True, backend="pallas_shard_map"))
+        us_sf = common.timed(sh_fwd, q, k, v, iters=3)
+        rows.append({"name": "attention_sharded_fwd", "us_per_call": us_sf,
+                     "derived": f"mesh={dict(mesh.shape)}"})
+        sh_grad = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+            dispatch.flash_attention(q, k, v, causal=True,
+                                     backend="pallas_shard_map")),
+            argnums=(0, 1, 2)))
+        us_sg = common.timed(sh_grad, q, k, v, iters=3)
+        rows.append({"name": "attention_sharded_fwd_bwd",
+                     "us_per_call": us_sg,
+                     "derived": f"vs_single={us_gpl/us_sg:.2f}x"})
 
     # decode attention
     kc = jax.random.normal(ks[1], (b, 4096, hkv, d))

@@ -43,7 +43,7 @@ def merge_every(step: jnp.ndarray, h: int, tree_grouped):
 
 def make_delayed_train_step(cfg, opt, *, n_groups: int, merge_interval: int,
                             gamma: float = 0.99, beta: float = 0.01,
-                            lr: float = 7e-4, backend: str = "jnp",
+                            lr: float = 7e-4,
                             merge_opt_state: bool = True):
     """Grouped train step: params/opt_state carry a leading group axis; each
     group consumes its own batch shard and updates locally; groups merge
@@ -62,8 +62,8 @@ def make_delayed_train_step(cfg, opt, *, n_groups: int, merge_interval: int,
 
     def local_update(params, opt_state, batch):
         grads, metrics = jax.grad(
-            lambda p: a3c_token_loss(cfg, p, batch, gamma=gamma, beta=beta,
-                                     backend=backend),
+            lambda p: a3c_token_loss(cfg, p, batch, gamma=gamma,
+                                     beta=beta),
             has_aux=True)(params)
         updates, opt_state = opt.update(grads, opt_state, lr)
         return opt_mod.apply_updates(params, updates), opt_state, metrics

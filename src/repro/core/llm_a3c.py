@@ -23,11 +23,11 @@ from repro.models.config import ModelConfig
 
 def a3c_token_loss(cfg: ModelConfig, params, batch: Dict[str, Any], *,
                    gamma: float = 0.99, beta: float = 0.01,
-                   value_coef: float = 0.5, backend: str = "auto"):
+                   value_coef: float = 0.5):
     """batch: tokens (B,S) [or embeds/enc_frames per family], rewards (B,S),
     discounts (B,S) = gamma * (1 - done).  Position t's reward is for the
     transition prefix[:t] --tokens[t+1]--> prefix[:t+1]."""
-    out = M.forward(cfg, params, batch, backend=backend)
+    out = M.forward(cfg, params, batch)
     logits = out["logits"].astype(jnp.float32)        # (B, S, V)
     values = out["value"]                             # (B, S)
 
@@ -66,7 +66,7 @@ def a3c_token_loss(cfg: ModelConfig, params, batch: Dict[str, Any], *,
 
 def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
                     beta: float = 0.01, lr0: float = 7e-4,
-                    total_steps: int = 100_000, backend: str = "auto"):
+                    total_steps: int = 100_000):
     """Synchronous (T2) data-parallel train step — the A2C limit of A3C.
     Under pjit the cross-group gradient reduction is the all-reduce the
     compiler inserts for the data axis."""
@@ -77,8 +77,8 @@ def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
         lr = schedules.linear_anneal(lr0, step.astype(jnp.float32),
                                      float(total_steps))
         grads, metrics = jax.grad(
-            lambda p: a3c_token_loss(cfg, p, batch, gamma=gamma, beta=beta,
-                                     backend=backend),
+            lambda p: a3c_token_loss(cfg, p, batch, gamma=gamma,
+                                     beta=beta),
             has_aux=True)(params)
         updates, opt_state = opt.update(grads, opt_state, lr)
         params = opt_mod.apply_updates(params, updates)
@@ -87,14 +87,12 @@ def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
     return train_step
 
 
-def make_serve_step(cfg: ModelConfig, *, backend: str = "auto",
-                    sample: bool = True):
+def make_serve_step(cfg: ModelConfig, *, sample: bool = True):
     """One-token decode step for the actor/serving path (decode shapes).
     Returns (token (B,), value (B,), cache)."""
 
     def serve_step(params, cache, batch, pos, seed):
-        out, cache = M.decode_step(cfg, params, cache, batch, pos,
-                                   backend=backend)
+        out, cache = M.decode_step(cfg, params, cache, batch, pos)
         logits = out["logits"][:, -1].astype(jnp.float32)
         if sample:
             key = jax.random.key(seed)

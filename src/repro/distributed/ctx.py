@@ -1,6 +1,12 @@
 """Sharding context: lets mesh-agnostic model code request activation
 sharding constraints that only take effect when the launcher has installed a
 rule set (no-ops on single-device CPU runs, so tests/benches are unaffected).
+
+Also carries the *dispatch mesh*: the mesh the launcher is lowering for.
+The kernel dispatch layer (``repro.kernels.dispatch``) keys backend
+selection off this mesh's device platform — the lowering *target* — rather
+than ``jax.default_backend()``, so a host process lowering for a TPU mesh
+picks the same kernels the TPU mesh will run.
 """
 from __future__ import annotations
 
@@ -35,3 +41,53 @@ def constrain(x, name: str):
     if rules is None or name not in rules:
         return x
     return jax.lax.with_sharding_constraint(x, rules[name])
+
+
+# ---------------------------------------------------------------------------
+# dispatch mesh
+# ---------------------------------------------------------------------------
+
+def current_mesh():
+    """The mesh installed by the launcher (None on plain single-device runs)."""
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the kernel-dispatch target around trace/lower time.
+
+    Orthogonal to ``compat.set_mesh`` (which feeds jax's sharding machinery):
+    this one only makes the mesh *visible* to the dispatch layer so it can
+    shard_map the Pallas kernels over it and resolve the target platform."""
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def mesh_platform(mesh) -> str:
+    """Device platform of ``mesh`` ("cpu"/"tpu"/"gpu").  AbstractMesh carries
+    no devices; assume the local default backend in that case."""
+    devs = getattr(mesh, "devices", None)
+    if devs is None:
+        return jax.default_backend()
+    return devs.flat[0].platform
+
+
+def current_platform() -> str:
+    """Platform of the lowering target: the dispatch mesh's device platform
+    when a mesh is installed, else the process default backend."""
+    mesh = current_mesh()
+    if mesh is None:
+        return jax.default_backend()
+    return mesh_platform(mesh)
+
+
+def mesh_devices(mesh) -> int:
+    """Total device count of a (possibly abstract) mesh."""
+    n = 1
+    for s in dict(mesh.shape).values():
+        n *= s
+    return n

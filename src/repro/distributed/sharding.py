@@ -17,7 +17,7 @@ automatically for stacked (scanned) layers.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,82 @@ def _path_str(path) -> str:
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Batch-parallel axes: ('pod','data') on the multi-pod mesh."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# kernel-dispatch partitioning (consumed by repro.kernels.dispatch)
+# ---------------------------------------------------------------------------
+
+class AttnShardSpec(NamedTuple):
+    """How to shard_map the attention kernels over a mesh.
+
+    ``batch`` is the PartitionSpec entry for the batch dim (axis name, tuple
+    of names, or None for replicated); ``heads`` likewise for the head dims.
+    Hashable by construction so dispatch can use it as a jit static arg.
+    """
+    mesh: Any              # jax.sharding.Mesh
+    batch: Any             # None | str | tuple of axis names
+    heads: Optional[str]   # None | "model"
+
+    @property
+    def qo(self) -> P:
+        """q / o / do / dq: (B, S, Hq, D) — batch on data, heads on model."""
+        return P(self.batch, None, self.heads, None)
+
+    @property
+    def kv(self) -> P:
+        """k / v / dk / dv and KV caches: (B, S|L, Hkv, D)."""
+        return P(self.batch, None, self.heads, None)
+
+    @property
+    def lse(self) -> P:
+        """lse / delta residuals: (B, Hq, S)."""
+        return P(self.batch, self.heads, None)
+
+    @property
+    def q_decode(self) -> P:
+        """decode q / o: (B, Hq, D)."""
+        return P(self.batch, self.heads, None)
+
+
+def attention_shard_spec(mesh, *, batch: int, n_q_heads: int,
+                         n_kv_heads: int
+                         ) -> Tuple[Optional[AttnShardSpec], str]:
+    """Partitioning for the shard_map'd Pallas attention kernels.
+
+    Batch goes over the data axes, q *and* kv heads over ``model`` —
+    contiguous head blocks keep every GQA group local to its shard (shard j
+    owns q heads [j*hq/m, (j+1)*hq/m) and exactly the kv heads they read,
+    because hq/m = g * hkv/m).  The sequence dim stays unsharded: the flash
+    grid scans it on-chip, and causal/window masks use absolute positions.
+
+    Returns (spec, "") or (None, reason) when the mesh axes divide neither
+    tensor dim — the dispatcher records the reason and falls back to jnp.
+    """
+    d_ax = data_axes(mesh)
+    d_size = 1
+    for a in d_ax:
+        d_size *= mesh.shape[a]
+    m_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if d_size == 1 and m_size == 1:
+        # degenerate 1-device mesh: everything replicated (benches force
+        # the shard_map path through it; auto dispatch never picks it)
+        return AttnShardSpec(mesh, None, None), ""
+
+    dp: Any = d_ax if (d_ax and batch % d_size == 0 and d_size > 1) else None
+    if isinstance(dp, tuple) and len(dp) == 1:
+        dp = dp[0]
+    heads = None
+    if m_size > 1:
+        if n_q_heads % m_size == 0 and n_kv_heads % m_size == 0:
+            heads = "model"
+        else:
+            return None, (f"heads ({n_q_heads}q/{n_kv_heads}kv) do not "
+                          f"divide the {m_size}-way model axis")
+    if dp is None and heads is None:
+        return None, (f"mesh axes divide neither batch={batch} "
+                      f"(data={d_size}) nor heads (model={m_size})")
+    return AttnShardSpec(mesh, dp, heads), ""
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,505 @@
+"""Mesh-aware kernel dispatch: the single entry point to the Pallas kernels.
+
+Every attention / norm / optimizer call in the model layer routes through
+here with ``backend="auto"``.  Resolution is keyed off the *lowering
+target* — the dispatch mesh installed via ``repro.distributed.ctx.use_mesh``
+(its device platform), not ``jax.default_backend()`` — so a CPU host
+lowering a TPU mesh program picks the kernels the mesh will actually run.
+
+Decision table (see DESIGN.md §kernel-dispatch for the full rationale):
+
+  mesh (devices>1)  platform  shape alignment          -> backend
+  ----------------  --------  -----------------------  --------------------
+  yes               any       aligned + axes divide    pallas_shard_map
+                                                       (interpret off-TPU)
+  yes               any       axes don't divide        jnp (reason logged)
+  no / 1-device     tpu       aligned                  pallas
+  no / 1-device     cpu/gpu   any                      jnp (reason logged)
+  any               any       seq/rows misaligned      jnp (reason logged)
+  rules, no mesh    any       any                      jnp (reason logged)
+
+The shard_map'd paths partition (batch -> data axes, heads -> model) using
+the specs from ``repro.distributed.sharding.attention_shard_spec``; the
+``custom_vjp`` is defined *around* the shard_mapped calls so gradients flow
+under a mesh (a bare ``pallas_call`` has no GSPMD partitioning rule — this
+layer is what lets mesh training keep its fused kernels).
+
+All alignment checks (MXU 128-lane sequence blocks, GQA head-group
+divisibility, mesh-axis divisibility) live here, in one place, and every
+resolution is recorded with its reason — ``decision_log()`` /
+``decision_summary()`` let tests and the dry-run report *why* a given call
+fell back to jnp.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+from repro.distributed import ctx
+from repro.distributed.sharding import AttnShardSpec, attention_shard_spec
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention_bwd import flash_attention_bwd
+from repro.kernels.rmsnorm import rmsnorm_bwd, rmsnorm_fwd
+from repro.kernels.shared_rmsprop import rmsprop_update_2d
+
+LANES = 1024
+_BACKENDS = ("auto", "jnp", "pallas", "pallas_shard_map")
+
+
+# ---------------------------------------------------------------------------
+# decision log
+# ---------------------------------------------------------------------------
+
+class Decision(NamedTuple):
+    op: str
+    backend: str        # "pallas" | "pallas_shard_map" | "jnp"
+    reason: str
+    platform: str
+    mesh_axes: Optional[Tuple[Tuple[str, int], ...]]
+
+
+_LOG_LOCK = threading.Lock()
+_LOG_CAP = 512
+_log: list = []
+
+
+def _decide(op: str, backend: str, reason: str,
+            mesh=None, platform: Optional[str] = None) -> Decision:
+    d = Decision(op, backend, reason,
+                 platform or ctx.current_platform(),
+                 tuple(dict(mesh.shape).items()) if mesh is not None
+                 else None)
+    with _LOG_LOCK:
+        if len(_log) >= _LOG_CAP:
+            del _log[:_LOG_CAP // 2]
+        _log.append(d)
+    return d
+
+
+def decision_log() -> list:
+    """Decisions recorded since the last clear (trace-time, newest last)."""
+    with _LOG_LOCK:
+        return list(_log)
+
+
+def clear_decision_log() -> None:
+    with _LOG_LOCK:
+        _log.clear()
+
+
+def last_decision(op: str) -> Optional[Decision]:
+    with _LOG_LOCK:
+        for d in reversed(_log):
+            if d.op == op:
+                return d
+    return None
+
+
+def decision_summary() -> list:
+    """Deduped (op, backend, reason) counts — the dry-run's 'why did this
+    lower the way it did' record."""
+    counts: dict = {}
+    for d in decision_log():
+        key = (d.op, d.backend, d.reason)
+        counts[key] = counts.get(key, 0) + 1
+    return [{"op": op, "backend": be, "reason": rs, "count": n}
+            for (op, be, rs), n in sorted(counts.items())]
+
+
+def _mesh_for_dispatch():
+    """(mesh, platform) of the lowering target; mesh None when dispatch
+    should treat the run as single-device."""
+    mesh = ctx.current_mesh()
+    platform = ctx.current_platform()
+    if mesh is not None and ctx.mesh_devices(mesh) <= 1:
+        mesh = None
+    return mesh, platform
+
+
+# ---------------------------------------------------------------------------
+# flash attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _flash_blocks(s: int) -> int:
+    # largest block <= 512 dividing s (s is a multiple of 128 on this
+    # path, so this terminates at >= 128)
+    b = min(512, s)
+    while s % b:
+        b //= 2
+    return b
+
+
+def _flash_fwd_call(q, k, v, causal, window, shard, interpret,
+                    save_residuals):
+    def call(q, k, v):
+        bq = bk = _flash_blocks(q.shape[1])
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=bq, block_k=bk,
+                                   save_residuals=save_residuals,
+                                   interpret=interpret)
+    if shard is None:
+        return call(q, k, v)
+    out_specs = (shard.qo, shard.lse) if save_residuals else shard.qo
+    return shard_map(call, mesh=shard.mesh,
+                     in_specs=(shard.qo, shard.kv, shard.kv),
+                     out_specs=out_specs, check_rep=False)(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_pallas(q, k, v, causal, window, shard, interpret):
+    return _flash_fwd_call(q, k, v, causal, window, shard, interpret, False)
+
+
+def _flash_pallas_fwd(q, k, v, causal, window, shard, interpret):
+    o, lse = _flash_fwd_call(q, k, v, causal, window, shard, interpret, True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_pallas_bwd(causal, window, shard, interpret, res, do):
+    q, k, v, o, lse = res
+
+    def call(q, k, v, o, lse, do):
+        bq = bk = _flash_blocks(q.shape[1])
+        return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                   window=window, block_q=bq, block_k=bk,
+                                   interpret=interpret)
+    if shard is None:
+        return call(q, k, v, o, lse, do)
+    return shard_map(call, mesh=shard.mesh,
+                     in_specs=(shard.qo, shard.kv, shard.kv, shard.qo,
+                               shard.lse, shard.qo),
+                     out_specs=(shard.qo, shard.kv, shard.kv),
+                     check_rep=False)(q, k, v, o, lse, do)
+
+
+_flash_pallas.defvjp(_flash_pallas_fwd, _flash_pallas_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "shard",
+                                             "interpret"))
+def _flash_call(q, k, v, causal, window, shard, interpret):
+    return _flash_pallas(q, k, v, causal, window, shard, interpret)
+
+
+def _flash_dense(q, k, v, causal, window):
+    """jnp fallback — same flavor selection the model layer used to do:
+    blockwise (never materializes S x S) for long causal sequences, dense
+    sdpa otherwise."""
+    s = q.shape[1]
+    from repro.models import attention as attn
+    if causal and s >= 2048 and s % 512 == 0:
+        from repro.models.flash_jnp import flash_attention_jnp
+        return flash_attention_jnp(q, k, v, True, window, 512)
+    n_rep = q.shape[2] // k.shape[2]
+    kk = attn._repeat_kv(k, n_rep)
+    vv = attn._repeat_kv(v, n_rep)
+    mask = attn.causal_mask(s, s, window=window) if causal else None
+    return attn.sdpa(q, kk, vv, mask)
+
+
+def _resolve_flash(b: int, s: int, hq: int, hkv: int, backend: str
+                   ) -> Tuple[Decision, Optional[AttnShardSpec], bool]:
+    if hq % hkv != 0:
+        # every implementation (kernels, blockwise, reference) groups q
+        # heads over kv heads — a non-multiple count is a config error
+        raise ValueError(f"GQA needs q heads to be a multiple of kv "
+                         f"heads, got {hq}/{hkv}")
+    mesh, platform = _mesh_for_dispatch()
+    interpret = platform != "tpu"
+    aligned = 128 <= s and s % 128 == 0
+    if backend == "jnp":
+        return _decide("flash_attention", "jnp", "explicit backend"), \
+            None, interpret
+    if backend == "pallas":
+        if not aligned:
+            return _decide("flash_attention", "jnp",
+                           f"explicit pallas but seq {s} below kernel "
+                           "minimum (128-multiple); naive reference"), \
+                None, interpret
+        return _decide("flash_attention", "pallas", "explicit backend"), \
+            None, interpret
+    if backend == "pallas_shard_map":
+        if not aligned:
+            raise ValueError(f"cannot shard_map attention: seq {s} not "
+                             "MXU-aligned (need a multiple of 128)")
+        raw_mesh = ctx.current_mesh()   # honor even a 1-device mesh
+        if raw_mesh is None:
+            raise ValueError("backend='pallas_shard_map' needs a mesh "
+                             "installed via ctx.use_mesh")
+        spec, why = attention_shard_spec(raw_mesh, batch=b, n_q_heads=hq,
+                                         n_kv_heads=hkv)
+        if spec is None:
+            raise ValueError(f"cannot shard_map attention: {why}")
+        return _decide("flash_attention", "pallas_shard_map",
+                       "explicit backend", raw_mesh), spec, interpret
+    # auto
+    if not aligned:
+        return _decide("flash_attention", "jnp",
+                       f"seq {s} not MXU-aligned (need a multiple of "
+                       "128)"), None, interpret
+    if mesh is not None:
+        spec, why = attention_shard_spec(mesh, batch=b, n_q_heads=hq,
+                                         n_kv_heads=hkv)
+        if spec is None:
+            return _decide("flash_attention", "jnp", why, mesh), \
+                None, interpret
+        return _decide("flash_attention", "pallas_shard_map",
+                       "mesh axes divide batch/heads", mesh), \
+            spec, interpret
+    if ctx.current_rules():
+        return _decide("flash_attention", "jnp",
+                       "sharding rules active without a dispatch mesh "
+                       "(install it via ctx.use_mesh)"), None, interpret
+    if platform == "tpu":
+        return _decide("flash_attention", "pallas",
+                       "single-device tpu, aligned"), None, False
+    return _decide("flash_attention", "jnp",
+                   f"platform {platform}: Pallas kernels run interpret-"
+                   "only off-TPU"), None, interpret
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    backend: str = "auto") -> jnp.ndarray:
+    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D).
+
+    Differentiable end-to-end on every backend: the Pallas paths carry a
+    custom VJP whose backward is the fused recompute kernel pair in
+    ``flash_attention_bwd`` (shard_mapped under a mesh); jnp fallbacks
+    differentiate through their reference implementations."""
+    assert backend in _BACKENDS, backend
+    b, s, hq, _ = q.shape
+    decision, shard, interpret = _resolve_flash(b, s, hq, k.shape[2],
+                                                backend)
+    if decision.backend == "jnp":
+        if backend == "pallas":     # sub-kernel smoke shape: keep the
+            return ref.flash_attention_ref(q, k, v, causal=causal,
+                                           window=window)  # naive oracle
+        return _flash_dense(q, k, v, causal, window)
+    return _flash_call(q, k, v, causal, window, shard, interpret)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (serving)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("shard", "interpret"))
+def _decode_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
+    def call(q, kc, vc, kpos, pos):
+        length = kc.shape[1]
+        bk = min(1024, length)
+        while length % bk:
+            bk //= 2
+        return decode_attention_fwd(q, kc, vc, kpos, pos, block_k=bk,
+                                    interpret=interpret)
+    if shard is None:
+        return call(q, k_cache, v_cache, kpos, pos)
+    from jax.sharding import PartitionSpec as P
+    return shard_map(call, mesh=shard.mesh,
+                     in_specs=(shard.q_decode, shard.kv, shard.kv,
+                               P(None), P()),
+                     out_specs=shard.q_decode,
+                     check_rep=False)(q, k_cache, v_cache, kpos, pos)
+
+
+def _decode_dense(q, k_cache, v_cache, kpos, pos):
+    from repro.models import attention as attn
+    n_rep = q.shape[1] // k_cache.shape[2]
+    kk = attn._repeat_kv(k_cache.astype(q.dtype), n_rep)
+    vv = attn._repeat_kv(v_cache.astype(q.dtype), n_rep)
+    valid = (kpos >= 0) & (kpos <= pos)
+    mask = valid[None, None, None, :]
+    return attn.sdpa(q[:, None], kk, vv, mask)[:, 0]
+
+
+def _resolve_decode(b: int, length: int, hq: int, hkv: int, backend: str
+                    ) -> Tuple[Decision, Optional[AttnShardSpec], bool]:
+    if hq % hkv != 0:
+        raise ValueError(f"GQA needs q heads to be a multiple of kv "
+                         f"heads, got {hq}/{hkv}")
+    mesh, platform = _mesh_for_dispatch()
+    interpret = platform != "tpu"
+    aligned = 128 <= length and length % 128 == 0
+    rules = ctx.current_rules() or {}
+    if backend == "jnp":
+        return _decide("decode_attention", "jnp", "explicit backend"), \
+            None, interpret
+    if backend == "pallas":
+        if not aligned:
+            return _decide("decode_attention", "jnp",
+                           f"explicit pallas but cache length {length} "
+                           "below kernel minimum (128-multiple); naive "
+                           "reference"), None, interpret
+        return _decide("decode_attention", "pallas", "explicit backend"), \
+            None, interpret
+    if backend == "pallas_shard_map":
+        if not aligned:
+            raise ValueError(f"cannot shard_map decode attention: cache "
+                             f"length {length} not MXU-aligned")
+        raw_mesh = ctx.current_mesh()   # honor even a 1-device mesh
+        if raw_mesh is None:
+            raise ValueError("backend='pallas_shard_map' needs a mesh "
+                             "installed via ctx.use_mesh")
+        spec, why = attention_shard_spec(raw_mesh, batch=b, n_q_heads=hq,
+                                         n_kv_heads=hkv)
+        if spec is None:
+            raise ValueError(f"cannot shard_map decode attention: {why}")
+        return _decide("decode_attention", "pallas_shard_map",
+                       "explicit backend", raw_mesh), spec, interpret
+    if not aligned:
+        return _decide("decode_attention", "jnp",
+                       f"cache length {length} not MXU-aligned (need a "
+                       "multiple of 128)"), None, interpret
+    if "decode_cp" in rules:
+        return _decide("decode_attention", "jnp",
+                       "context-parallel decode rules own the cache "
+                       "(attend_decode_cp shards the sequence dim)",
+                       mesh), None, interpret
+    if mesh is not None:
+        spec, why = attention_shard_spec(mesh, batch=b, n_q_heads=hq,
+                                         n_kv_heads=hkv)
+        if spec is None:
+            return _decide("decode_attention", "jnp", why, mesh), \
+                None, interpret
+        return _decide("decode_attention", "pallas_shard_map",
+                       "mesh axes divide batch/heads", mesh), \
+            spec, interpret
+    if rules:
+        return _decide("decode_attention", "jnp",
+                       "sharding rules active without a dispatch mesh"), \
+            None, interpret
+    if platform == "tpu":
+        return _decide("decode_attention", "pallas",
+                       "single-device tpu, aligned"), None, False
+    return _decide("decode_attention", "jnp",
+                   f"platform {platform}: Pallas kernels run interpret-"
+                   "only off-TPU"), None, interpret
+
+
+def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
+                     backend: str = "auto") -> jnp.ndarray:
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) -> (B,Hq,D)."""
+    assert backend in _BACKENDS, backend
+    if pos is None:
+        pos = jnp.max(kpos)
+    b, hq, _ = q.shape
+    length, hkv = k_cache.shape[1], k_cache.shape[2]
+    decision, shard, interpret = _resolve_decode(b, length, hq, hkv,
+                                                 backend)
+    if decision.backend == "jnp":
+        if backend == "pallas":     # sub-kernel smoke shape: keep the
+            return ref.decode_attention_ref(q, k_cache, v_cache, kpos,
+                                            pos)  # naive oracle
+        return _decode_dense(q, k_cache, v_cache, kpos, pos)
+    return _decode_call(q, k_cache, v_cache, kpos, pos, shard, interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm (fwd + one-pass vjp)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_pallas(x2, scale, eps, interpret):
+    return rmsnorm_fwd(x2, scale, eps=eps, interpret=interpret)
+
+
+def _rmsnorm_pallas_fwd(x2, scale, eps, interpret):
+    y, rstd = rmsnorm_fwd(x2, scale, eps=eps, save_residuals=True,
+                          interpret=interpret)
+    return y, (x2, scale, rstd)
+
+
+def _rmsnorm_pallas_bwd(eps, interpret, res, dy):
+    x2, scale, rstd = res
+    dx, dscale = rmsnorm_bwd(x2, scale, rstd, dy, interpret=interpret)
+    return dx, dscale.astype(scale.dtype)
+
+
+_rmsnorm_pallas.defvjp(_rmsnorm_pallas_fwd, _rmsnorm_pallas_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def _rmsnorm_call(x2, scale, eps, interpret):
+    return _rmsnorm_pallas(x2, scale, eps, interpret)
+
+
+def _resolve_rmsnorm(rows: int, d: int, backend: str
+                     ) -> Tuple[Decision, bool]:
+    mesh, platform = _mesh_for_dispatch()
+    interpret = platform != "tpu"
+    aligned = rows >= 8 and d % 128 == 0
+    if backend == "jnp":
+        return _decide("rmsnorm", "jnp", "explicit backend"), interpret
+    if backend in ("pallas", "pallas_shard_map"):
+        if not aligned:
+            return _decide("rmsnorm", "jnp",
+                           f"explicit pallas but rows={rows}/d={d} below "
+                           "tile minimum (8 rows, 128-lane d); "
+                           "reference"), interpret
+        return _decide("rmsnorm", "pallas", "explicit backend"), interpret
+    if not aligned:
+        return _decide("rmsnorm", "jnp",
+                       f"rows={rows}/d={d} below tile minimum (8 rows, "
+                       "128-lane d)"), interpret
+    if mesh is not None or ctx.current_rules():
+        return _decide("rmsnorm", "jnp",
+                       "activations are mesh-sharded; fused rmsnorm vjp "
+                       "is single-device (shard_map over row blocks is a "
+                       "ROADMAP item)", mesh), interpret
+    if platform == "tpu":
+        return _decide("rmsnorm", "pallas", "single-device tpu, aligned"), \
+            False
+    return _decide("rmsnorm", "jnp",
+                   f"platform {platform}: Pallas kernels run interpret-"
+                   "only off-TPU"), interpret
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6,
+            backend: str = "auto") -> jnp.ndarray:
+    """Fused RMSNorm over the last dim of an arbitrary-rank activation.
+
+    Differentiable on every backend: the Pallas path carries the one-pass
+    dx/dscale vjp from ``rmsnorm_bwd`` (saved rstd); the jnp path is plain
+    AD through the reference."""
+    assert backend in _BACKENDS, backend
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    decision, interpret = _resolve_rmsnorm(rows, d, backend)
+    if decision.backend == "jnp":
+        return ref.rmsnorm_ref(x, scale, eps=eps)
+    y = _rmsnorm_call(x.reshape(rows, d), scale, eps, interpret)
+    return y.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# fused shared-RMSProp
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("lr", "alpha", "eps"))
+def rmsprop_update(g, grad, *, lr, alpha: float = 0.99,
+                   eps: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Shared-RMSProp for an arbitrary-shaped parameter leaf.
+    Returns (new_g, update)."""
+    shape = g.shape
+    n = g.size
+    if n < LANES:
+        return ref.rmsprop_update_ref(g, grad, lr=lr, alpha=alpha, eps=eps)
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    gf = jnp.pad(g.reshape(-1), (0, pad)).reshape(rows, LANES)
+    df = jnp.pad(grad.reshape(-1), (0, pad)).reshape(rows, LANES)
+    br = 256
+    while rows % br:
+        br //= 2
+    new_g, upd = rmsprop_update_2d(gf, df, jnp.asarray(lr, g.dtype),
+                                   alpha=alpha, eps=eps, block_rows=br)
+    unpad = lambda x: x.reshape(-1)[:n].reshape(shape)
+    return unpad(new_g), unpad(upd)

@@ -42,6 +42,39 @@ def tile_mask(iq, ik, block_q: int, block_k: int, causal: bool,
     return mask
 
 
+def tile_live(iq, ik, block_q: int, block_k: int, causal: bool,
+              window: Optional[int]):
+    """Scalar predicate: does score tile (iq, ik) contain ANY valid entry?
+
+    The complement of ``tile_mask(...).any()`` but computable from the two
+    program ids alone (no iota materialization), so kernels can predicate
+    the whole tile body with ``pl.when``.  Returns None when no mask is
+    active (every tile live) so callers can skip the guard entirely.
+    """
+    live = None
+    if causal:
+        # live iff the smallest kpos can be <= the largest qpos
+        live = ik * block_k <= (iq + 1) * block_q - 1
+    if window is not None:
+        # live iff the largest kpos clears the smallest qpos' window floor
+        w_live = (ik + 1) * block_k - 1 > iq * block_q - window
+        live = w_live if live is None else live & w_live
+    return live
+
+
+def masked_tile_fraction(s: int, block_q: int, block_k: int, causal: bool,
+                         window: Optional[int]) -> float:
+    """Fraction of (iq, ik) score tiles that are fully masked — the work
+    the bwd kernels skip (``tile_live`` evaluated on plain ints)."""
+    n_q, n_k = s // block_q, s // block_k
+    dead = 0
+    for iq in range(n_q):
+        for ik in range(n_k):
+            live = tile_live(iq, ik, block_q, block_k, causal, window)
+            dead += live is not None and not live
+    return dead / float(n_q * n_k)
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
             causal: bool, window: Optional[int], block_q: int, block_k: int,
             n_k: int, scale: float):

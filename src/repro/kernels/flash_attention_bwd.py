@@ -9,20 +9,26 @@ across the innermost (arbitrary-order) grid dimension.
 Two kernels, mirroring the classic FlashAttention-2 split:
 
   * ``dq``:  grid (batch, q_heads, n_q_blocks, n_k_blocks), KV innermost —
-    each q block accumulates ``sum_k ds @ k`` across its KV tiles.
+    each q block accumulates ``sum_k ds @ k`` across its KV tiles.  The
+    softmax-jacobian correction ``delta = rowsum(do * o)`` is computed
+    in-kernel on the first KV step (the o/do tiles are already resident —
+    one fewer HBM pass than a separate precompute) and emitted as a second
+    output for the dkv kernel to consume.
   * ``dkv``: grid (batch, q_heads, n_k_blocks, n_q_blocks), Q innermost —
     each (head, k block) accumulates ``p^T @ do`` and ``ds^T @ q`` across
     the q tiles that attend into it.
+
+Fully-masked score tiles (upper-triangular causal tiles, tiles behind the
+sliding window) are *skipped*: the matmul body is predicated on
+``tile_live`` so the MXU never touches tiles whose softmax weight is
+exactly zero.  Accumulator init/flush stay unconditional — they key off
+grid position, not mask content.
 
 GQA uses the forward's ``h // group`` BlockSpec index-map trick for the
 K/V *reads* (repeated KV heads never touch HBM); the dk/dv *writes* are
 per-query-head (a block revisited by every head of a group across outer
 grid steps cannot accumulate safely), and the cheap ``(Hkv, G)`` group-sum
 happens in jnp outside the kernel — identical to the blockwise-jnp path.
-
-``delta = rowsum(do * o)`` (the dot-product correction term of the softmax
-jacobian) is precomputed outside: it is one elementwise reduce over tensors
-the caller already holds, and passing it in keeps both kernels matmul-only.
 """
 from __future__ import annotations
 
@@ -35,7 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
-from repro.kernels.flash_attention import NEG, tile_mask
+from repro.kernels.flash_attention import NEG, tile_live, tile_mask
 
 
 def _recompute_p(q, k, lse, iq, ik, *, block_q, block_k, causal, window,
@@ -48,29 +54,42 @@ def _recompute_p(q, k, lse, iq, ik, *, block_q, block_k, causal, window,
     return jnp.exp(s - lse[:, None])
 
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-               dq_acc_ref, *, causal: bool, window: Optional[int],
-               block_q: int, block_k: int, n_k: int, scale: float):
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref, dq_ref,
+               delta_ref, dq_acc_ref, delta_acc_ref, *, causal: bool,
+               window: Optional[int], block_q: int, block_k: int, n_k: int,
+               scale: float):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
     @pl.when(ik == 0)
     def _init():
         dq_acc_ref[...] = jnp.zeros_like(dq_acc_ref)
+        # fused delta: rowsum(do * o) over the q tile, once per q block
+        delta = jnp.sum(do_ref[0, 0].astype(jnp.float32) *
+                        o_ref[0, 0].astype(jnp.float32), axis=1)
+        delta_acc_ref[...] = delta
+        delta_ref[0, 0] = delta
 
-    q = q_ref[0, 0]                      # (bq, D)
-    k = k_ref[0, :, 0, :]                # (bk, D)
-    v = v_ref[0, :, 0, :]                # (bk, D)
-    do = do_ref[0, 0]                    # (bq, D)
-    p = _recompute_p(q, k, lse_ref[0, 0], iq, ik, block_q=block_q,
-                     block_k=block_k, causal=causal, window=window,
-                     scale=scale)
-    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    ds = p * (dp - delta_ref[0, 0][:, None]) * scale
-    dq_acc_ref[...] += jax.lax.dot_general(
-        ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    def _compute():
+        q = q_ref[0, 0]                  # (bq, D)
+        k = k_ref[0, :, 0, :]            # (bk, D)
+        v = v_ref[0, :, 0, :]            # (bk, D)
+        do = do_ref[0, 0]                # (bq, D)
+        p = _recompute_p(q, k, lse_ref[0, 0], iq, ik, block_q=block_q,
+                         block_k=block_k, causal=causal, window=window,
+                         scale=scale)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_acc_ref[...][:, None]) * scale
+        dq_acc_ref[...] += jax.lax.dot_general(
+            ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    live = tile_live(iq, ik, block_q, block_k, causal, window)
+    if live is None:
+        _compute()
+    else:
+        pl.when(live)(_compute)
 
     @pl.when(ik == n_k - 1)
     def _finish():
@@ -89,22 +108,29 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dk_acc_ref[...] = jnp.zeros_like(dk_acc_ref)
         dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
 
-    q = q_ref[0, 0]                      # (bq, D)
-    k = k_ref[0, :, 0, :]                # (bk, D)
-    v = v_ref[0, :, 0, :]                # (bk, D)
-    do = do_ref[0, 0]                    # (bq, D)
-    p = _recompute_p(q, k, lse_ref[0, 0], iq, ik, block_q=block_q,
-                     block_k=block_k, causal=causal, window=window,
-                     scale=scale)
-    dv_acc_ref[...] += jax.lax.dot_general(
-        p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    ds = p * (dp - delta_ref[0, 0][:, None]) * scale
-    dk_acc_ref[...] += jax.lax.dot_general(
-        ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    def _compute():
+        q = q_ref[0, 0]                  # (bq, D)
+        k = k_ref[0, :, 0, :]            # (bk, D)
+        v = v_ref[0, :, 0, :]            # (bk, D)
+        do = do_ref[0, 0]                # (bq, D)
+        p = _recompute_p(q, k, lse_ref[0, 0], iq, ik, block_q=block_q,
+                         block_k=block_k, causal=causal, window=window,
+                         scale=scale)
+        dv_acc_ref[...] += jax.lax.dot_general(
+            p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0][:, None]) * scale
+        dk_acc_ref[...] += jax.lax.dot_general(
+            ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    live = tile_live(iq, ik, block_q, block_k, causal, window)
+    if live is None:
+        _compute()
+    else:
+        pl.when(live)(_compute)
 
     @pl.when(iq == n_q - 1)
     def _finish():
@@ -134,11 +160,10 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
 
     qh = jnp.moveaxis(q, 1, 2)                      # (B,Hq,S,D)
     doh = jnp.moveaxis(do, 1, 2)
-    delta = jnp.einsum("bhsd,bhsd->bhs", doh.astype(jnp.float32),
-                       jnp.moveaxis(o, 1, 2).astype(jnp.float32))
+    oh = jnp.moveaxis(o, 1, 2)
 
-    # --- dq: grid (B, Hq, n_q, n_k), KV innermost ---------------------------
-    dq = pl.pallas_call(
+    # --- dq (+ fused delta): grid (B, Hq, n_q, n_k), KV innermost ----------
+    dq, delta = pl.pallas_call(
         functools.partial(_dq_kernel, causal=causal, window=window,
                           block_q=bq, block_k=bk, n_k=n_k, scale=scale),
         grid=(b, hq, n_q, n_k),
@@ -151,18 +176,27 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
                          lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
             pl.BlockSpec((1, 1, bq, d),
                          lambda b_, h, iq, ik: (b_, h, iq, 0)),
-            pl.BlockSpec((1, 1, bq), lambda b_, h, iq, ik: (b_, h, iq)),
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, iq, ik: (b_, h, iq, 0)),
             pl.BlockSpec((1, 1, bq), lambda b_, h, iq, ik: (b_, h, iq)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, d),
-                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
-        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, iq, ik: (b_, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, s), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32)],
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(qh, k, v, doh, lse, delta).swapaxes(1, 2)
+    )(qh, k, v, doh, oh, lse)
+    dq = dq.swapaxes(1, 2)
 
     # --- dk/dv: grid (B, Hq, n_k, n_q), Q innermost -------------------------
     dk_h, dv_h = pl.pallas_call(

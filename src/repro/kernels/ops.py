@@ -1,119 +1,18 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Back-compat re-exports of the kernel entry points.
 
-These are the entry points the model/optimizer layers call with
-``backend="pallas"``; each handles layout, padding, and falls back to the
-jnp reference for shapes the kernels don't support (tiny smoke sizes).
+The real logic lives in ``repro.kernels.dispatch`` — one place that owns
+backend resolution (mesh platform, shape alignment, GQA divisibility),
+shard_map partitioning, and the custom VJPs.  Import from there in new
+code; this module only keeps the historical ``kernels.ops`` names alive.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from repro.kernels.dispatch import (  # noqa: F401
+    decode_attention,
+    flash_attention,
+    rmsnorm,
+    rmsprop_update,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_fwd
-from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.flash_attention_bwd import flash_attention_bwd
-from repro.kernels.rmsnorm import rmsnorm_fwd
-from repro.kernels.shared_rmsprop import rmsprop_update_2d
-
-LANES = 1024
-
-
-def _flash_blocks(s: int) -> int:
-    # largest block <= 512 dividing s (s is a multiple of 128 on this
-    # path, so this terminates at >= 128)
-    b = min(512, s)
-    while s % b:
-        b //= 2
-    return b
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _flash_pallas(q, k, v, causal, window):
-    bq = bk = _flash_blocks(q.shape[1])
-    return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                               block_q=bq, block_k=bk)
-
-
-def _flash_pallas_fwd(q, k, v, causal, window):
-    bq = bk = _flash_blocks(q.shape[1])
-    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                 block_q=bq, block_k=bk,
-                                 save_residuals=True)
-    return o, (q, k, v, o, lse)
-
-
-def _flash_pallas_bwd(causal, window, res, do):
-    q, k, v, o, lse = res
-    bq = bk = _flash_blocks(q.shape[1])
-    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
-                               window=window, block_q=bq, block_k=bk)
-
-
-_flash_pallas.defvjp(_flash_pallas_fwd, _flash_pallas_bwd)
-
-
-@functools.partial(jax.jit, static_argnames=("causal", "window"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None) -> jnp.ndarray:
-    """q (B,S,Hq,D); k,v (B,S,Hkv,D) -> (B,S,Hq,D).
-
-    Differentiable end-to-end: the Pallas path carries a custom VJP whose
-    backward is the fused recompute kernel in ``flash_attention_bwd``; the
-    small-shape fallback differentiates through the jnp reference."""
-    s = q.shape[1]
-    if s < 128 or s % 128 != 0:
-        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
-    return _flash_pallas(q, k, v, causal, window)
-
-
-@jax.jit
-def decode_attention(q, k_cache, v_cache, kpos,
-                     pos=None) -> jnp.ndarray:
-    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) -> (B,Hq,D)."""
-    if pos is None:
-        pos = jnp.max(kpos)
-    length = k_cache.shape[1]
-    if length < 128 or length % 128 != 0:
-        return ref.decode_attention_ref(q, k_cache, v_cache, kpos, pos)
-    bk = min(1024, length)
-    while length % bk:
-        bk //= 2
-    return decode_attention_fwd(q, k_cache, v_cache, kpos, pos, block_k=bk)
-
-
-@functools.partial(jax.jit, static_argnames=("lr", "alpha", "eps"))
-def rmsprop_update(g, grad, *, lr, alpha: float = 0.99,
-                   eps: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused Shared-RMSProp for an arbitrary-shaped parameter leaf.
-    Returns (new_g, update)."""
-    shape = g.shape
-    n = g.size
-    if n < LANES:
-        return ref.rmsprop_update_ref(g, grad, lr=lr, alpha=alpha, eps=eps)
-    rows = -(-n // LANES)
-    pad = rows * LANES - n
-    gf = jnp.pad(g.reshape(-1), (0, pad)).reshape(rows, LANES)
-    df = jnp.pad(grad.reshape(-1), (0, pad)).reshape(rows, LANES)
-    br = 256
-    while rows % br:
-        br //= 2
-    new_g, upd = rmsprop_update_2d(gf, df, jnp.asarray(lr, g.dtype),
-                                   alpha=alpha, eps=eps, block_rows=br)
-    unpad = lambda x: x.reshape(-1)[:n].reshape(shape)
-    return unpad(new_g), unpad(upd)
-
-
-@functools.partial(jax.jit, static_argnames=("eps",))
-def rmsnorm(x, scale, *, eps: float = 1e-6) -> jnp.ndarray:
-    """Fused RMSNorm over the last dim of an arbitrary-rank activation."""
-    shape = x.shape
-    d = shape[-1]
-    rows = x.size // d
-    if rows < 8 or d % 128 != 0:
-        return ref.rmsnorm_ref(x, scale, eps=eps)
-    y = rmsnorm_fwd(x.reshape(rows, d), scale, eps=eps)
-    return y.reshape(shape)
+__all__ = ["decode_attention", "flash_attention", "rmsnorm",
+           "rmsprop_update"]

@@ -27,6 +27,7 @@ from repro import compat
 from repro.configs import get_config, ARCH_IDS, ALIASES
 from repro.core import llm_a3c
 from repro.distributed import ctx, sharding
+from repro.kernels import dispatch
 from repro.launch import hlo_analysis, traffic
 from repro.launch import specs as specs_mod
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
@@ -75,7 +76,12 @@ def lower_case(arch: str, shape_id: str, *, multi_pod: bool = False,
     rules = sharding.activation_rules(mesh, batch_size=bsz, cfg=cfg)
 
     t0 = time.time()
-    with compat.set_mesh(mesh), ctx.sharding_rules(rules):
+    # install the mesh as the kernel-dispatch target: backend resolution
+    # keys off the mesh's device platform (the lowering target), and the
+    # dispatcher shard_maps the Pallas kernels over (data, heads)
+    dispatch.clear_decision_log()
+    with compat.set_mesh(mesh), ctx.use_mesh(mesh), \
+            ctx.sharding_rules(rules):
         if kind == "train" and mode == "delayed":
             # T3: paper-faithful pod-scale asynchrony — each pod updates a
             # local replica for H steps, merging on the 'pod' axis.
@@ -230,6 +236,8 @@ def lower_case(arch: str, shape_id: str, *, multi_pod: bool = False,
         "collective_bytes": coll,
         "memory": mem,
         "roofline": terms,
+        # which kernels this lowering picked, and why any call fell back
+        "kernel_dispatch": hlo_analysis.kernel_dispatch_summary(),
     }
     if verbose:
         print(json.dumps(rec, indent=1, default=str))

@@ -256,6 +256,15 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     return {k: t[k] for k in _COLLECTIVE_KINDS} | {"total": t["total"]}
 
 
+def kernel_dispatch_summary() -> List[dict]:
+    """Deduped kernel-dispatch decisions recorded during the last lowering:
+    which backend each op resolved to and — for jnp fallbacks — why.  Pairs
+    the HLO-derived numbers above with the *reason* the program lowered the
+    way it did (e.g. "heads do not divide the 16-way model axis")."""
+    from repro.kernels import dispatch
+    return dispatch.decision_summary()
+
+
 def roofline_terms(*, hlo_flops: float, hbm_bytes: float,
                    collective_total: float, n_chips: int,
                    peak_flops: float, hbm_bw: float, ici_bw: float

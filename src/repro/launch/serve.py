@@ -25,7 +25,6 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -43,7 +42,9 @@ def main():
 
     prompt = jax.random.randint(key, (b, args.prompt_len), 0,
                                 cfg.vocab_size)
-    serve_step = jax.jit(llm_a3c.make_serve_step(cfg, backend=args.backend))
+    # backend selection is automatic: the kernel dispatch layer resolves
+    # Pallas vs jnp from the lowering target (see repro.kernels.dispatch)
+    serve_step = jax.jit(llm_a3c.make_serve_step(cfg))
 
     # prefill by stepping the cache token-by-token (keeps one code path for
     # every cache kind: KV, ring, SSM, xLSTM)

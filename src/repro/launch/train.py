@@ -65,9 +65,13 @@ def run_rl(args) -> dict:
 
 
 def run_llm(args) -> dict:
+    import contextlib
+
     from repro.configs import get_config
     from repro.core import llm_a3c
     from repro.data.pipeline import TokenPipeline
+    from repro.distributed import ctx
+    from repro.launch.mesh import make_debug_mesh
     from repro.models import model as M
     from repro.optim import optimizers as opt_mod
 
@@ -80,22 +84,33 @@ def run_llm(args) -> dict:
     opt_state = opt.init(params)
     pipe = TokenPipeline(vocab=cfg.vocab_size, seq_len=args.seq,
                          global_batch=args.batch)
+    # multi-device host: install a data-parallel dispatch mesh so the
+    # kernel dispatch layer shard_maps the Pallas kernels over the batch
+    # (backend choice itself is automatic — keyed off the mesh platform)
+    n_dev = jax.local_device_count()
+    mesh_ctx = contextlib.nullcontext()
+    if n_dev > 1 and args.batch % n_dev == 0:
+        mesh_ctx = ctx.use_mesh(make_debug_mesh(data=n_dev, model=1))
     train_step = jax.jit(llm_a3c.make_train_step(
         cfg, opt, lr0=args.lr, total_steps=args.steps))
     history = []
     t0 = time.time()
-    for step in range(args.steps):
-        batch = pipe.batch(jax.random.key(args.seed + 2), step)
-        params, opt_state, metrics = train_step(
-            params, opt_state, batch, jnp.asarray(step))
-        if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
-            rec = {"step": step,
-                   "loss": float(metrics["loss"]),
-                   "mean_return": float(metrics["mean_return"]),
-                   "entropy": float(metrics["entropy"]),
-                   "wall_s": round(time.time() - t0, 1)}
-            history.append(rec)
-            print(json.dumps(rec), flush=True)
+    # dispatch resolves at trace time, so the mesh stays installed for the
+    # whole loop (first call traces)
+    with mesh_ctx:
+        for step in range(args.steps):
+            batch = pipe.batch(jax.random.key(args.seed + 2), step)
+            params, opt_state, metrics = train_step(
+                params, opt_state, batch, jnp.asarray(step))
+            if step % max(1, args.steps // 20) == 0 \
+                    or step == args.steps - 1:
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "mean_return": float(metrics["mean_return"]),
+                       "entropy": float(metrics["entropy"]),
+                       "wall_s": round(time.time() - t0, 1)}
+                history.append(rec)
+                print(json.dumps(rec), flush=True)
     if args.checkpoint:
         from repro import checkpoint
         checkpoint.save(args.checkpoint, params)

@@ -5,10 +5,13 @@ Three entry points:
   * ``attend_decode``  — one new token against a pre-filled KV cache.
   * ``cross_attend``   — decoder query over encoder memory (Whisper).
 
-The jnp paths here are the reference implementations; the Pallas kernels in
+The jnp paths here (``sdpa``, masks, the blockwise flash in
+``flash_jnp``) are the reference implementations; the Pallas kernels in
 ``repro.kernels`` implement the same math with explicit VMEM tiling and are
-validated against these in tests.  ``backend="pallas"`` routes train-time
-attention through the flash kernel (interpret-mode on CPU).
+validated against these in tests.  Backend selection — which of the two
+families a call lowers through, bare or shard_map'd over a mesh — lives
+entirely in ``repro.kernels.dispatch``; the entry points here just forward
+``backend`` (default ``"auto"``) to it.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import ctx
+from repro.kernels import dispatch
 from repro.models import common as cm
 
 NEG_INF = -1e30
@@ -25,24 +29,6 @@ NEG_INF = -1e30
 
 class AttnParams(NamedTuple):
     pass  # attention params are plain dicts; NamedTuple kept for doc purposes
-
-
-def resolve_backend(s: int) -> str:
-    """``backend="auto"`` dispatch: the Pallas flash kernel (now
-    differentiable via its fused backward) is the default train path on TPU
-    for MXU-aligned sequence lengths; on CPU the kernel only runs in
-    interpret mode, so the blockwise-jnp / sdpa paths stay the default.
-
-    Under active sharding rules (mesh-partitioned training/serving) the
-    jnp paths stay in charge: a bare ``pallas_call`` has no partitioning
-    rule, so GSPMD would gather/replicate q/k/v around it — shard_map'ing
-    the kernel is a ROADMAP follow-up.  This also keeps the CPU-host
-    dry-run honest: what it lowers for a mesh is what a mesh runs."""
-    if ctx.current_rules():
-        return "jnp"
-    if jax.default_backend() == "tpu" and s >= 128 and s % 128 == 0:
-        return "pallas"
-    return "jnp"
 
 
 def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
@@ -98,7 +84,7 @@ def causal_mask(sq: int, sk: int, *, window: Optional[int] = None,
 def attend_train(params: dict, x: jnp.ndarray, cos, sin, cfg,
                  *, window: Optional[int] = None, use_rope: bool = True,
                  bidirectional: bool = False,
-                 backend: str = "jnp") -> jnp.ndarray:
+                 backend: str = "auto") -> jnp.ndarray:
     """Full-sequence self attention.  x (B, S, d_model)."""
     n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
@@ -113,22 +99,8 @@ def attend_train(params: dict, x: jnp.ndarray, cos, sin, cfg,
     q = ctx.constrain(q, "attn_q")
     k = ctx.constrain(k, "attn_kv")
     v = ctx.constrain(v, "attn_kv")
-    s = x.shape[1]
-    if backend == "auto":
-        backend = resolve_backend(s)
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        o = kops.flash_attention(q, k, v, causal=not bidirectional,
-                                 window=window)
-    elif not bidirectional and s >= 2048 and s % 512 == 0:
-        # blockwise attention: never materializes the S x S score matrix
-        from repro.models.flash_jnp import flash_attention_jnp
-        o = flash_attention_jnp(q, k, v, True, window, 512)
-    else:
-        k = _repeat_kv(k, n_h // n_kv)
-        v = _repeat_kv(v, n_h // n_kv)
-        mask = None if bidirectional else causal_mask(s, s, window=window)
-        o = sdpa(q, k, v, mask)
+    o = dispatch.flash_attention(q, k, v, causal=not bidirectional,
+                                 window=window, backend=backend)
     b, s = x.shape[:2]
     return cm.linear(params["wo"], o.reshape(b, s, n_h * hd))
 
@@ -150,7 +122,7 @@ def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
 
 def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                   cfg, *, window: Optional[int] = None, use_rope: bool = True,
-                  backend: str = "jnp"):
+                  backend: str = "auto"):
     """One-token decode.  x (B, 1, d_model); pos () absolute position.
 
     Returns (out (B, 1, d_model), new_cache).  When ``window`` is set the
@@ -169,8 +141,6 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
 
     cache_len = cache["k"].shape[1]
-    if backend == "auto":
-        backend = resolve_backend(cache_len)
     # full cache: slot == pos (pos < cache_len); ring cache: wrap around.
     slot = pos % cache_len
     ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
@@ -179,24 +149,15 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                                       (0, slot, 0, 0))
     new_cache = {"k": ck, "v": cv, "index": pos + 1}
 
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        kpos = _cache_positions(cache_len, pos, window)
-        o = kops.decode_attention(q[:, 0], ck, cv, kpos)
-        o = o[:, None]
-    else:
-        kk = _repeat_kv(ck.astype(q.dtype), n_h // n_kv)
-        vv = _repeat_kv(cv.astype(q.dtype), n_h // n_kv)
-        kpos = _cache_positions(cache_len, pos, window)
-        valid = (kpos >= 0) & (kpos <= pos)
-        mask = valid[None, None, None, :]
-        o = sdpa(q, kk, vv, mask)
+    kpos = _cache_positions(cache_len, pos, window)
+    o = dispatch.decode_attention(q[:, 0], ck, cv, kpos, pos,
+                                  backend=backend)[:, None]
     return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
 
 
 def attend_decode_cp(params: dict, x: jnp.ndarray, cache: dict,
                      pos: jnp.ndarray, cfg, *, window: Optional[int],
-                     mesh, seq_axes, dp_axes, backend: str = "jnp"):
+                     mesh, seq_axes, dp_axes):
     """Context-parallel decode (flash-decoding pattern, perf iter #5).
 
     The KV cache's sequence dim is sharded over ``seq_axes``; each device

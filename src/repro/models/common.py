@@ -84,7 +84,10 @@ def layernorm(p: Params, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
 
 def apply_norm(kind: str, p: Params, x: jnp.ndarray) -> jnp.ndarray:
     if kind == "rmsnorm":
-        return rmsnorm(p, x)
+        # dispatch layer: fused Pallas fwd+vjp on TPU, the jnp reference
+        # above elsewhere (lazy import — models stay importable standalone)
+        from repro.kernels import dispatch
+        return dispatch.rmsnorm(x, p["scale"])
     if kind == "layernorm":
         return layernorm(p, x)
     raise ValueError(f"unknown norm {kind}")

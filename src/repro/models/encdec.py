@@ -71,8 +71,7 @@ def init_params(cfg: ModelConfig, key) -> dict:
     return p
 
 
-def encode(cfg: ModelConfig, params, frames: jnp.ndarray,
-           *, backend: str = "jnp") -> jnp.ndarray:
+def encode(cfg: ModelConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
     """frames (B, F, d_model) — stub conv output.  Bidirectional encoder."""
     x = frames.astype(cfg.dtype)
     x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
@@ -80,7 +79,7 @@ def encode(cfg: ModelConfig, params, frames: jnp.ndarray,
         h = attn.attend_train(lyr["attn"],
                               cm.apply_norm(cfg.norm, lyr["ln1"], x),
                               None, None, cfg, use_rope=False,
-                              bidirectional=True, backend=backend)
+                              bidirectional=True)
         x = x + h
         x = x + mlp_mod.mlp(lyr["mlp"],
                             cm.apply_norm(cfg.norm, lyr["ln2"], x),
@@ -88,8 +87,8 @@ def encode(cfg: ModelConfig, params, frames: jnp.ndarray,
     return cm.apply_norm(cfg.norm, params["enc_norm"], x)
 
 
-def forward(cfg: ModelConfig, params, batch, *, backend: str = "jnp"):
-    mem = encode(cfg, params, batch["enc_frames"], backend=backend)
+def forward(cfg: ModelConfig, params, batch):
+    mem = encode(cfg, params, batch["enc_frames"])
     x = cm.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
     x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
     mem_kvs = [attn.memory_kv(l["cross_attn"], mem, cfg)
@@ -97,8 +96,7 @@ def forward(cfg: ModelConfig, params, batch, *, backend: str = "jnp"):
     for lyr, mkv in zip(params["dec_layers"], mem_kvs):
         h = attn.attend_train(lyr["self_attn"],
                               cm.apply_norm(cfg.norm, lyr["ln1"], x),
-                              None, None, cfg, use_rope=False,
-                              backend=backend)
+                              None, None, cfg, use_rope=False)
         x = x + h
         x = x + attn.cross_attend(lyr["cross_attn"],
                                   cm.apply_norm(cfg.norm, lyr["ln_x"], x),
@@ -130,10 +128,9 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
     }
 
 
-def prefill_cross(cfg: ModelConfig, params, cache, frames,
-                  *, backend: str = "jnp"):
+def prefill_cross(cfg: ModelConfig, params, cache, frames):
     """Run the encoder once and stash cross-attention K/V in the cache."""
-    mem = encode(cfg, params, frames, backend=backend)
+    mem = encode(cfg, params, frames)
     cross = []
     for lyr in params["dec_layers"]:
         k, v = attn.memory_kv(lyr["cross_attn"], mem, cfg)
@@ -142,8 +139,7 @@ def prefill_cross(cfg: ModelConfig, params, cache, frames,
     return {**cache, "cross": cross}
 
 
-def decode_step(cfg: ModelConfig, params, cache, batch, pos,
-                *, backend: str = "jnp"):
+def decode_step(cfg: ModelConfig, params, cache, batch, pos):
     x = cm.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
     # positional embedding at absolute pos (sinusoid computed directly)
     dim = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)[None]
@@ -157,8 +153,8 @@ def decode_step(cfg: ModelConfig, params, cache, batch, pos,
     for i, lyr in enumerate(params["dec_layers"]):
         h, c = attn.attend_decode(lyr["self_attn"],
                                   cm.apply_norm(cfg.norm, lyr["ln1"], x),
-                                  cache["self"][i], pos, cfg, use_rope=False,
-                                  backend=backend)
+                                  cache["self"][i], pos, cfg,
+                                  use_rope=False)
         new_self.append(c)
         x = x + h
         mkv = (cache["cross"][i]["k"], cache["cross"][i]["v"])

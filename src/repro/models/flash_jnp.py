@@ -1,6 +1,8 @@
 """Blockwise (flash) attention in pure JAX with a custom VJP.
 
-This is the lowering-path implementation for long sequences: the S x S score
+This module is one of the jnp fallbacks the kernel dispatch layer
+(``repro.kernels.dispatch``) selects — it holds no backend logic of its
+own.  It is the lowering-path implementation for long sequences: the S x S score
 matrix is never materialized — a ``lax.scan`` over KV blocks carries the
 online-softmax state (m, l, acc), and the backward pass recomputes block
 scores from saved (q, k, v, out, lse) instead of checkpointing per-block

@@ -79,12 +79,12 @@ def _init_block(cfg: ModelConfig, kind: str, key) -> Params:
 
 
 def _apply_block_train(cfg: ModelConfig, kind: str, p: Params, x, cos, sin,
-                       aux, backend: str):
+                       aux):
     """One residual block, training (full-sequence) mode."""
     window = cfg.sliding_window if kind == "attn_local" else None
     if kind in ("attn", "attn_local"):
         h = attn.attend_train(p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x),
-                              cos, sin, cfg, window=window, backend=backend)
+                              cos, sin, cfg, window=window)
         # seq-parallel block outputs: turns the model-axis gradient
         # all-reduce into a reduce-scatter (Megatron-SP, perf iter #2)
         x = x + ctx.constrain(h, "residual")
@@ -141,7 +141,7 @@ def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
 
 
 def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache,
-                        pos, backend: str):
+                        pos):
     window = cfg.sliding_window if kind == "attn_local" else None
     if kind in ("attn", "attn_local"):
         cp = (ctx.current_rules() or {}).get("decode_cp")
@@ -150,12 +150,11 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache,
             h, cache = attn.attend_decode_cp(
                 p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, pos,
                 cfg, window=window, mesh=cp["mesh"],
-                seq_axes=cp["seq_axes"], dp_axes=cp["dp_axes"],
-                backend=backend)
+                seq_axes=cp["seq_axes"], dp_axes=cp["dp_axes"])
         else:
             h, cache = attn.attend_decode(
                 p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x),
-                cache, pos, cfg, window=window, backend=backend)
+                cache, pos, cfg, window=window)
         x = x + h
         y = cm.apply_norm(cfg.norm, p["ln2"], x)
         if cfg.n_experts:
@@ -274,12 +273,12 @@ def _rope_tables(cfg: ModelConfig, batch, s: int):
     return cm.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
 
 
-def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
-            *, backend: str = "jnp") -> Dict[str, jnp.ndarray]:
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> Dict[str, jnp.ndarray]:
     params = cast_params(cfg, params)
     if cfg.is_encdec:
         from repro.models import encdec
-        return encdec.forward(cfg, params, batch, backend=backend)
+        return encdec.forward(cfg, params, batch)
     x = _embed_inputs(cfg, params, batch)
     s = x.shape[1]
     cos, sin = _rope_tables(cfg, batch, s)
@@ -292,7 +291,7 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
         def cycle_fn(x, aux, cyc_params):
             for j, kind in enumerate(cyc_kinds):
                 x, aux = _apply_block_train(cfg, kind, cyc_params[j], x,
-                                            cos, sin, aux, backend)
+                                            cos, sin, aux)
             return x, aux
 
         if cfg.remat:
@@ -312,14 +311,14 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
         step_fn = _apply_block_train
         if cfg.remat:
             step_fn = jax.checkpoint(_apply_block_train,
-                                     static_argnums=(0, 1, 7))
+                                     static_argnums=(0, 1))
         for i, kind in enumerate(kinds):
             x, aux = step_fn(cfg, kind, params["layers"][i], x, cos, sin,
-                             aux, backend)
+                             aux)
             x = ctx.constrain(x, "residual")
             if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
                 x, aux = step_fn(cfg, "attn", params["shared_attn"], x,
-                                 cos, sin, aux, backend)
+                                 cos, sin, aux)
                 x = ctx.constrain(x, "residual")
 
     x = cm.apply_norm(cfg.norm, params["final_norm"], x)
@@ -362,15 +361,13 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
-                batch: Dict[str, jnp.ndarray], pos: jnp.ndarray,
-                *, backend: str = "jnp"):
+                batch: Dict[str, jnp.ndarray], pos: jnp.ndarray):
     """One-token decode.  batch: {"tokens": (B,1)} or {"embeds": (B,1,d)};
     pos () int32 — current absolute position.  Returns (out, new_cache)."""
     params = cast_params(cfg, params)
     if cfg.is_encdec:
         from repro.models import encdec
-        return encdec.decode_step(cfg, params, cache, batch, pos,
-                                  backend=backend)
+        return encdec.decode_step(cfg, params, cache, batch, pos)
     x = _embed_inputs(cfg, params, batch)
     kinds = cfg.layer_kinds()
 
@@ -382,7 +379,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
             new_caches = []
             for j, kind in enumerate(cyc_kinds):
                 x, c = _apply_block_decode(cfg, kind, cyc_params[j], x,
-                                           cyc_cache[j], pos, backend)
+                                           cyc_cache[j], pos)
                 new_caches.append(c)
             return x, tuple(new_caches)
 
@@ -396,12 +393,11 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         shared_i = 0
         for i, kind in enumerate(kinds):
             x, c = _apply_block_decode(cfg, kind, params["layers"][i], x,
-                                       cache["layers"][i], pos, backend)
+                                       cache["layers"][i], pos)
             new_caches.append(c)
             if cfg.shared_attn_every and (i + 1) % cfg.shared_attn_every == 0:
                 x, cs = _apply_block_decode(cfg, "attn", params["shared_attn"],
-                                            x, cache["shared"][shared_i], pos,
-                                            backend)
+                                            x, cache["shared"][shared_i], pos)
                 new_shared.append(cs)
                 shared_i += 1
         cache = dict(cache)

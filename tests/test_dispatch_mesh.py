@@ -1,0 +1,223 @@
+"""Mesh-aware kernel dispatch: resolution, lowering, and parity.
+
+The shard_map tests need a multi-device host; CI runs a matrix leg with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` so they execute on
+every PR (they skip on a plain single-device run).  The full GQA x mask
+parity sweep carries the ``slow`` marker; one case per mesh orientation
+stays fast.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import ctx
+from repro.kernels import dispatch, ref
+from repro.models import attention as attn
+from repro.models.flash_jnp import flash_attention_jnp
+
+MULTI = len(jax.devices()) >= 2
+KEY = jax.random.key(7)
+
+
+class _Cfg:
+    n_heads, n_kv_heads, head_dim = 4, 2, 64
+    rope_theta = 10000.0
+
+
+def _qkv(b, s, hq, hkv, d, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 4)
+    return (jax.random.normal(ks[0], (b, s, hq, d), dtype),
+            jax.random.normal(ks[1], (b, s, hkv, d), dtype),
+            jax.random.normal(ks[2], (b, s, hkv, d), dtype),
+            jax.random.normal(ks[3], (b, s, hq, d), dtype))
+
+
+# ---------------------------------------------------------------------------
+# resolution + fallback reasons (single-device)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.default_backend() != "cpu", reason="cpu-only check")
+def test_auto_cpu_single_device_picks_jnp_with_reason():
+    q, k, v, _ = _qkv(1, 256, 4, 2, 64)
+    dispatch.clear_decision_log()
+    out = dispatch.flash_attention(q, k, v, causal=True)
+    d = dispatch.last_decision("flash_attention")
+    assert d.backend == "jnp"
+    assert "interpret-only" in d.reason
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_auto_misaligned_seq_records_reason():
+    q, k, v, _ = _qkv(1, 192, 4, 2, 64)
+    dispatch.clear_decision_log()
+    dispatch.flash_attention(q, k, v, causal=True)
+    d = dispatch.last_decision("flash_attention")
+    assert d.backend == "jnp"
+    assert "MXU-aligned" in d.reason
+
+
+def test_rules_without_mesh_fall_back():
+    from jax.sharding import PartitionSpec as P
+    q, k, v, _ = _qkv(1, 256, 4, 2, 64)
+    dispatch.clear_decision_log()
+    with ctx.sharding_rules({"residual": P()}):
+        dispatch.flash_attention(q, k, v, causal=True)
+    d = dispatch.last_decision("flash_attention")
+    assert d.backend == "jnp"
+    assert "without a dispatch mesh" in d.reason
+
+
+def test_decision_summary_feeds_hlo_analysis():
+    from repro.launch import hlo_analysis
+    q, k, v, _ = _qkv(1, 192, 4, 2, 64)
+    dispatch.clear_decision_log()
+    dispatch.flash_attention(q, k, v, causal=True)
+    summ = hlo_analysis.kernel_dispatch_summary()
+    assert any(r["op"] == "flash_attention" and r["backend"] == "jnp"
+               and "MXU-aligned" in r["reason"] for r in summ)
+
+
+# ---------------------------------------------------------------------------
+# lowering inspection (>= 2 host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+@pytest.mark.parametrize("mesh_shape", [(2, 1), (1, 2)])
+def test_attend_train_auto_lowers_shard_map_pallas(mesh_shape):
+    """backend="auto" under a mesh: attend_train must lower through the
+    shard_map'd Pallas kernel (asserted on the lowered module), and fall
+    back to jnp with a recorded reason when no mesh is installed."""
+    cfg = _Cfg()
+    params = attn.init_attention(jax.random.key(0), 256, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim)
+    x = jax.random.normal(KEY, (2, 256, 256))
+
+    def fn(x):
+        return attn.attend_train(params, x, None, None, cfg,
+                                 use_rope=False)
+
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    with ctx.use_mesh(mesh):
+        dispatch.clear_decision_log()
+        lowered = jax.jit(fn).lower(x)
+        d = dispatch.last_decision("flash_attention")
+        assert d.backend == "pallas_shard_map", d
+        assert "shmap_body" in lowered.as_text()
+        assert "shard_map" in str(jax.make_jaxpr(fn)(x))
+
+    # fresh closure: dispatch resolves at trace time, and jax caches traces
+    # by function identity — reusing ``fn`` would replay the mesh lowering
+    def fn2(x):
+        return attn.attend_train(params, x, None, None, cfg,
+                                 use_rope=False)
+
+    dispatch.clear_decision_log()
+    lowered = jax.jit(fn2).lower(x)
+    d = dispatch.last_decision("flash_attention")
+    assert d.backend == "jnp" and d.reason
+    assert "shmap_body" not in lowered.as_text()
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_auto_mesh_indivisible_heads_falls_back():
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    q, k, v, _ = _qkv(1, 256, 3, 3, 64)    # 3 heads on a 2-way model axis
+    with ctx.use_mesh(mesh):
+        dispatch.clear_decision_log()
+        out = dispatch.flash_attention(q, k, v, causal=True)
+    d = dispatch.last_decision("flash_attention")
+    assert d.backend == "jnp"
+    assert "do not divide" in d.reason
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# parity: shard_map'd Pallas vs jnp oracle (fwd + grads)
+# ---------------------------------------------------------------------------
+
+def _parity_case(mesh_shape, b, s, hq, hkv, d, window, causal, dtype):
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    q, k, v, do = _qkv(b, s, hq, hkv, d, dtype)
+
+    def loss_sharded(q, k, v):
+        o = dispatch.flash_attention(q, k, v, causal=causal, window=window)
+        return jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32))
+
+    def loss_ref(q, k, v):
+        o = flash_attention_jnp(q, k, v, causal, window, 128)
+        return jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32))
+
+    with ctx.use_mesh(mesh):
+        dispatch.clear_decision_log()
+        o = jax.jit(lambda q, k, v: dispatch.flash_attention(
+            q, k, v, causal=causal, window=window))(q, k, v)
+        assert dispatch.last_decision("flash_attention").backend == \
+            "pallas_shard_map"
+        g_sh = jax.jit(jax.grad(loss_sharded, argnums=(0, 1, 2)))(q, k, v)
+    want = flash_attention_jnp(q, k, v, causal, window, 128)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for got, want_g, name in zip(g_sh, g_ref, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want_g, np.float32),
+                                   atol=tol, rtol=tol, err_msg=name)
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+@pytest.mark.parametrize("mesh_shape,window", [((2, 1), None),
+                                               ((1, 2), 128)])
+def test_sharded_parity_fast(mesh_shape, window):
+    """One causal-GQA case per mesh orientation (data- and head-sharded)."""
+    _parity_case(mesh_shape, 2, 256, 4, 2, 64, window, True, jnp.float32)
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "mesh_shape,b,s,hq,hkv,d,window,causal",
+    [
+        ((2, 1), 2, 256, 4, 1, 64, None, True),    # GQA g=4, data-sharded
+        ((1, 2), 2, 512, 8, 2, 64, None, True),    # GQA g=4, head-sharded
+        ((1, 2), 1, 512, 4, 2, 64, 256, True),     # GQA + sliding window
+        ((2, 2) if len(jax.devices()) >= 4 else (2, 1),
+         2, 256, 4, 2, 64, 128, True),             # window, (both axes)
+        ((1, 2), 1, 256, 2, 2, 64, None, False),   # bidirectional MHA
+    ])
+def test_sharded_parity_sweep(mesh_shape, b, s, hq, hkv, d, window, causal,
+                              dtype):
+    _parity_case(mesh_shape, b, s, hq, hkv, d, window, causal, dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode under a mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_sharded_decode_parity():
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    ks = jax.random.split(KEY, 3)
+    b, length, hq, hkv, d = 2, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kc = jax.random.normal(ks[1], (b, length, hkv, d))
+    vc = jax.random.normal(ks[2], (b, length, hkv, d))
+    pos = jnp.asarray(300, jnp.int32)
+    kpos = jnp.where(jnp.arange(length) <= pos, jnp.arange(length), -1)
+    with ctx.use_mesh(mesh):
+        dispatch.clear_decision_log()
+        out = jax.jit(lambda *a: dispatch.decode_attention(*a))(
+            q, kc, vc, kpos, pos)
+        assert dispatch.last_decision("decode_attention").backend == \
+            "pallas_shard_map"
+    want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

@@ -1,4 +1,8 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle.
+
+``backend="pallas"`` pins the dispatch layer to the bare kernels — on this
+CPU suite auto dispatch would (correctly) resolve to jnp, which is covered
+separately in test_dispatch_mesh.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,7 +28,8 @@ def test_flash_attention_sweep(b, s, hq, hkv, d, window, causal, dtype):
     q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
     k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
     v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
-    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              backend="pallas")
     want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -53,7 +58,8 @@ def test_flash_attention_grad_sweep(b, s, hq, hkv, d, window, causal, dtype):
     do = jax.random.normal(ks[3], (b, s, hq, d), dtype)
 
     def loss_pl(q, k, v):
-        o = ops.flash_attention(q, k, v, causal=causal, window=window)
+        o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                backend="pallas")
         return jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32))
 
     def loss_ref(q, k, v):
@@ -77,7 +83,7 @@ def test_flash_attention_grad_matches_sdpa():
     k = jax.random.normal(ks[1], (b, s, hkv, d))
     v = jax.random.normal(ks[2], (b, s, hkv, d))
     g_pl = jax.grad(lambda q, k, v: jnp.sum(
-        ops.flash_attention(q, k, v, causal=True) ** 2),
+        ops.flash_attention(q, k, v, causal=True, backend="pallas") ** 2),
         argnums=(0, 1, 2))(q, k, v)
     g_rf = jax.grad(lambda q, k, v: jnp.sum(
         ref.flash_attention_ref(q, k, v, causal=True) ** 2),
@@ -120,7 +126,7 @@ def test_decode_attention_sweep(b, length, hq, hkv, d, frac, dtype):
     vc = jax.random.normal(ks[2], (b, length, hkv, d), dtype)
     pos = jnp.array(int(frac * (length - 1)), jnp.int32)
     kpos = jnp.where(jnp.arange(length) <= pos, jnp.arange(length), -1)
-    out = ops.decode_attention(q, kc, vc, kpos, pos)
+    out = ops.decode_attention(q, kc, vc, kpos, pos, backend="pallas")
     want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -139,7 +145,7 @@ def test_decode_attention_ring_cache():
     idx = jnp.arange(length)
     cand = pos - (pos % length) + idx
     kpos = jnp.where(cand > pos, cand - length, cand)
-    out = ops.decode_attention(q, kc, vc, kpos, pos)
+    out = ops.decode_attention(q, kc, vc, kpos, pos, backend="pallas")
     want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
     np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
 
@@ -167,7 +173,7 @@ def test_flash_jnp_blockwise_matches_kernel():
     v = jax.random.normal(ks[2], (b, s, hkv, d))
     o_ref = ref.flash_attention_ref(q, k, v, causal=True)
     o_jnp = flash_attention_jnp(q, k, v, True, None, 128)
-    o_pl = ops.flash_attention(q, k, v, causal=True)
+    o_pl = ops.flash_attention(q, k, v, causal=True, backend="pallas")
     np.testing.assert_allclose(o_jnp, o_ref, atol=2e-5, rtol=2e-5)
     np.testing.assert_allclose(o_pl, o_ref, atol=2e-5, rtol=2e-5)
 
@@ -178,9 +184,57 @@ def test_rmsnorm_kernel_sweep(shape, dtype):
     ks = jax.random.split(KEY, 2)
     x = jax.random.normal(ks[0], shape, dtype)
     scale = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],))
-    out = ops.rmsnorm(x, scale)
+    out = ops.rmsnorm(x, scale, backend="pallas")
     want = ref.rmsnorm_ref(x, scale)
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                atol=tol, rtol=tol)
+
+
+def test_flash_bwd_skips_fully_masked_tiles():
+    """Small blocks + small window => whole score tiles fully masked in the
+    bwd grids; the predicated kernels must still match the jnp oracle."""
+    from repro.kernels.flash_attention import masked_tile_fraction
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.models.flash_jnp import flash_attention_jnp
+    b, s, hq, hkv, d, win = 1, 512, 4, 2, 64, 128
+    assert masked_tile_fraction(s, 128, 128, True, win) > 0.4
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    do = jax.random.normal(ks[3], (b, s, hq, d))
+    o, lse = flash_attention_fwd(q, k, v, causal=True, window=win,
+                                 block_q=128, block_k=128,
+                                 save_residuals=True)
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=True,
+                                     window=win, block_q=128, block_k=128)
+    g_ref = jax.grad(lambda q, k, v: jnp.sum(
+        flash_attention_jnp(q, k, v, True, win, 128) * do),
+        argnums=(0, 1, 2))(q, k, v)
+    for got, want, name in zip((dq, dk, dv), g_ref, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-2, rtol=2e-2, err_msg=name)
+
+
+@pytest.mark.parametrize("shape", [(64, 256), (2, 16, 128)])
+def test_rmsnorm_vjp_kernel_matches_ad(shape):
+    """The fused one-pass dx/dscale backward vs AD through the reference."""
+    from repro.kernels import dispatch
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], shape)
+    scale = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],))
+    dy = jax.random.normal(ks[2], shape)
+
+    def loss(fn):
+        return lambda x, s: jnp.sum(fn(x, s).astype(jnp.float32) * dy)
+
+    g_pl = jax.grad(loss(lambda x, s: dispatch.rmsnorm(
+        x, s, backend="pallas")), argnums=(0, 1))(x, scale)
+    g_rf = jax.grad(loss(lambda x, s: ref.rmsnorm_ref(x, s)),
+                    argnums=(0, 1))(x, scale)
+    for got, want, name in zip(g_pl, g_rf, ("dx", "dscale")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
