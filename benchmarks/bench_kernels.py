@@ -82,17 +82,43 @@ def run() -> list:
                      "us_per_call": us_sg,
                      "derived": f"vs_single={us_gpl/us_sg:.2f}x"})
 
-    # decode attention
-    kc = jax.random.normal(ks[1], (b, 4096, hkv, d))
-    vc = jax.random.normal(ks[2], (b, 4096, hkv, d))
-    pos = jnp.asarray(4095)
-    kpos = jnp.arange(4096)
+    # decode attention: serving tokens/sec for both cache layouts through
+    # the dispatch layer (one fast path serves both — PR 3)
+    L = 4096
+    kc = jax.random.normal(ks[1], (b, L, hkv, d))
+    vc = jax.random.normal(ks[2], (b, L, hkv, d))
+    pos = jnp.asarray(L - 1)
+    kpos = jnp.arange(L)
     qd = jax.random.normal(ks[0], (b, hq, d))
     dec_ref = jax.jit(lambda q, k, v, kp, p: ref.decode_attention_ref(
         q, k, v, kp, p))
     us_dref = common.timed(dec_ref, qd, kc, vc, kpos, pos, iters=3)
     rows.append({"name": "decode_ref_jnp", "us_per_call": us_dref,
-                 "derived": "L=4096"})
+                 "derived": f"L={L} tok_s={b * 1e6 / us_dref:.1f}"})
+
+    # replicated-cache layout: shard_map over (batch, heads)
+    with ctx.use_mesh(mesh):
+        dec_sh = jax.jit(lambda q, k, v, kp, p: dispatch.decode_attention(
+            q, k, v, kp, p, backend="pallas_shard_map"))
+        us_dsh = common.timed(dec_sh, qd, kc, vc, kpos, pos, iters=3)
+        rows.append({"name": "decode_sharded_bh", "us_per_call": us_dsh,
+                     "derived": f"L={L} mesh={dict(mesh.shape)} "
+                                f"tok_s={b * 1e6 / us_dsh:.1f}"})
+
+    # context-parallel layout: seq-sharded cache, partials kernel + psum
+    # combine (the pallas_cp arm the decode_cp rules resolve to)
+    n_cp = mesh.shape["model"]
+    cp_rules = {"decode_cp": {"mesh": mesh, "seq_axes": ("model",),
+                              "dp_axes": ("data",), "n_shards": n_cp}}
+    with ctx.sharding_rules(cp_rules):
+        dec_cp = jax.jit(lambda q, k, v, kp, p: dispatch.decode_attention(
+            q, k, v, kp, p))
+        us_dcp = common.timed(dec_cp, qd, kc, vc, kpos, pos, iters=3)
+        d = dispatch.last_decision("decode_attention")
+        rows.append({"name": "decode_cp_seqshard", "us_per_call": us_dcp,
+                     "derived": f"L={L} shards={n_cp} "
+                                f"backend={d.backend if d else '?'} "
+                                f"tok_s={b * 1e6 / us_dcp:.1f}"})
 
     # fused rmsprop (jnp ref — the pallas path is interpret-mode on CPU)
     g = jnp.abs(jax.random.normal(ks[0], (1024, 1024)))

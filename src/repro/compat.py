@@ -11,6 +11,16 @@ Covered drifts:
     shardings are passed explicitly.
   * ``AbstractMesh(...)``         — 0.4.x takes one tuple of (name, size)
     pairs; newer JAX takes (axis_sizes, axis_names).
+  * trace-cache token             — jax has no public "fold this value into
+    the jit cache key" hook; ``set_trace_token`` rides the
+    ``mesh_context_manager`` config state: it participates in both the
+    python trace cache (``config.trace_context()``) and the C++ jit key
+    (``include_in_jit_key=True``), and — unlike the xla_metadata slot,
+    which JaxprEqnContext managers rewrite mid-trace — it is only ever
+    written by ``Mesh.__enter__/__exit__``, so an appended token survives
+    a whole trace/lower block.  If the state ever disappears the shim
+    degrades to a no-op and the dispatch layer falls back to its
+    documented trace-cache caveat.
 """
 from __future__ import annotations
 
@@ -36,14 +46,37 @@ def set_mesh(mesh):
     0.4.x a concrete ``Mesh`` is its own context manager; an
     ``AbstractMesh`` has no context to enter — explicit NamedShardings
     carry it — so we no-op.
+
+    ``Mesh.__enter__``/``__exit__`` rebuild the trace-token carrier state
+    from the mesh stack, which would silently drop a dispatch token
+    appended by ``ctx.use_mesh``/``ctx.sharding_rules`` (and with it the
+    stale-trace protection), so this wrapper re-asserts the current
+    dispatch token after both transitions.
     """
     setter = getattr(jax.sharding, "set_mesh", None) or \
         getattr(jax, "set_mesh", None)
     if setter is not None:
-        return setter(mesh)
-    if hasattr(mesh, "__enter__"):
-        return mesh
-    return contextlib.nullcontext(mesh)
+        inner = setter(mesh)
+    elif hasattr(mesh, "__enter__"):
+        inner = mesh
+    else:
+        inner = contextlib.nullcontext(mesh)
+    if _token_provider is None:
+        return inner
+    return _reassert_token_around(inner)
+
+
+@contextlib.contextmanager
+def _reassert_token_around(inner):
+    with inner as m:
+        prev = set_trace_token(_token_provider())
+        try:
+            yield m
+        finally:
+            restore_trace_token(prev)
+    # the mesh exit rebuilt the carrier from its stack, dropping tokens
+    # appended by enclosing ctx managers — re-assert the current state
+    set_trace_token(_token_provider())
 
 
 def cost_analysis(compiled) -> dict:
@@ -56,6 +89,64 @@ def cost_analysis(compiled) -> dict:
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
     return ca or {}
+
+
+def _trace_token_state():
+    try:
+        from jax._src import config as jcfg
+        cm = getattr(jcfg, "mesh_context_manager", None)
+        if cm is not None and hasattr(cm, "set_local") and \
+                hasattr(cm, "get_local"):
+            return cm
+    except Exception:
+        pass
+    return None
+
+
+_NO_TOKEN = object()
+_TOKEN_TAG = "repro.dispatch"
+_token_provider = None
+
+
+def register_trace_token_provider(fn) -> None:
+    """``fn() -> token | None`` returning the current dispatch state;
+    ``set_mesh`` uses it to re-assert the token across Mesh transitions
+    (registered by ``repro.distributed.ctx`` at import)."""
+    global _token_provider
+    _token_provider = fn
+
+
+def set_trace_token(token):
+    """Fold ``token`` (hashable, tagged with ``_TOKEN_TAG``) into jax's jit
+    trace-cache key for the current thread.
+
+    Used by ``repro.distributed.ctx`` so that re-lowering one jitted
+    callable under a different dispatch mesh / rule set re-resolves kernel
+    dispatch instead of replaying the stale trace.  The token is appended
+    to the carrier state's previous value (a tuple) with any older
+    dispatch token stripped first — idempotent, so re-asserting after a
+    Mesh transition cannot stack stale entries.  ``token=None`` means "no
+    dispatch state": nothing is appended.  Returns an opaque previous
+    value — pass it back to :func:`restore_trace_token` on exit.  Degrades
+    to a no-op (returns ``_NO_TOKEN``) if the underlying jax state is
+    gone.
+    """
+    cm = _trace_token_state()
+    if cm is None:
+        return _NO_TOKEN
+    prev = cm.get_local()
+    base = prev if isinstance(prev, tuple) else ()
+    base = tuple(e for e in base
+                 if not (isinstance(e, tuple) and e and e[0] == _TOKEN_TAG))
+    cm.set_local(base if token is None else base + (token,))
+    return prev
+
+
+def restore_trace_token(prev) -> None:
+    """Restore the value captured by :func:`set_trace_token`."""
+    cm = _trace_token_state()
+    if cm is not None and prev is not _NO_TOKEN:
+        cm.set_local(prev)
 
 
 def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):

@@ -7,6 +7,14 @@ The kernel dispatch layer (``repro.kernels.dispatch``) keys backend
 selection off this mesh's device platform — the lowering *target* — rather
 than ``jax.default_backend()``, so a host process lowering for a TPU mesh
 picks the same kernels the TPU mesh will run.
+
+Dispatch resolves at *trace* time, but jax caches traces by function
+identity — without countermeasures, re-lowering one jitted callable under
+a different mesh would replay the stale dispatch decision baked into the
+cached trace.  ``use_mesh`` and ``sharding_rules`` therefore install a
+*dispatch token* (a hashable digest of the mesh + rule set) into jax's jit
+cache key via ``compat.set_trace_token``; switching meshes changes the key
+and the callable re-traces, re-running dispatch resolution.
 """
 from __future__ import annotations
 
@@ -16,7 +24,47 @@ from typing import Dict, Optional
 
 import jax
 
+from repro import compat
+
 _state = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# dispatch trace token
+# ---------------------------------------------------------------------------
+
+def _freeze(v):
+    """Hashable digest of a rules/mesh value (dicts recursed, arrays et al
+    collapsed to repr — the token only needs equality, not round-tripping)."""
+    try:
+        hash(v)
+        return v
+    except TypeError:
+        pass
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    return repr(v)
+
+
+def dispatch_token():
+    """The current dispatch-relevant state as a jit-cache-key component
+    (None when no mesh or rules are installed — nothing to assert)."""
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", None)
+    if mesh is None and rules is None:
+        return None
+    return (compat._TOKEN_TAG, _freeze(mesh), _freeze(rules))
+
+
+def _install_token():
+    return compat.set_trace_token(dispatch_token())
+
+
+# compat.set_mesh re-asserts this token around Mesh context transitions
+# (Mesh.__enter__/__exit__ rebuild the carrier state and would drop it)
+compat.register_trace_token_provider(dispatch_token)
 
 
 def current_rules() -> Optional[Dict[str, jax.sharding.PartitionSpec]]:
@@ -26,13 +74,17 @@ def current_rules() -> Optional[Dict[str, jax.sharding.PartitionSpec]]:
 @contextlib.contextmanager
 def sharding_rules(rules: Dict[str, jax.sharding.PartitionSpec]):
     """rules: logical-name -> PartitionSpec (e.g. "residual", "expert_buffer").
-    Installed by the launcher around trace/lower time."""
+    Installed by the launcher around trace/lower time.  Folds the rule set
+    into the jit cache key (see module docstring) so cached traces are not
+    replayed across rule-set changes."""
     prev = current_rules()
     _state.rules = rules
+    tok = _install_token()
     try:
         yield
     finally:
         _state.rules = prev
+        compat.restore_trace_token(tok)
 
 
 def constrain(x, name: str):
@@ -57,14 +109,19 @@ def use_mesh(mesh):
     """Install ``mesh`` as the kernel-dispatch target around trace/lower time.
 
     Orthogonal to ``compat.set_mesh`` (which feeds jax's sharding machinery):
-    this one only makes the mesh *visible* to the dispatch layer so it can
-    shard_map the Pallas kernels over it and resolve the target platform."""
+    this one makes the mesh *visible* to the dispatch layer so it can
+    shard_map the Pallas kernels over it and resolve the target platform,
+    and folds the mesh into the jit cache key (see module docstring) so one
+    jitted callable re-lowered under a different mesh re-resolves dispatch
+    instead of replaying the stale trace."""
     prev = current_mesh()
     _state.mesh = mesh
+    tok = _install_token()
     try:
         yield mesh
     finally:
         _state.mesh = prev
+        compat.restore_trace_token(tok)
 
 
 def mesh_platform(mesh) -> str:

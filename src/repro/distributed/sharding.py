@@ -79,6 +79,144 @@ class AttnShardSpec(NamedTuple):
         return P(self.batch, self.heads, None)
 
 
+class DecodeCPSpec(NamedTuple):
+    """How to shard_map the context-parallel (flash-decoding) decode kernel.
+
+    The KV cache's *sequence* dim is sharded over ``seq_axes`` (the
+    ``decode_cp`` rule's axes — 'model', plus the data axes for batch=1
+    long-context decode); each shard runs the partials kernel over its
+    cache slice and the combine is a psum of (m, l, acc) over ``seq_axes``.
+    Heads stay shard-local (the model axis is spent on the sequence).
+    Hashable by construction so dispatch can use it as a jit static arg.
+    """
+    mesh: Any                        # jax.sharding.Mesh
+    batch: Any                       # None | str | tuple of axis names
+    seq_axes: Tuple[str, ...]        # cache sequence sharding axes
+
+    @property
+    def _seq(self):
+        return self.seq_axes if len(self.seq_axes) > 1 else self.seq_axes[0]
+
+    @property
+    def q_decode(self) -> P:
+        """decode q / o: (B, Hq, D) — replicated over the seq axes."""
+        return P(self.batch, None, None)
+
+    @property
+    def kv(self) -> P:
+        """KV caches (B, L, Hkv, D): sequence dim sharded."""
+        return P(self.batch, self._seq, None, None)
+
+    @property
+    def new_kv(self) -> P:
+        """The step's new k/v token (B, 1, Hkv, D): replicated over seq."""
+        return P(self.batch, None, None, None)
+
+    @property
+    def kpos(self) -> P:
+        """kpos (L,): sliced along the same seq sharding as the cache."""
+        return P(self._seq)
+
+
+def decode_cp_spec(rule: dict, *, batch: int) -> DecodeCPSpec:
+    """Layout (no alignment policy) for the context-parallel decode path:
+    how the ``decode_cp`` rule from :func:`decode_rules` partitions the
+    cache and the step tensors over its mesh.  The single source for both
+    the model-layer cache write and the dispatch-layer combine — they must
+    agree on the cache's partitioning."""
+    mesh = rule["mesh"]
+    seq_axes = tuple(rule["seq_axes"])
+    dp_axes = tuple(rule.get("dp_axes") or ())
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    dp: Any = dp_axes if (dp_axes and dp_size > 1
+                          and batch % dp_size == 0) else None
+    if isinstance(dp, tuple) and len(dp) == 1:
+        dp = dp[0]
+    return DecodeCPSpec(mesh, dp, seq_axes)
+
+
+def decode_cp_shard_spec(rule: dict, *, batch: int, length: int
+                         ) -> Tuple[Optional[DecodeCPSpec], str]:
+    """Dispatch policy for the unified context-parallel decode path.
+
+    Returns (spec, "") or (None, reason) when the Pallas combine cannot
+    serve this call — cache length not divisible into MXU-aligned local
+    slices.  (The cache *write* only needs divisibility, so it uses
+    :func:`decode_cp_spec` directly.)
+    """
+    seq_axes = tuple(rule["seq_axes"])
+    n_shards = int(rule["n_shards"])
+    if length % n_shards != 0:
+        return None, (f"cache length {length} does not divide over the "
+                      f"{n_shards}-shard seq axes {seq_axes}")
+    l_loc = length // n_shards
+    if n_shards > 1 and (l_loc < 128 or l_loc % 128 != 0):
+        return None, (f"local cache slice {l_loc} (of {length} over "
+                      f"{n_shards} shards) not MXU-aligned (need a "
+                      "multiple of 128)")
+    return decode_cp_spec(rule, batch=batch), ""
+
+
+class RowShardSpec(NamedTuple):
+    """Row-block shard_map spec for the fused rmsnorm: the (rows, d)
+    activation's row dim over ``axes``, scale replicated.  Hashable so
+    dispatch can use it as a jit static arg."""
+    mesh: Any
+    axes: Tuple[str, ...]
+
+    @property
+    def rows(self) -> P:
+        return P(self.axes if len(self.axes) > 1 else self.axes[0], None)
+
+    @property
+    def rstd(self) -> P:
+        """per-row residual (rows,) f32."""
+        return P(self.axes if len(self.axes) > 1 else self.axes[0])
+
+
+def _spec_mentions(spec, axis: str, dim: int) -> bool:
+    """Does PartitionSpec ``spec`` put ``axis`` on dimension ``dim``?"""
+    entries = tuple(spec)
+    if dim >= len(entries):
+        return False
+    e = entries[dim]
+    return axis in e if isinstance(e, tuple) else e == axis
+
+
+def rmsnorm_shard_spec(mesh, *, rows: int, rules=None
+                       ) -> Tuple[Optional[RowShardSpec], str]:
+    """Partitioning for the shard_map'd fused rmsnorm.
+
+    Rows (= batch*seq) are normalized independently, so they shard over
+    every mesh axis whose product divides them; scale is replicated and
+    the vjp's dscale is psum'd over the row axes.  The one layout this
+    must NOT touch is the Megatron-SP seq-parallel residual: there the
+    activation's seq dim is already sharded over 'model', and a row-block
+    shard_map would re-gather it — that stays an explicit fallback.
+    """
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    r = (rules or {}).get("residual")
+    if r is not None and msize > 1 and \
+            _spec_mentions(getattr(r, "spec", r), "model", 1):
+        return None, ("seq-parallel residual shards rows over 'model'; "
+                      "row-block shard_map would re-gather the residual "
+                      "stream (explicit fallback, see DESIGN.md "
+                      "§kernel-dispatch)")
+    axes = tuple(a for a in mesh.axis_names if mesh.shape[a] > 1)
+    if not axes:
+        # degenerate 1-device mesh: replicated (benches may force it)
+        return RowShardSpec(mesh, tuple(mesh.axis_names)[:1] or ("data",)), ""
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if rows % n != 0 or rows // n < 8:
+        return None, (f"rows={rows} do not divide into >=8-row blocks "
+                      f"over the {n}-device mesh axes {axes}")
+    return RowShardSpec(mesh, axes), ""
+
+
 def attention_shard_spec(mesh, *, batch: int, n_q_heads: int,
                          n_kv_heads: int
                          ) -> Tuple[Optional[AttnShardSpec], str]:

@@ -9,6 +9,15 @@ softmax state lives in VMEM scratch across the innermost KV dimension.
 Empty/future cache slots are masked via ``kpos`` (absolute position per
 slot, -1 = unwritten), which also handles ring-buffer (sliding-window)
 caches where slot order is rotated.
+
+Two entry points share the kernel body:
+
+  * ``decode_attention_fwd``      — normalized output (B, Hq, D).
+  * ``decode_attention_partials`` — per-call ``(acc, m, l)`` flash-decoding
+    partials, for the context-parallel path: each seq shard runs the kernel
+    over its local cache slice and the cross-shard combine is an O(B*Hq*D)
+    psum of the partials (dispatch's ``pallas_cp`` arm) instead of an
+    all-gather of the multi-GB cache.
 """
 from __future__ import annotations
 
@@ -25,8 +34,12 @@ from repro import compat
 NEG = -1e30
 
 
-def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, block_k: int, n_k: int, scale: float):
+def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, *refs,
+            block_k: int, n_k: int, scale: float, partials: bool):
+    if partials:
+        acc_out_ref, m_out_ref, l_out_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -57,14 +70,21 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
 
     @pl.when(ik == n_k - 1)
     def _finish():
-        l_safe = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        if partials:
+            # unnormalized flash-decoding state; a fully-masked slice keeps
+            # m=NEG, so its correction exp(m - pmax(m)) underflows to 0 and
+            # the slice vanishes in the cross-shard combine
+            acc_out_ref[0, 0] = acc_ref[...]
+            m_out_ref[0, 0] = m_ref[...]
+            l_out_ref[0, 0] = l_ref[...]
+        else:
+            l_safe = jnp.maximum(l_ref[...], 1e-30)
+            o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]) \
+                .astype(o_ref.dtype)
 
 
-def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
-                         block_k: int = 1024,
-                         interpret: Optional[bool] = None) -> jnp.ndarray:
-    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,); pos () -> (B,Hq,D)."""
+def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
+          interpret: Optional[bool]):
     b, hq, d = q.shape
     length = k_cache.shape[1]
     hkv = k_cache.shape[2]
@@ -76,8 +96,19 @@ def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
         interpret = jax.default_backend() == "cpu"
 
     qg = q.reshape(b, hkv, g, d)
-    kern = functools.partial(_kernel, block_k=bk, n_k=n_k, scale=d ** -0.5)
-    out = pl.pallas_call(
+    kern = functools.partial(_kernel, block_k=bk, n_k=n_k, scale=d ** -0.5,
+                             partials=partials)
+    blk4 = pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0))
+    blk3 = pl.BlockSpec((1, 1, g), lambda b_, h, ik: (b_, h, 0))
+    if partials:
+        out_specs = [blk4, blk3, blk3]
+        out_shape = [jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+                     jax.ShapeDtypeStruct((b, hkv, g), jnp.float32)]
+    else:
+        out_specs = blk4
+        out_shape = jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype)
+    return pl.pallas_call(
         kern,
         grid=(b, hkv, n_k),
         in_specs=[
@@ -87,8 +118,8 @@ def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
             pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
             pl.BlockSpec((bk,), lambda b_, h, ik: (ik,)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
@@ -98,4 +129,28 @@ def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos.reshape(1), qg, k_cache, v_cache, kpos)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
+                         block_k: int = 1024,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,); pos () -> (B,Hq,D)."""
+    b, hq, d = q.shape
+    out = _call(q, k_cache, v_cache, kpos, pos, block_k=block_k,
+                partials=False, interpret=interpret)
     return out.reshape(b, hq, d)
+
+
+def decode_attention_partials(q, k_cache, v_cache, kpos, pos, *,
+                              block_k: int = 1024,
+                              interpret: Optional[bool] = None):
+    """Flash-decoding partials over a (local) cache slice.
+
+    Same shapes as ``decode_attention_fwd`` but returns the unnormalized
+    online-softmax state ``(acc (B,Hkv,G,D) f32, m (B,Hkv,G) f32,
+    l (B,Hkv,G) f32)``; the caller combines across slices with
+    ``o = psum(acc * exp(m - pmax(m))) / psum(l * exp(m - pmax(m)))``.
+    """
+    acc, m, l = _call(q, k_cache, v_cache, kpos, pos, block_k=block_k,
+                      partials=True, interpret=interpret)
+    return acc, m, l

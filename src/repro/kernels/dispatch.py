@@ -10,6 +10,10 @@ Decision table (see DESIGN.md §kernel-dispatch for the full rationale):
 
   mesh (devices>1)  platform  shape alignment          -> backend
   ----------------  --------  -----------------------  --------------------
+  decode_cp rules   any       local slice aligned      pallas_cp (decode
+                                                       only; interpret
+                                                       off-TPU)
+  decode_cp rules   any       slice/batch misaligned   jnp (reason logged)
   yes               any       aligned + axes divide    pallas_shard_map
                                                        (interpret off-TPU)
   yes               any       axes don't divide        jnp (reason logged)
@@ -22,7 +26,18 @@ The shard_map'd paths partition (batch -> data axes, heads -> model) using
 the specs from ``repro.distributed.sharding.attention_shard_spec``; the
 ``custom_vjp`` is defined *around* the shard_mapped calls so gradients flow
 under a mesh (a bare ``pallas_call`` has no GSPMD partitioning rule — this
-layer is what lets mesh training keep its fused kernels).
+layer is what lets mesh training keep its fused kernels).  ``pallas_cp``
+is the serving counterpart: the ``decode_cp`` rules shard the KV cache's
+*sequence* dim, each shard runs the partials-emitting decode kernel over
+its slice, and the flash-decoding combine is a psum of (m, l, acc) over
+the rule's seq axes.  ``rmsnorm`` shard_maps over row blocks (replicated
+scale, psum'd dscale) except under the seq-parallel residual layout,
+which stays an explicit fallback.
+
+Dispatch resolves at trace time; ``ctx.use_mesh`` / ``ctx.sharding_rules``
+fold a dispatch token into the jit cache key (``compat.set_trace_token``)
+so one jitted callable re-lowered under a different mesh re-resolves
+instead of replaying the stale cached trace.
 
 All alignment checks (MXU 128-lane sequence blocks, GQA head-group
 divisibility, mesh-axis divisibility) live here, in one place, and every
@@ -41,9 +56,13 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 
 from repro.distributed import ctx
-from repro.distributed.sharding import AttnShardSpec, attention_shard_spec
+from repro.distributed.sharding import (AttnShardSpec, DecodeCPSpec,
+                                        RowShardSpec, attention_shard_spec,
+                                        decode_cp_shard_spec,
+                                        rmsnorm_shard_spec)
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.decode_attention import (decode_attention_fwd,
+                                            decode_attention_partials)
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.flash_attention_bwd import flash_attention_bwd
 from repro.kernels.rmsnorm import rmsnorm_bwd, rmsnorm_fwd
@@ -59,7 +78,7 @@ _BACKENDS = ("auto", "jnp", "pallas", "pallas_shard_map")
 
 class Decision(NamedTuple):
     op: str
-    backend: str        # "pallas" | "pallas_shard_map" | "jnp"
+    backend: str  # "pallas" | "pallas_shard_map" | "pallas_cp" | "jnp"
     reason: str
     platform: str
     mesh_axes: Optional[Tuple[Tuple[str, int], ...]]
@@ -309,6 +328,38 @@ def _decode_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
                      check_rep=False)(q, k_cache, v_cache, kpos, pos)
 
 
+@functools.partial(jax.jit, static_argnames=("shard", "interpret"))
+def _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
+    """Context-parallel flash decoding: the cache's sequence dim is sharded
+    over ``shard.seq_axes``; each shard runs the partials kernel over its
+    slice and the combine is an O(B*Hq*D) psum of (m, l, acc) — the same
+    correction math the pure-jnp ``attend_decode_cp`` combine used, now fed
+    by the Pallas kernel."""
+    from jax.sharding import PartitionSpec as P
+    axes = shard.seq_axes
+
+    def call(q, kc, vc, kp, p):
+        l_loc = kc.shape[1]
+        bk = min(1024, l_loc)
+        while l_loc % bk:
+            bk //= 2
+        acc, m, l = decode_attention_partials(q, kc, vc, kp, p, block_k=bk,
+                                              interpret=interpret)
+        m_max = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_max)
+        l_tot = jax.lax.psum(l * corr, axes)
+        acc_tot = jax.lax.psum(acc * corr[..., None], axes)
+        o = acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+        b, hkv, g, d = acc.shape
+        return o.reshape(b, hkv * g, d).astype(q.dtype)
+
+    return shard_map(call, mesh=shard.mesh,
+                     in_specs=(shard.q_decode, shard.kv, shard.kv,
+                               shard.kpos, P()),
+                     out_specs=shard.q_decode,
+                     check_rep=False)(q, k_cache, v_cache, kpos, pos)
+
+
 def _decode_dense(q, k_cache, v_cache, kpos, pos):
     from repro.models import attention as attn
     n_rep = q.shape[1] // k_cache.shape[2]
@@ -320,7 +371,10 @@ def _decode_dense(q, k_cache, v_cache, kpos, pos):
 
 
 def _resolve_decode(b: int, length: int, hq: int, hkv: int, backend: str
-                    ) -> Tuple[Decision, Optional[AttnShardSpec], bool]:
+                    ) -> Tuple[Decision, Any, bool]:
+    """Returns (decision, spec, interpret); spec is an ``AttnShardSpec``
+    for the (batch, heads) shard_map arm, a ``DecodeCPSpec`` for the
+    context-parallel arm, or None."""
     if hq % hkv != 0:
         raise ValueError(f"GQA needs q heads to be a multiple of kv "
                          f"heads, got {hq}/{hkv}")
@@ -340,28 +394,44 @@ def _resolve_decode(b: int, length: int, hq: int, hkv: int, backend: str
         return _decide("decode_attention", "pallas", "explicit backend"), \
             None, interpret
     if backend == "pallas_shard_map":
-        if not aligned:
-            raise ValueError(f"cannot shard_map decode attention: cache "
-                             f"length {length} not MXU-aligned")
         raw_mesh = ctx.current_mesh()   # honor even a 1-device mesh
         if raw_mesh is None:
             raise ValueError("backend='pallas_shard_map' needs a mesh "
                              "installed via ctx.use_mesh")
+        # misalignment is a logged fallback (like every auto arm), not a
+        # crash: serving batch/head counts vary per request
+        if not aligned:
+            return _decide("decode_attention", "jnp",
+                           f"explicit shard_map but cache length {length} "
+                           "not MXU-aligned (need a multiple of 128); "
+                           "reference", raw_mesh), None, interpret
         spec, why = attention_shard_spec(raw_mesh, batch=b, n_q_heads=hq,
                                          n_kv_heads=hkv)
         if spec is None:
-            raise ValueError(f"cannot shard_map decode attention: {why}")
+            return _decide("decode_attention", "jnp",
+                           f"explicit shard_map but {why}; reference",
+                           raw_mesh), None, interpret
         return _decide("decode_attention", "pallas_shard_map",
                        "explicit backend", raw_mesh), spec, interpret
     if not aligned:
         return _decide("decode_attention", "jnp",
                        f"cache length {length} not MXU-aligned (need a "
                        "multiple of 128)"), None, interpret
-    if "decode_cp" in rules:
-        return _decide("decode_attention", "jnp",
-                       "context-parallel decode rules own the cache "
-                       "(attend_decode_cp shards the sequence dim)",
-                       mesh), None, interpret
+    cp = rules.get("decode_cp")
+    if cp is not None:
+        cp_mesh = cp["mesh"]
+        cp_interpret = ctx.mesh_platform(cp_mesh) != "tpu"
+        spec, why = decode_cp_shard_spec(cp, batch=b, length=length)
+        if spec is None:
+            return _decide("decode_attention", "jnp",
+                           f"decode_cp rules own the cache but {why}",
+                           cp_mesh, ctx.mesh_platform(cp_mesh)), \
+                None, cp_interpret
+        return _decide("decode_attention", "pallas_cp",
+                       "decode_cp layout: partials kernel per seq shard "
+                       "+ (m,l,acc) psum combine",
+                       cp_mesh, ctx.mesh_platform(cp_mesh)), \
+            spec, cp_interpret
     if mesh is not None:
         spec, why = attention_shard_spec(mesh, batch=b, n_q_heads=hq,
                                          n_kv_heads=hkv)
@@ -385,7 +455,13 @@ def _resolve_decode(b: int, length: int, hq: int, hkv: int, backend: str
 
 def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
                      backend: str = "auto") -> jnp.ndarray:
-    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) -> (B,Hq,D)."""
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) -> (B,Hq,D).
+
+    One fast path serves both cache layouts: under the replicated-cache
+    layout the kernel is shard_mapped over (batch, heads); when the
+    ``decode_cp`` rules own the cache's sequence dim it resolves to
+    ``pallas_cp`` — the partials kernel per sequence shard plus the
+    flash-decoding psum combine."""
     assert backend in _BACKENDS, backend
     if pos is None:
         pos = jnp.max(kpos)
@@ -398,6 +474,9 @@ def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
             return ref.decode_attention_ref(q, k_cache, v_cache, kpos,
                                             pos)  # naive oracle
         return _decode_dense(q, k_cache, v_cache, kpos, pos)
+    if decision.backend == "pallas_cp":
+        return _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard,
+                               interpret)
     return _decode_call(q, k_cache, v_cache, kpos, pos, shard, interpret)
 
 
@@ -405,77 +484,129 @@ def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
 # fused rmsnorm (fwd + one-pass vjp)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _rmsnorm_pallas(x2, scale, eps, interpret):
-    return rmsnorm_fwd(x2, scale, eps=eps, interpret=interpret)
+def _rmsnorm_fwd_call(x2, scale, eps, shard, interpret, save_residuals):
+    def call(x2, scale):
+        return rmsnorm_fwd(x2, scale, eps=eps,
+                           save_residuals=save_residuals,
+                           interpret=interpret)
+    if shard is None:
+        return call(x2, scale)
+    from jax.sharding import PartitionSpec as P
+    out_specs = (shard.rows, shard.rstd) if save_residuals else shard.rows
+    return shard_map(call, mesh=shard.mesh,
+                     in_specs=(shard.rows, P(None)),
+                     out_specs=out_specs, check_rep=False)(x2, scale)
 
 
-def _rmsnorm_pallas_fwd(x2, scale, eps, interpret):
-    y, rstd = rmsnorm_fwd(x2, scale, eps=eps, save_residuals=True,
-                          interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _rmsnorm_pallas(x2, scale, eps, shard, interpret):
+    return _rmsnorm_fwd_call(x2, scale, eps, shard, interpret, False)
+
+
+def _rmsnorm_pallas_fwd(x2, scale, eps, shard, interpret):
+    y, rstd = _rmsnorm_fwd_call(x2, scale, eps, shard, interpret, True)
     return y, (x2, scale, rstd)
 
 
-def _rmsnorm_pallas_bwd(eps, interpret, res, dy):
+def _rmsnorm_pallas_bwd(eps, shard, interpret, res, dy):
     x2, scale, rstd = res
-    dx, dscale = rmsnorm_bwd(x2, scale, rstd, dy, interpret=interpret)
+
+    def call(x2, scale, rstd, dy):
+        dx, dscale = rmsnorm_bwd(x2, scale, rstd, dy, interpret=interpret)
+        if shard is not None:
+            # scale is replicated: sum the per-shard dscale partials
+            dscale = jax.lax.psum(dscale, shard.axes)
+        return dx, dscale
+    if shard is None:
+        dx, dscale = call(x2, scale, rstd, dy)
+    else:
+        from jax.sharding import PartitionSpec as P
+        dx, dscale = shard_map(call, mesh=shard.mesh,
+                               in_specs=(shard.rows, P(None), shard.rstd,
+                                         shard.rows),
+                               out_specs=(shard.rows, P(None)),
+                               check_rep=False)(x2, scale, rstd, dy)
     return dx, dscale.astype(scale.dtype)
 
 
 _rmsnorm_pallas.defvjp(_rmsnorm_pallas_fwd, _rmsnorm_pallas_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def _rmsnorm_call(x2, scale, eps, interpret):
-    return _rmsnorm_pallas(x2, scale, eps, interpret)
+@functools.partial(jax.jit, static_argnames=("eps", "shard", "interpret"))
+def _rmsnorm_call(x2, scale, eps, shard, interpret):
+    return _rmsnorm_pallas(x2, scale, eps, shard, interpret)
 
 
 def _resolve_rmsnorm(rows: int, d: int, backend: str
-                     ) -> Tuple[Decision, bool]:
+                     ) -> Tuple[Decision, Optional[RowShardSpec], bool]:
     mesh, platform = _mesh_for_dispatch()
     interpret = platform != "tpu"
     aligned = rows >= 8 and d % 128 == 0
     if backend == "jnp":
-        return _decide("rmsnorm", "jnp", "explicit backend"), interpret
+        return _decide("rmsnorm", "jnp", "explicit backend"), None, \
+            interpret
     if backend in ("pallas", "pallas_shard_map"):
         if not aligned:
             return _decide("rmsnorm", "jnp",
                            f"explicit pallas but rows={rows}/d={d} below "
                            "tile minimum (8 rows, 128-lane d); "
-                           "reference"), interpret
-        return _decide("rmsnorm", "pallas", "explicit backend"), interpret
+                           "reference"), None, interpret
+        if backend == "pallas_shard_map":
+            raw_mesh = ctx.current_mesh()   # honor even a 1-device mesh
+            if raw_mesh is None:
+                raise ValueError("backend='pallas_shard_map' needs a mesh "
+                                 "installed via ctx.use_mesh")
+            spec, why = rmsnorm_shard_spec(raw_mesh, rows=rows,
+                                           rules=ctx.current_rules())
+            if spec is None:
+                return _decide("rmsnorm", "jnp",
+                               f"explicit shard_map but {why}; reference",
+                               raw_mesh), None, interpret
+            return _decide("rmsnorm", "pallas_shard_map",
+                           "explicit backend", raw_mesh), spec, interpret
+        return _decide("rmsnorm", "pallas", "explicit backend"), None, \
+            interpret
     if not aligned:
         return _decide("rmsnorm", "jnp",
                        f"rows={rows}/d={d} below tile minimum (8 rows, "
-                       "128-lane d)"), interpret
-    if mesh is not None or ctx.current_rules():
+                       "128-lane d)"), None, interpret
+    if mesh is not None:
+        spec, why = rmsnorm_shard_spec(mesh, rows=rows,
+                                       rules=ctx.current_rules())
+        if spec is None:
+            return _decide("rmsnorm", "jnp", why, mesh), None, interpret
+        return _decide("rmsnorm", "pallas_shard_map",
+                       "row blocks divide the mesh axes; scale "
+                       "replicated, dscale psum'd in the vjp", mesh), \
+            spec, interpret
+    if ctx.current_rules():
         return _decide("rmsnorm", "jnp",
-                       "activations are mesh-sharded; fused rmsnorm vjp "
-                       "is single-device (shard_map over row blocks is a "
-                       "ROADMAP item)", mesh), interpret
+                       "sharding rules active without a dispatch mesh "
+                       "(install it via ctx.use_mesh)"), None, interpret
     if platform == "tpu":
         return _decide("rmsnorm", "pallas", "single-device tpu, aligned"), \
-            False
+            None, False
     return _decide("rmsnorm", "jnp",
                    f"platform {platform}: Pallas kernels run interpret-"
-                   "only off-TPU"), interpret
+                   "only off-TPU"), None, interpret
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-6,
             backend: str = "auto") -> jnp.ndarray:
     """Fused RMSNorm over the last dim of an arbitrary-rank activation.
 
-    Differentiable on every backend: the Pallas path carries the one-pass
-    dx/dscale vjp from ``rmsnorm_bwd`` (saved rstd); the jnp path is plain
-    AD through the reference."""
+    Differentiable on every backend: the Pallas paths carry the one-pass
+    dx/dscale vjp from ``rmsnorm_bwd`` (shard_mapped over row blocks under
+    a mesh, with the dscale partials psum'd); the jnp path is plain AD
+    through the reference."""
     assert backend in _BACKENDS, backend
     shape = x.shape
     d = shape[-1]
     rows = x.size // d
-    decision, interpret = _resolve_rmsnorm(rows, d, backend)
+    decision, shard, interpret = _resolve_rmsnorm(rows, d, backend)
     if decision.backend == "jnp":
         return ref.rmsnorm_ref(x, scale, eps=eps)
-    y = _rmsnorm_call(x.reshape(rows, d), scale, eps, interpret)
+    y = _rmsnorm_call(x.reshape(rows, d), scale, eps, shard, interpret)
     return y.reshape(shape)
 
 

@@ -6,10 +6,19 @@ architecture, reporting per-step latency and tokens/s.  This is the same
 
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --reduced \
       --batch 4 --prompt-len 32 --gen 32
+
+``--decode-cp`` installs the context-parallel serving layout on the local
+devices: the KV cache's sequence dim is sharded over a (1, n_devices) host
+mesh via the ``decode_cp`` rules and the dispatch layer resolves the
+``pallas_cp`` flash-decoding combine (the unified serving fast path).  The
+resulting ``kernel_dispatch`` field in the output records what actually
+lowered — including the fallback reason when the cache is too short to
+slice per shard.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -25,10 +34,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-cp", action="store_true",
+                    help="context-parallel serving: shard the KV cache's "
+                    "sequence dim over the local devices (decode_cp rules "
+                    "-> pallas_cp dispatch)")
     args = ap.parse_args()
 
+    from repro import compat
     from repro.configs import get_config
     from repro.core import llm_a3c
+    from repro.distributed import ctx, sharding
+    from repro.kernels import dispatch
+    from repro.launch import hlo_analysis
     from repro.models import model as M
 
     cfg = get_config(args.arch)
@@ -40,44 +57,67 @@ def main():
     cache_len = args.prompt_len + args.gen
     cache = M.init_cache(cfg, b, cache_len, dtype=jnp.float32)
 
-    prompt = jax.random.randint(key, (b, args.prompt_len), 0,
-                                cfg.vocab_size)
-    # backend selection is automatic: the kernel dispatch layer resolves
-    # Pallas vs jnp from the lowering target (see repro.kernels.dispatch)
-    serve_step = jax.jit(llm_a3c.make_serve_step(cfg))
+    decode_layout = "replicated"
+    combine_bytes = 0
+    with contextlib.ExitStack() as stack:
+        if args.decode_cp:
+            n_dev = len(jax.devices())
+            mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+            rules = sharding.decode_rules(cfg, mesh, batch_size=b)
+            stack.enter_context(compat.set_mesh(mesh))
+            stack.enter_context(ctx.use_mesh(mesh))
+            stack.enter_context(ctx.sharding_rules(rules))
+            n_shards = rules["decode_cp"]["n_shards"]
+            decode_layout = f"decode_cp[{n_shards}]"
+            from repro.launch import traffic
+            combine_bytes = traffic.decode_cp_combine_bytes(cfg, b,
+                                                            n_shards)
+        dispatch.clear_decision_log()
 
-    # prefill by stepping the cache token-by-token (keeps one code path for
-    # every cache kind: KV, ring, SSM, xLSTM)
-    tok = prompt[:, :1]
-    t0 = time.time()
-    for i in range(args.prompt_len):
-        batch = {"tokens": prompt[:, i:i + 1]}
-        if cfg.family == "vlm":
-            batch = {"embeds": jnp.zeros((b, 1, cfg.d_model)),
-                     "positions": jnp.full((3, b, 1), i, jnp.int32)}
-        tok, value, cache = serve_step(params, cache, batch,
-                                       jnp.asarray(i), jnp.uint32(i))
-    prefill_s = time.time() - t0
+        prompt = jax.random.randint(key, (b, args.prompt_len), 0,
+                                    cfg.vocab_size)
+        # backend selection is automatic: the kernel dispatch layer
+        # resolves Pallas vs jnp (or the context-parallel pallas_cp
+        # combine) from the lowering target (see repro.kernels.dispatch)
+        serve_step = jax.jit(llm_a3c.make_serve_step(cfg))
 
-    out_tokens = []
-    t0 = time.time()
-    for i in range(args.prompt_len, cache_len):
-        batch = {"tokens": tok[:, None]}
-        if cfg.family == "vlm":
-            batch = {"embeds": jnp.zeros((b, 1, cfg.d_model)),
-                     "positions": jnp.full((3, b, 1), i, jnp.int32)}
-        tok, value, cache = serve_step(params, cache, batch,
-                                       jnp.asarray(i), jnp.uint32(i))
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    decode_s = time.time() - t0
+        # prefill by stepping the cache token-by-token (keeps one code
+        # path for every cache kind: KV, ring, SSM, xLSTM)
+        tok = prompt[:, :1]
+        t0 = time.time()
+        for i in range(args.prompt_len):
+            batch = {"tokens": prompt[:, i:i + 1]}
+            if cfg.family == "vlm":
+                batch = {"embeds": jnp.zeros((b, 1, cfg.d_model)),
+                         "positions": jnp.full((3, b, 1), i, jnp.int32)}
+            tok, value, cache = serve_step(params, cache, batch,
+                                           jnp.asarray(i), jnp.uint32(i))
+        prefill_s = time.time() - t0
+
+        out_tokens = []
+        t0 = time.time()
+        for i in range(args.prompt_len, cache_len):
+            batch = {"tokens": tok[:, None]}
+            if cfg.family == "vlm":
+                batch = {"embeds": jnp.zeros((b, 1, cfg.d_model)),
+                         "positions": jnp.full((3, b, 1), i, jnp.int32)}
+            tok, value, cache = serve_step(params, cache, batch,
+                                           jnp.asarray(i), jnp.uint32(i))
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        decode_s = time.time() - t0
     toks = args.gen * b
     print(json.dumps({
         "arch": cfg.name, "batch": b, "prompt_len": args.prompt_len,
         "gen": args.gen,
+        "decode_layout": decode_layout,
+        "cp_combine_bytes_per_token": combine_bytes,
         "prefill_s": round(prefill_s, 3),
         "decode_s": round(decode_s, 3),
         "decode_tok_per_s": round(toks / decode_s, 1),
+        "kernel_dispatch": [
+            r for r in hlo_analysis.kernel_dispatch_summary()
+            if r["op"] == "decode_attention"],
         "sample_tokens": [int(t) for t in out_tokens[0][:4]],
     }))
 

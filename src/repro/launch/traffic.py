@@ -24,6 +24,11 @@ decode (per token):
   params    1 read bf16: 2 * P   (grouped-einsum MoE reads ALL experts —
             an implementation property the roofline deliberately exposes)
   cache     full read + one-slot write: cache_bytes
+  combine   context-parallel decode (seq-sharded caches) adds the
+            flash-decoding (m, l, acc) psum per attention layer —
+            O(B * Hq * (D + 2)) f32 per shard (``decode_cp_combine_bytes``)
+            instead of all-gathering the cache; the ICI term, not HBM, but
+            reported alongside so serving rooflines see the layout's cost
 """
 from __future__ import annotations
 
@@ -43,6 +48,20 @@ def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
     cache = jax.eval_shape(
         lambda: M.init_cache(cfg, batch, seq, dtype=jnp.bfloat16))
     return _tree_bytes(cache)
+
+
+def decode_cp_combine_bytes(cfg: ModelConfig, batch: int,
+                            n_seq_shards: int) -> int:
+    """ICI bytes per decoded token for the context-parallel flash-decoding
+    combine: every attention layer psums three f32 partials — acc
+    (B, Hq, D), m and l (B, Hq) — across the ``n_seq_shards`` sequence
+    shards.  Whole-cluster total (each shard contributes its copy); the
+    alternative this replaces is all-gathering the multi-GB KV cache every
+    layer."""
+    n_attn = sum(1 for k in cfg.layer_kinds()
+                 if k in ("attn", "attn_local"))
+    per_layer = batch * cfg.n_heads * (cfg.hd + 2) * 4
+    return n_attn * per_layer * n_seq_shards
 
 
 def hbm_bytes(cfg: ModelConfig, shape_id: str, kind: str,

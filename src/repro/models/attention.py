@@ -120,6 +120,59 @@ def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
     }
 
 
+def _decode_cp_rule(cache_len: int) -> Optional[dict]:
+    """The active ``decode_cp`` rule when it actually owns this cache's
+    sequence dim (divisible into one slice per shard), else None."""
+    cp = (ctx.current_rules() or {}).get("decode_cp")
+    if cp is None:
+        return None
+    n = cp["n_shards"]
+    if cache_len % n != 0 or cache_len < n:
+        return None
+    return cp
+
+
+def _update_kv_cache_cp(cache: dict, k, v, slot, cp) -> tuple:
+    """Write the new token's K/V on the owning sequence shard only.
+
+    The cache's sequence dim is sharded over ``cp['seq_axes']``; a plain
+    dynamic_update_slice would make GSPMD re-gather the multi-GB cache, so
+    the write is a predicated dynamic_update_slice inside shard_map — each
+    shard updates its slice iff the slot falls in its range.  (The attention
+    over the updated cache then routes through ``dispatch.decode_attention``,
+    which resolves the matching ``pallas_cp`` combine.)
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.distributed.sharding import decode_cp_spec
+
+    # same layout spec the dispatch combine uses — the write and the
+    # attention must agree on the cache's partitioning
+    spec = decode_cp_spec(cp, batch=k.shape[0])
+    mesh, seq_axes = spec.mesh, spec.seq_axes
+    cache_len = cache["k"].shape[1]
+    l_loc = cache_len // cp["n_shards"]
+
+    def write(k_, v_, ck, cv):
+        # shard coordinate along the (possibly multi-axis) seq sharding
+        idx = jnp.zeros((), jnp.int32)
+        for a in seq_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        local_slot = slot - idx * l_loc
+        in_range = (local_slot >= 0) & (local_slot < l_loc)
+        ls = jnp.clip(local_slot, 0, l_loc - 1)
+        ck2 = jax.lax.dynamic_update_slice(
+            ck, k_.astype(ck.dtype), (0, ls, 0, 0))
+        cv2 = jax.lax.dynamic_update_slice(
+            cv, v_.astype(cv.dtype), (0, ls, 0, 0))
+        return jnp.where(in_range, ck2, ck), jnp.where(in_range, cv2, cv)
+
+    return shard_map(write, mesh=mesh,
+                     in_specs=(spec.new_kv, spec.new_kv, spec.kv, spec.kv),
+                     out_specs=(spec.kv, spec.kv),
+                     check_rep=False)(k, v, cache["k"], cache["v"])
+
+
 def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                   cfg, *, window: Optional[int] = None, use_rope: bool = True,
                   backend: str = "auto"):
@@ -128,6 +181,13 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     Returns (out (B, 1, d_model), new_cache).  When ``window`` is set the
     cache is a ring buffer of length == window (sub-linear memory for
     long-context decode); otherwise cache_len == max seq and slot == pos.
+
+    One entry point serves both cache layouts: when the ``decode_cp`` rules
+    own the cache's sequence dim, the cache write is a predicated
+    shard_map'd update on the owning shard and ``dispatch.decode_attention``
+    resolves to the ``pallas_cp`` flash-decoding combine; otherwise the
+    write is a plain dynamic_update_slice and dispatch shard_maps over
+    (batch, heads) / runs the bare kernel.
     """
     n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b = x.shape[0]
@@ -143,113 +203,19 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     cache_len = cache["k"].shape[1]
     # full cache: slot == pos (pos < cache_len); ring cache: wrap around.
     slot = pos % cache_len
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+    cp = _decode_cp_rule(cache_len)
+    if cp is not None:
+        ck, cv = _update_kv_cache_cp(cache, k, v, slot, cp)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
     new_cache = {"k": ck, "v": cv, "index": pos + 1}
 
     kpos = _cache_positions(cache_len, pos, window)
     o = dispatch.decode_attention(q[:, 0], ck, cv, kpos, pos,
                                   backend=backend)[:, None]
-    return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
-
-
-def attend_decode_cp(params: dict, x: jnp.ndarray, cache: dict,
-                     pos: jnp.ndarray, cfg, *, window: Optional[int],
-                     mesh, seq_axes, dp_axes):
-    """Context-parallel decode (flash-decoding pattern, perf iter #5).
-
-    The KV cache's sequence dim is sharded over ``seq_axes``; each device
-    computes a partial softmax over its cache slice and the combine is a
-    3-tensor psum of (m, l, acc) — O(B*Hq*D) bytes instead of all-gathering
-    the multi-GB cache every layer.  The cache write happens on the owning
-    shard only (predicated dynamic_update_slice).
-    """
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
-
-    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    b = x.shape[0]
-    q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
-    k = _split_heads(cm.linear(params["wk"], x), n_kv, hd)
-    v = _split_heads(cm.linear(params["wv"], x), n_kv, hd)
-    if True:  # rope (decode positions)
-        cos, sin = cm.rope_cos_sin(pos[None, None], hd, cfg.rope_theta)
-        rd = getattr(cfg, "rotary_dim", None)
-        q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
-        k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
-
-    cache_len = cache["k"].shape[1]
-    slot = pos % cache_len
-    g = n_h // n_kv
-    n_seq_shards = 1
-    for a in seq_axes:
-        n_seq_shards *= mesh.shape[a]
-    l_loc = cache_len // n_seq_shards
-
-    bspec = dp_axes if (dp_axes and b % max(
-        1, __import__("math").prod(mesh.shape[a] for a in dp_axes)) == 0) \
-        else None
-
-    def local_fn(q_, k_, v_, ck, cv):
-        # shard coordinate along the (possibly multi-axis) seq sharding
-        idx = jnp.zeros((), jnp.int32)
-        for a in seq_axes:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        offset = idx * l_loc
-        local_slot = slot - offset
-        in_range = (local_slot >= 0) & (local_slot < l_loc)
-        ls = jnp.clip(local_slot, 0, l_loc - 1)
-        ck2 = jax.lax.dynamic_update_slice(
-            ck, k_.astype(ck.dtype), (0, ls, 0, 0))
-        cv2 = jax.lax.dynamic_update_slice(
-            cv, v_.astype(cv.dtype), (0, ls, 0, 0))
-        ck = jnp.where(in_range, ck2, ck)
-        cv = jnp.where(in_range, cv2, cv)
-
-        # absolute position per local cache slot (ring-aware)
-        sidx = offset + jnp.arange(l_loc)
-        if window is None:
-            kpos = jnp.where(sidx <= pos, sidx, -1)
-        else:
-            cand = pos - (pos % cache_len) + sidx
-            cand = jnp.where(cand > pos, cand - cache_len, cand)
-            kpos = jnp.where(cand >= 0, cand, -1)
-        valid = (kpos >= 0) & (kpos <= pos)
-
-        # GQA via grouped einsum — never materializes repeated KV
-        bl = q_.shape[0]   # local batch inside shard_map
-        qg = (q_[:, 0].astype(jnp.float32) * (hd ** -0.5)) \
-            .reshape(bl, n_kv, g, hd)
-        kk = ck.astype(jnp.float32)
-        vv = cv.astype(jnp.float32)
-        s_ = jnp.einsum("bkgd,blkd->bkgl", qg, kk)
-        s_ = jnp.where(valid[None, None, None, :], s_, -1e30)
-        m_loc = s_.max(-1)                                  # (B,Hkv,g)
-        p_ = jnp.exp(s_ - m_loc[..., None])
-        l_sum = p_.sum(-1)
-        acc = jnp.einsum("bkgl,blkd->bkgd", p_, vv)
-        # flash-decoding combine across seq shards
-        axes = tuple(seq_axes)
-        m_max = jax.lax.pmax(m_loc, axes)
-        corr = jnp.exp(m_loc - m_max)
-        l_tot = jax.lax.psum(l_sum * corr, axes)
-        acc_tot = jax.lax.psum(acc * corr[..., None], axes)
-        o = (acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]) \
-            .reshape(bl, n_h, hd)
-        return o.astype(x.dtype), ck, cv
-
-    seq_spec = seq_axes if len(seq_axes) > 1 else seq_axes[0]
-    cache_spec = P(bspec, seq_spec, None, None)
-    rep_spec = P(bspec, None, None, None)
-    o, ck, cv = shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec),
-        out_specs=(P(bspec, None, None), cache_spec, cache_spec),
-        check_rep=False,
-    )(q, k, v, cache["k"], cache["v"])
-    new_cache = {"k": ck, "v": cv, "index": pos + 1}
     return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
 
 

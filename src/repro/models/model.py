@@ -144,17 +144,12 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache,
                         pos):
     window = cfg.sliding_window if kind == "attn_local" else None
     if kind in ("attn", "attn_local"):
-        cp = (ctx.current_rules() or {}).get("decode_cp")
-        if cp is not None and cache["k"].shape[1] % cp["n_shards"] == 0 \
-                and cache["k"].shape[1] >= cp["n_shards"]:
-            h, cache = attn.attend_decode_cp(
-                p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, pos,
-                cfg, window=window, mesh=cp["mesh"],
-                seq_axes=cp["seq_axes"], dp_axes=cp["dp_axes"])
-        else:
-            h, cache = attn.attend_decode(
-                p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x),
-                cache, pos, cfg, window=window)
+        # one decode path for both cache layouts: attend_decode routes the
+        # context-parallel (decode_cp-ruled) case through the dispatch
+        # layer's pallas_cp arm itself
+        h, cache = attn.attend_decode(
+            p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x),
+            cache, pos, cfg, window=window)
         x = x + h
         y = cm.apply_norm(cfg.norm, p["ln2"], x)
         if cfg.n_experts:

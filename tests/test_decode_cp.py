@@ -1,4 +1,14 @@
-"""Context-parallel (flash-decoding) decode vs the dense decode path."""
+"""Context-parallel (flash-decoding) decode vs the dense decode path.
+
+Since the unification (PR 3) there is one decode entry point:
+``attend_decode`` writes the cache on the owning seq shard when the
+``decode_cp`` rules apply and routes the attention through
+``dispatch.decode_attention``, whose ``pallas_cp`` arm does the partials
+kernel + psum combine (jnp fallback for misaligned smoke shapes — what the
+(1, 1)-mesh cases here exercise).  The multi-device cases need
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (CI's host-mesh
+matrix leg).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,9 +17,11 @@ import pytest
 from repro import compat
 from repro.configs import get_config
 from repro.distributed import ctx, sharding
+from repro.kernels import dispatch
 from repro.models import model as M
 
 MESH = jax.make_mesh((1, 1), ("data", "model"))
+MULTI = len(jax.devices()) >= 2
 
 
 @pytest.mark.parametrize("arch", ["qwen2-72b", "stablelm-1.6b",
@@ -28,6 +40,38 @@ def test_decode_cp_matches_dense(arch):
         o1, c1 = M.decode_step(cfg, params, c1, tb, jnp.asarray(t))
         with compat.set_mesh(MESH), ctx.sharding_rules(rules):
             o2, c2 = M.decode_step(cfg, params, c2, tb, jnp.asarray(t))
+        np.testing.assert_allclose(np.asarray(o1["logits"]),
+                                   np.asarray(o2["logits"]),
+                                   atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+def test_decode_cp_multidevice_resolves_pallas_cp():
+    """Full decode_step on a real 2-shard seq-sharded cache: the dispatch
+    summary must show pallas_cp (no 'context-parallel rules own the cache'
+    fallback), and logits must match the unruled dense path."""
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    b, cache_len, steps = 2, 256, 4
+    tokens = jax.random.randint(jax.random.key(1), (b, steps), 0,
+                                cfg.vocab_size)
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    c1 = M.init_cache(cfg, b, cache_len, dtype=jnp.float32)
+    c2 = M.init_cache(cfg, b, cache_len, dtype=jnp.float32)
+    rules = sharding.decode_rules(cfg, mesh, batch_size=b)
+    assert rules["decode_cp"]["n_shards"] == 2
+    for t in range(steps):
+        tb = {"tokens": tokens[:, t:t + 1]}
+        o1, c1 = M.decode_step(cfg, params, c1, tb, jnp.asarray(t))
+        with compat.set_mesh(mesh), ctx.sharding_rules(rules):
+            dispatch.clear_decision_log()
+            o2, c2 = M.decode_step(cfg, params, c2, tb, jnp.asarray(t))
+            d = dispatch.last_decision("decode_attention")
+            assert d is not None and d.backend == "pallas_cp", d
+            assert not any("context-parallel rules own the cache" in
+                           r["reason"] and r["backend"] == "jnp"
+                           for r in dispatch.decision_summary())
         np.testing.assert_allclose(np.asarray(o1["logits"]),
                                    np.asarray(o2["logits"]),
                                    atol=2e-4, rtol=2e-4)

@@ -101,22 +101,20 @@ def test_attend_train_auto_lowers_shard_map_pallas(mesh_shape):
                                  use_rope=False)
 
     mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    jitted = jax.jit(fn)
     with ctx.use_mesh(mesh):
         dispatch.clear_decision_log()
-        lowered = jax.jit(fn).lower(x)
+        lowered = jitted.lower(x)
         d = dispatch.last_decision("flash_attention")
         assert d.backend == "pallas_shard_map", d
         assert "shmap_body" in lowered.as_text()
         assert "shard_map" in str(jax.make_jaxpr(fn)(x))
 
-    # fresh closure: dispatch resolves at trace time, and jax caches traces
-    # by function identity — reusing ``fn`` would replay the mesh lowering
-    def fn2(x):
-        return attn.attend_train(params, x, None, None, cfg,
-                                 use_rope=False)
-
+    # the SAME jitted callable re-lowered outside the mesh must re-resolve
+    # (ctx folds a dispatch token into the jit cache key — without it jax
+    # would replay the mesh trace by function identity)
     dispatch.clear_decision_log()
-    lowered = jax.jit(fn2).lower(x)
+    lowered = jitted.lower(x)
     d = dispatch.last_decision("flash_attention")
     assert d.backend == "jnp" and d.reason
     assert "shmap_body" not in lowered.as_text()
@@ -221,3 +219,308 @@ def test_sharded_decode_parity():
     want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_decode_shard_map_misaligned_is_logged_fallback():
+    """Explicit backend="pallas_shard_map": non-divisible heads / misaligned
+    cache length fall back to jnp with a logged reason instead of raising
+    (serving batch/head counts vary per request)."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    ks = jax.random.split(KEY, 3)
+    pos = jnp.asarray(100, jnp.int32)
+    with ctx.use_mesh(mesh):
+        # 3 heads on a 2-way model axis, batch 1 on a 1-way data axis
+        q = jax.random.normal(ks[0], (1, 3, 64))
+        kc = jax.random.normal(ks[1], (1, 256, 3, 64))
+        vc = jax.random.normal(ks[2], (1, 256, 3, 64))
+        kpos = jnp.where(jnp.arange(256) <= pos, jnp.arange(256), -1)
+        dispatch.clear_decision_log()
+        out = dispatch.decode_attention(q, kc, vc, kpos, pos,
+                                        backend="pallas_shard_map")
+        d = dispatch.last_decision("decode_attention")
+        assert d.backend == "jnp"
+        assert "explicit shard_map but" in d.reason
+        want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+        # misaligned cache length (192): fallback, not ValueError
+        kc2 = jax.random.normal(ks[1], (2, 192, 2, 64))
+        vc2 = jax.random.normal(ks[2], (2, 192, 2, 64))
+        q2 = jax.random.normal(ks[0], (2, 4, 64))
+        kpos2 = jnp.where(jnp.arange(192) <= pos, jnp.arange(192), -1)
+        dispatch.clear_decision_log()
+        dispatch.decode_attention(q2, kc2, vc2, kpos2, pos,
+                                  backend="pallas_shard_map")
+        d = dispatch.last_decision("decode_attention")
+        assert d.backend == "jnp" and "not MXU-aligned" in d.reason
+
+
+# ---------------------------------------------------------------------------
+# context-parallel (pallas_cp) decode: the unified flash-decoding path
+# ---------------------------------------------------------------------------
+
+def _cp_rule(mesh, seq_axes=("model",), dp_axes=("data",)):
+    n = 1
+    for a in seq_axes:
+        n *= mesh.shape[a]
+    return {"decode_cp": {"mesh": mesh, "seq_axes": tuple(seq_axes),
+                          "dp_axes": tuple(dp_axes), "n_shards": n}}
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_decode_cp_pallas_parity():
+    """Seq-sharded cache + GQA + ragged kpos: the pallas_cp combine must
+    match the jnp oracle to <= 1e-5 and the decision must record it — the
+    'context-parallel rules own the cache -> jnp' fallback is gone."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    ks = jax.random.split(KEY, 3)
+    b, length, hq, hkv, d = 2, 512, 8, 2, 64     # GQA g=4
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kc = jax.random.normal(ks[1], (b, length, hkv, d))
+    vc = jax.random.normal(ks[2], (b, length, hkv, d))
+    pos = jnp.asarray(300, jnp.int32)
+    # ragged validity: every 3rd slot unwritten (ring-style holes)
+    kpos = jnp.where((jnp.arange(length) % 3 != 0)
+                     & (jnp.arange(length) <= pos), jnp.arange(length), -1)
+    with ctx.sharding_rules(_cp_rule(mesh)):
+        dispatch.clear_decision_log()
+        out = jax.jit(lambda *a: dispatch.decode_attention(*a))(
+            q, kc, vc, kpos, pos)
+        d = dispatch.last_decision("decode_attention")
+        assert d.backend == "pallas_cp", d
+        assert "psum combine" in d.reason
+    want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_decode_cp_one_shard_fully_masked():
+    """pos inside the first shard's slice: the second shard is all-masked
+    (m = -inf) and must vanish in the combine, not poison it."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    ks = jax.random.split(KEY, 3)
+    b, length = 1, 256
+    q = jax.random.normal(ks[0], (b, 4, 64))
+    kc = jax.random.normal(ks[1], (b, length, 2, 64))
+    vc = jax.random.normal(ks[2], (b, length, 2, 64))
+    pos = jnp.asarray(5, jnp.int32)       # only slots 0..5 valid
+    kpos = jnp.where(jnp.arange(length) <= pos, jnp.arange(length), -1)
+    with ctx.sharding_rules(_cp_rule(mesh)):
+        dispatch.clear_decision_log()
+        out = jax.jit(lambda *a: dispatch.decode_attention(*a))(
+            q, kc, vc, kpos, pos)
+        assert dispatch.last_decision("decode_attention").backend == \
+            "pallas_cp"
+    want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+@pytest.mark.parametrize(
+    "b,length,hq,hkv,d,pos,dp_axes",
+    [
+        (2, 512, 8, 2, 64, 300, ("data",)),    # GQA g=4
+        (1, 1024, 4, 1, 64, 1023, ()),         # MQA, full cache
+        (2, 256, 4, 4, 64, 17, ("data",)),     # MHA, mostly-empty cache
+        (4, 512, 8, 4, 128, 400, ("data",)),   # wide head_dim
+    ])
+def test_decode_cp_parity_sweep(b, length, hq, hkv, d, pos, dp_axes):
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kc = jax.random.normal(ks[1], (b, length, hkv, d))
+    vc = jax.random.normal(ks[2], (b, length, hkv, d))
+    pos = jnp.asarray(pos, jnp.int32)
+    kpos = jnp.where(jnp.arange(length) <= pos, jnp.arange(length), -1)
+    rules = {"decode_cp": {"mesh": mesh, "seq_axes": ("model",),
+                           "dp_axes": dp_axes, "n_shards": 2}}
+    with ctx.sharding_rules(rules):
+        dispatch.clear_decision_log()
+        out = jax.jit(lambda *a: dispatch.decode_attention(*a))(
+            q, kc, vc, kpos, pos)
+        assert dispatch.last_decision("decode_attention").backend == \
+            "pallas_cp"
+    want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_decode_cp_fallback_reason_sweep():
+    """Where the old code had a blanket 'decode_cp -> jnp' branch, the
+    resolver now falls back only when the layout cannot serve the call —
+    each with a logged reason (and numeric parity through the jnp path)."""
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    ks = jax.random.split(KEY, 3)
+    pos = jnp.asarray(100, jnp.int32)
+    q = jax.random.normal(ks[0], (2, 4, 64))
+
+    def decode(length, rules):
+        kc = jax.random.normal(ks[1], (2, length, 2, 64))
+        vc = jax.random.normal(ks[2], (2, length, 2, 64))
+        kpos = jnp.where(jnp.arange(length) <= pos,
+                         jnp.arange(length), -1)
+        with ctx.sharding_rules(rules):
+            dispatch.clear_decision_log()
+            out = dispatch.decode_attention(q, kc, vc, kpos, pos)
+            d = dispatch.last_decision("decode_attention")
+        want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+        return d
+
+    # local slice 192 not MXU-aligned
+    d = decode(384, _cp_rule(mesh))
+    assert d.backend == "jnp"
+    assert "decode_cp rules own the cache but" in d.reason
+    assert "not MXU-aligned" in d.reason
+    # length does not divide the shard count
+    bad = _cp_rule(mesh)
+    bad["decode_cp"]["n_shards"] = 3
+    d = decode(512, bad)
+    assert d.backend == "jnp" and "does not divide" in d.reason
+    # aligned layout resolves pallas_cp (the old blanket fallback is gone)
+    d = decode(512, _cp_rule(mesh))
+    assert d.backend == "pallas_cp"
+    assert "context-parallel rules own the cache" not in "".join(
+        r["reason"] for r in dispatch.decision_summary()
+        if r["backend"] == "jnp")
+
+
+# ---------------------------------------------------------------------------
+# trace-cache token: one jitted callable across meshes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_mesh_switch_relowers_with_new_resolution():
+    """Regression for the trace-cache bug: dispatch resolves at trace time
+    and jax caches traces by function identity, so without the ctx dispatch
+    token a re-lowered jit would replay the stale mesh's decision.  Jit
+    once, switch meshes via ctx.use_mesh, assert the new resolution."""
+    ks = jax.random.split(KEY, 3)
+    b, length = 2, 512
+    q = jax.random.normal(ks[0], (b, 4, 64))
+    kc = jax.random.normal(ks[1], (b, length, 2, 64))
+    vc = jax.random.normal(ks[2], (b, length, 2, 64))
+    pos = jnp.asarray(300, jnp.int32)
+    kpos = jnp.where(jnp.arange(length) <= pos, jnp.arange(length), -1)
+    jitted = jax.jit(lambda *a: dispatch.decode_attention(*a))
+
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    with ctx.use_mesh(mesh):
+        dispatch.clear_decision_log()
+        out_mesh = jitted(q, kc, vc, kpos, pos)
+        assert dispatch.last_decision("decode_attention").backend == \
+            "pallas_shard_map"
+    # same callable under decode_cp rules: resolution must flip to
+    # pallas_cp, not replay the (batch, heads) shard_map trace
+    with ctx.sharding_rules(_cp_rule(mesh)):
+        dispatch.clear_decision_log()
+        out_cp = jitted(q, kc, vc, kpos, pos)
+        d = dispatch.last_decision("decode_attention")
+        assert d is not None and d.backend == "pallas_cp", d
+    # and back outside any mesh: jnp (re-resolved again)
+    dispatch.clear_decision_log()
+    out_plain = jitted(q, kc, vc, kpos, pos)
+    d = dispatch.last_decision("decode_attention")
+    assert d is not None and d.backend == "jnp"
+    want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
+    for got in (out_mesh, out_cp, out_plain):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_mesh_reentry_hits_trace_cache():
+    """The token must key by value, not by entry: re-installing an equal
+    mesh/rule state restores the old cache key (no spurious retrace)."""
+    q, k, v, _ = _qkv(1, 256, 4, 2, 64)
+    traces = []
+
+    @jax.jit
+    def fn(q, k, v):
+        traces.append(1)
+        return dispatch.flash_attention(q, k, v, causal=True)
+
+    fn(q, k, v)
+    assert len(traces) == 1
+    mesh = jax.make_mesh((len(jax.devices()), 1)
+                         if MULTI else (1, 1), ("data", "model"))
+    with ctx.use_mesh(mesh):
+        fn(q, k, v)
+        n_mesh = len(traces)
+        assert n_mesh == 2
+    fn(q, k, v)                       # restored state: cache hit
+    assert len(traces) == n_mesh
+    with ctx.use_mesh(mesh):          # equal mesh: cache hit
+        fn(q, k, v)
+    assert len(traces) == n_mesh
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm under a mesh: row-block shard_map
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+@pytest.mark.parametrize("mesh_shape", [(2, 1), (1, 2)])
+def test_rmsnorm_auto_mesh_shard_map_parity(mesh_shape):
+    """Under a mesh rmsnorm now shard_maps over row blocks (scale
+    replicated, dscale psum'd) instead of silently downgrading to jnp."""
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    x = jax.random.normal(KEY, (4, 8, 128))
+    scale = jnp.ones((128,)) * 1.5
+
+    def loss(x, scale):
+        return jnp.sum(dispatch.rmsnorm(x, scale) ** 2)
+
+    with ctx.use_mesh(mesh):
+        dispatch.clear_decision_log()
+        y = jax.jit(lambda x, s: dispatch.rmsnorm(x, s))(x, scale)
+        d = dispatch.last_decision("rmsnorm")
+        assert d.backend == "pallas_shard_map", d
+        g = jax.jit(jax.grad(loss, argnums=(0, 1)))(x, scale)
+    want = ref.rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    g_ref = jax.grad(lambda x, s: jnp.sum(ref.rmsnorm_ref(x, s) ** 2),
+                     argnums=(0, 1))(x, scale)
+    for got, want_g, name in zip(g, g_ref, ("dx", "dscale")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want_g),
+                                   atol=1e-4, rtol=1e-4, err_msg=name)
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_rmsnorm_seq_parallel_residual_explicit_fallback():
+    """Megatron-SP seq-parallel residual keeps its explicit fallback
+    reason (rows are sharded over 'model'; a row-block shard_map would
+    re-gather the residual stream)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    x = jax.random.normal(KEY, (4, 8, 128))
+    scale = jnp.ones((128,))
+    rules = {"residual": NamedSharding(mesh, P(None, "model", None))}
+    with ctx.use_mesh(mesh), ctx.sharding_rules(rules):
+        dispatch.clear_decision_log()
+        out = dispatch.rmsnorm(x, scale)
+        d = dispatch.last_decision("rmsnorm")
+    assert d.backend == "jnp"
+    assert "seq-parallel residual" in d.reason
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.rmsnorm_ref(x, scale)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rmsnorm_rules_without_mesh_fall_back():
+    from jax.sharding import PartitionSpec as P
+    x = jax.random.normal(KEY, (4, 8, 128))
+    scale = jnp.ones((128,))
+    with ctx.sharding_rules({"residual": P()}):
+        dispatch.clear_decision_log()
+        dispatch.rmsnorm(x, scale)
+    d = dispatch.last_decision("rmsnorm")
+    assert d.backend == "jnp"
+    assert "without a dispatch mesh" in d.reason

@@ -21,6 +21,23 @@ def test_decode_traffic_scales_with_cache():
     assert small >= (2 * cfg.param_count()) / 256
 
 
+def test_decode_cp_combine_is_tiny_vs_cache_gather():
+    """The flash-decoding (m, l, acc) psum must move orders of magnitude
+    fewer bytes than the cache all-gather it replaces, and scale linearly
+    in the shard count."""
+    cfg = get_config("qwen2-72b")
+    b, seq, shards = 128, 32_768, 16
+    combine = traffic.decode_cp_combine_bytes(cfg, b, shards)
+    n_attn = sum(1 for k in cfg.layer_kinds()
+                 if k in ("attn", "attn_local"))
+    assert combine == n_attn * b * cfg.n_heads * (cfg.hd + 2) * 4 * shards
+    assert combine == 2 * traffic.decode_cp_combine_bytes(cfg, b,
+                                                          shards // 2)
+    # vs gathering the cache onto every shard once per token
+    gather = traffic.cache_bytes(cfg, b, seq) * (shards - 1)
+    assert combine < gather / 1000
+
+
 def test_sw_variant_cache_is_sublinear():
     from repro.launch import specs as specs_mod
     cfg = get_config("qwen2-72b")
