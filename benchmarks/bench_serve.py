@@ -1,0 +1,151 @@
+"""Serve-engine benchmark: chunked flash prefill vs the token-by-token
+loop, and continuous batching vs lockstep waves under mixed-length traffic.
+
+Emits ``benchmarks/results/serve_engine.json`` (next to
+``kernels_micro.json``) with tokens/s and latency percentiles — the
+numbers backing the serve-engine acceptance criteria:
+
+  * chunked prefill >= 5x faster than the single-token loop at
+    prompt_len 128;
+  * the continuous-batching engine sustains higher aggregate tokens/s
+    than lockstep wave batching on the same mixed-length trace.
+
+  PYTHONPATH=src python -m benchmarks.run --only serve
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def bench_prefill(cfg, params, *, prompt_len: int, chunk: int) -> tuple:
+    """Token-by-token loop vs chunked flash prefill for one prompt."""
+    from repro.core import llm_a3c
+    from repro.launch import traffic
+    from repro.models import model as M
+
+    rows = []
+    cache_len = prompt_len + 16
+    prompt = jax.random.randint(jax.random.key(1), (1, prompt_len), 0,
+                                cfg.vocab_size)
+    serve_step = jax.jit(llm_a3c.make_serve_step(cfg, sample=False))
+    key = jax.random.key(0)
+
+    def loop_prefill():
+        cache = M.init_cache(cfg, 1, cache_len, dtype=jnp.float32)
+        for i in range(prompt_len):
+            tok, _, cache = serve_step(params, cache,
+                                       {"tokens": prompt[:, i:i + 1]},
+                                       jnp.asarray(i), key)
+        return tok
+
+    prefill_step = llm_a3c.make_prefill_step(cfg)
+
+    def chunked_prefill():
+        cache = M.init_cache(cfg, 1, cache_len, dtype=jnp.float32)
+        for p0 in range(0, prompt_len, chunk):
+            logits, cache = prefill_step(
+                params, cache, {"tokens": prompt[:, p0:p0 + chunk]},
+                pos0=p0)
+        return logits
+
+    us_loop = common.timed(loop_prefill, iters=3)
+    us_chunk = common.timed(chunked_prefill, iters=3)
+    speedup = us_loop / us_chunk
+    rows.append({"name": "prefill_token_loop", "us_per_call": us_loop,
+                 "derived": f"prompt={prompt_len} "
+                            f"tok_s={prompt_len * 1e6 / us_loop:.1f}"})
+    rows.append({"name": "prefill_chunked_flash", "us_per_call": us_chunk,
+                 "derived": f"prompt={prompt_len} chunk={chunk} "
+                            f"tok_s={prompt_len * 1e6 / us_chunk:.1f} "
+                            f"speedup={speedup:.1f}x"})
+    rows.append({"name": "prefill_chunk_hbm_model",
+                 "us_per_call": 0.0,
+                 "derived": "analytic bytes loop(C=1)="
+                 f"{traffic.prefill_chunk_bytes(cfg, 1, prompt_len, 1):.3e}"
+                 " chunked="
+                 f"{traffic.prefill_chunk_bytes(cfg, 1, prompt_len, chunk):.3e}"})
+    return rows, speedup
+
+
+def bench_engine_vs_lockstep(cfg, params, *, n_slots: int, n_requests: int,
+                             seed: int, reps: int = 3) -> list:
+    """Same mixed-length trace through both batching disciplines.
+
+    Paired design: each rep runs engine then lockstep back-to-back on an
+    identical trace and the ratio is taken per rep (shared-machine noise
+    on this box swings absolute wall time far more than the structural
+    margin, but hits a back-to-back pair roughly equally); the reported
+    records come from the median-ratio rep.  Occupancy — the
+    deterministic slot-efficiency metric — is identical across reps."""
+    from repro.launch import serve as serve_mod
+
+    # wide generation-length dispersion is the regime continuous batching
+    # exists for: lockstep burns a slot-step per finished-but-waiting row
+    # until the wave's slowest request drains
+    def one_rep():
+        recs = {}
+        for mode, runner in (("engine", serve_mod.run_engine),
+                             ("lockstep", serve_mod.run_lockstep)):
+            trace = serve_mod.gen_trace(
+                n_requests, vocab=cfg.vocab_size, prompt_range=(16, 64),
+                gen_range=(4, 64), arrival_rate=0.0, seed=seed)
+            recs[mode] = runner(cfg, params, trace, n_slots=n_slots,
+                                cache_len=128, chunk=64, sample=True,
+                                seed=seed)
+        return recs
+
+    all_recs = [one_rep() for _ in range(reps)]
+    ratios = [r["engine"]["tokens_per_s"] /
+              max(r["lockstep"]["tokens_per_s"], 1e-9) for r in all_recs]
+    median = sorted(ratios)[len(ratios) // 2]
+    recs = all_recs[ratios.index(median)]
+
+    rows = []
+    for mode in ("engine", "lockstep"):
+        rec = recs[mode]
+        rows.append({
+            "name": f"serve_{mode}_mixed",
+            "us_per_call": rec["wall_s"] * 1e6,
+            "derived": f"tok_s={rec['tokens_per_s']} "
+                       f"occupancy={rec['occupancy']} "
+                       f"p50={rec['latency_s'].get('p50')} "
+                       f"p99={rec['latency_s'].get('p99')}",
+            "tokens_per_s": rec["tokens_per_s"],
+            "latency_s": rec["latency_s"],
+            "ttft_s": rec["ttft_s"],
+            "occupancy": rec["occupancy"],
+            "warmup_s": rec["warmup_s"],
+        })
+    rows.append({"name": "engine_vs_lockstep", "us_per_call": 0.0,
+                 "derived": f"aggregate_tok_s_ratio={median:.2f}x "
+                            f"(per-rep {[round(r, 2) for r in ratios]})"})
+    return rows
+
+
+def run(*, arch: str = "stablelm-1.6b", prompt_len: int = 128,
+        chunk: int = 128, n_slots: int = 4, n_requests: int = 24,
+        seed: int = 0) -> list:
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.key(seed))
+
+    rows = [{"name": "serve_meta", "us_per_call": 0.0,
+             "derived": f"arch={cfg.name} devices={len(jax.devices())} "
+                        f"backend={jax.default_backend()}"}]
+    pf_rows, _ = bench_prefill(cfg, params, prompt_len=prompt_len,
+                               chunk=chunk)
+    rows += pf_rows
+    rows += bench_engine_vs_lockstep(cfg, params, n_slots=n_slots,
+                                     n_requests=n_requests, seed=seed)
+    common.save_rows("serve_engine", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        common.emit(r["name"], r["us_per_call"], r["derived"])

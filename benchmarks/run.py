@@ -24,11 +24,12 @@ def main() -> None:
                             bench_fig8_optimizers, bench_fig9_entropy,
                             bench_fig10_lr_robustness, bench_kernels,
                             bench_llm_train, bench_replay_ablation,
-                            bench_roofline, bench_stability,
+                            bench_roofline, bench_serve, bench_stability,
                             bench_table1_scores, bench_table2_scaling)
 
     benches = {
         "kernels": lambda: bench_kernels.run(),
+        "serve": lambda: bench_serve.run(),
         "llm_train": lambda: bench_llm_train.run(),
         "fig1": lambda: bench_fig1_learning.run(frames=120_000 * mult),
         "table1": lambda: bench_table1_scores.run(frames=100_000 * mult),

@@ -11,6 +11,7 @@ axis, tensor parallelism on ``model``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict
 
 import jax
@@ -87,20 +88,67 @@ def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
     return train_step
 
 
+def sample_slot_tokens(logits, key, *, sample: bool = True):
+    """Per-slot sampling: logits (B, V), one threaded PRNG key.  Each batch
+    slot draws from its own ``fold_in(key, slot)`` stream, so concurrent
+    requests never share a sampling stream (and the caller folds the step
+    index into ``key``, so streams never repeat across steps either)."""
+    if not sample:
+        return jnp.argmax(logits, axis=-1)
+    b = logits.shape[0]
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(b))
+    return jax.vmap(jax.random.categorical)(keys, logits)
+
+
 def make_serve_step(cfg: ModelConfig, *, sample: bool = True):
     """One-token decode step for the actor/serving path (decode shapes).
-    Returns (token (B,), value (B,), cache)."""
+    Returns (token (B,), value (B,), cache).
 
-    def serve_step(params, cache, batch, pos, seed):
+    ``pos`` is a lockstep scalar or per-slot (B,) (continuous batching);
+    ``key`` is a *threaded* jax PRNG key — the caller folds the step index
+    in (``jax.random.fold_in(base, step)``) and the step folds the slot
+    index per row, replacing the old ``jax.random.key(uint32_seed)``
+    rebuild whose streams were correlated across steps and identical
+    across slots."""
+
+    def serve_step(params, cache, batch, pos, key):
         out, cache = M.decode_step(cfg, params, cache, batch, pos)
         logits = out["logits"][:, -1].astype(jnp.float32)
-        if sample:
-            key = jax.random.key(seed)
-            token = jax.random.categorical(key, logits, axis=-1)
-        else:
-            token = jnp.argmax(logits, axis=-1)
+        token = sample_slot_tokens(logits, key, sample=sample)
         value = out["value"][:, -1] if "value" in out else \
             jnp.zeros(logits.shape[0])
         return token, value, cache
 
     return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Chunked flash prefill for the serve engine: one jitted call runs a
+    whole (B, C) prompt chunk through the flash forward path and writes the
+    KV caches in blocks — replacing C single-token ``serve_step`` launches.
+    Returns None when the architecture's caches can't be block-written
+    (SSM / xLSTM / enc-dec); callers fall back to the decode loop.
+
+    The returned fn is ``prefill_step(params, cache, batch, pos0) ->
+    (logits (B, C, V), cache)`` with ``pos0`` static (one trace per chunk
+    offset).
+
+    Ring (sliding-window) architectures are also gated to the loop here:
+    the engine right-pads admission prompts to a shared chunk grid, and
+    padding tokens written past a row's true length alias ring rows that
+    the decode-side kpos then attributes to real earlier positions — the
+    full-cache "rows beyond pos are masked until rewritten" invariant does
+    not hold in a ring.  (Direct ``M.prefill_step`` callers that control
+    their own padding — exact, unpadded prompt chunks — can still chunk
+    ring caches; the parity test covers that.)"""
+    if not M.supports_chunked_prefill(cfg):
+        return None
+    if cfg.sliding_window and "attn_local" in cfg.layer_kinds():
+        return None
+
+    @functools.partial(jax.jit, static_argnames=("pos0",))
+    def prefill_step(params, cache, batch, pos0=0):
+        out, cache = M.prefill_step(cfg, params, cache, batch, pos0)
+        return out["logits"].astype(jnp.float32), cache
+
+    return prefill_step

@@ -78,6 +78,16 @@ class AttnShardSpec(NamedTuple):
         """decode q / o: (B, Hq, D)."""
         return P(self.batch, self.heads, None)
 
+    @property
+    def kpos_decode(self) -> P:
+        """per-slot kpos (B, L): batch sharded with q, slots replicated."""
+        return P(self.batch, None)
+
+    @property
+    def pos_decode(self) -> P:
+        """per-slot pos (B,)."""
+        return P(self.batch)
+
 
 class DecodeCPSpec(NamedTuple):
     """How to shard_map the context-parallel (flash-decoding) decode kernel.
@@ -114,8 +124,14 @@ class DecodeCPSpec(NamedTuple):
 
     @property
     def kpos(self) -> P:
-        """kpos (L,): sliced along the same seq sharding as the cache."""
-        return P(self._seq)
+        """per-slot kpos (B, L): batch with q, slots sliced along the same
+        seq sharding as the cache."""
+        return P(self.batch, self._seq)
+
+    @property
+    def pos_decode(self) -> P:
+        """per-slot pos (B,): replicated over the seq axes."""
+        return P(self.batch)
 
 
 def decode_cp_spec(rule: dict, *, batch: int) -> DecodeCPSpec:

@@ -1,4 +1,4 @@
-"""Pallas TPU decode attention: one query token vs a long KV cache.
+"""Pallas TPU decode attention: one query token per sequence vs a KV cache.
 
 The memory-bound phase of serving: each step streams the KV cache from HBM
 once.  Grid: (batch, kv_heads, n_kv_blocks) — all G query heads that share a
@@ -6,9 +6,14 @@ KV head are packed into one (G x D) @ (D x block_k) MXU matmul per block, so
 GQA costs one cache read regardless of the query-head fan-out.  Online
 softmax state lives in VMEM scratch across the innermost KV dimension.
 
-Empty/future cache slots are masked via ``kpos`` (absolute position per
-slot, -1 = unwritten), which also handles ring-buffer (sliding-window)
-caches where slot order is rotated.
+Positions are **per slot** (continuous batching): ``pos (B,)`` is each
+sequence's current decode position and ``kpos (B, L)`` the absolute position
+held by each of its cache slots (-1 = unwritten), so every batch row can sit
+at a different decode depth — a just-admitted request next to one that is
+thousands of tokens deep.  ``kpos`` also handles ring-buffer
+(sliding-window) caches where slot order is rotated.  Lockstep callers pass
+broadcast views; the dispatch layer normalizes scalar ``pos`` / 1-D ``kpos``
+automatically.
 
 Two entry points share the kernel body:
 
@@ -53,8 +58,8 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, *refs,
     v = v_ref[0, :, 0, :]                   # (bk, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    kpos = kpos_ref[...]                    # (bk,)
-    pos = pos_ref[0]
+    kpos = kpos_ref[0, :]                   # (bk,) — this row's slot map
+    pos = pos_ref[pl.program_id(0)]         # this row's decode position
     valid = (kpos >= 0) & (kpos <= pos)
     s = jnp.where(valid[None, :], s, NEG)
 
@@ -83,6 +88,17 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, *refs,
                 .astype(o_ref.dtype)
 
 
+def _per_slot(kpos, pos, batch: int):
+    """Normalize lockstep (kpos (L,), pos ()) inputs to the per-slot layout
+    the kernel reads (kpos (B, L), pos (B,))."""
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos, (batch,) + kpos.shape)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (batch,))
+    return kpos, pos
+
+
 def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
           interpret: Optional[bool]):
     b, hq, d = q.shape
@@ -92,8 +108,13 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
     bk = min(block_k, length)
     assert length % bk == 0
     n_k = length // bk
+    kpos, pos = _per_slot(kpos, pos, b)
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        # resolve from the lowering target like the dispatch layer does for
+        # every kernel (PR 2 policy) — NOT jax.default_backend(), so a host
+        # process lowering a TPU mesh compiles the real kernel
+        from repro.distributed import ctx
+        interpret = ctx.current_platform() != "tpu"
 
     qg = q.reshape(b, hkv, g, d)
     kern = functools.partial(_kernel, block_k=bk, n_k=n_k, scale=d ** -0.5,
@@ -112,11 +133,11 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
         kern,
         grid=(b, hkv, n_k),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # pos scalar
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # pos (B,)
             pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0)),
             pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
             pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
-            pl.BlockSpec((bk,), lambda b_, h, ik: (ik,)),
+            pl.BlockSpec((1, bk), lambda b_, h, ik: (b_, ik)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
@@ -128,13 +149,14 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(pos.reshape(1), qg, k_cache, v_cache, kpos)
+    )(pos.astype(jnp.int32), qg, k_cache, v_cache, kpos)
 
 
 def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
                          block_k: int = 1024,
                          interpret: Optional[bool] = None) -> jnp.ndarray:
-    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,); pos () -> (B,Hq,D)."""
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (B,L) [or (L,) lockstep];
+    pos (B,) [or () lockstep] -> (B,Hq,D)."""
     b, hq, d = q.shape
     out = _call(q, k_cache, v_cache, kpos, pos, block_k=block_k,
                 partials=False, interpret=interpret)

@@ -61,7 +61,7 @@ from repro.distributed.sharding import (AttnShardSpec, DecodeCPSpec,
                                         decode_cp_shard_spec,
                                         rmsnorm_shard_spec)
 from repro.kernels import ref
-from repro.kernels.decode_attention import (decode_attention_fwd,
+from repro.kernels.decode_attention import (_per_slot, decode_attention_fwd,
                                             decode_attention_partials)
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.flash_attention_bwd import flash_attention_bwd
@@ -320,10 +320,9 @@ def _decode_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
                                     interpret=interpret)
     if shard is None:
         return call(q, k_cache, v_cache, kpos, pos)
-    from jax.sharding import PartitionSpec as P
     return shard_map(call, mesh=shard.mesh,
                      in_specs=(shard.q_decode, shard.kv, shard.kv,
-                               P(None), P()),
+                               shard.kpos_decode, shard.pos_decode),
                      out_specs=shard.q_decode,
                      check_rep=False)(q, k_cache, v_cache, kpos, pos)
 
@@ -335,7 +334,6 @@ def _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
     slice and the combine is an O(B*Hq*D) psum of (m, l, acc) — the same
     correction math the pure-jnp ``attend_decode_cp`` combine used, now fed
     by the Pallas kernel."""
-    from jax.sharding import PartitionSpec as P
     axes = shard.seq_axes
 
     def call(q, kc, vc, kp, p):
@@ -355,7 +353,7 @@ def _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
 
     return shard_map(call, mesh=shard.mesh,
                      in_specs=(shard.q_decode, shard.kv, shard.kv,
-                               shard.kpos, P()),
+                               shard.kpos, shard.pos_decode),
                      out_specs=shard.q_decode,
                      check_rep=False)(q, k_cache, v_cache, kpos, pos)
 
@@ -365,8 +363,8 @@ def _decode_dense(q, k_cache, v_cache, kpos, pos):
     n_rep = q.shape[1] // k_cache.shape[2]
     kk = attn._repeat_kv(k_cache.astype(q.dtype), n_rep)
     vv = attn._repeat_kv(v_cache.astype(q.dtype), n_rep)
-    valid = (kpos >= 0) & (kpos <= pos)
-    mask = valid[None, None, None, :]
+    valid = (kpos >= 0) & (kpos <= pos[:, None])      # (B, L) per slot
+    mask = valid[:, None, None, :]
     return attn.sdpa(q[:, None], kk, vv, mask)[:, 0]
 
 
@@ -455,7 +453,12 @@ def _resolve_decode(b: int, length: int, hq: int, hkv: int, backend: str
 
 def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
                      backend: str = "auto") -> jnp.ndarray:
-    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) -> (B,Hq,D).
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (B,L); pos (B,) -> (B,Hq,D).
+
+    Positions are per batch slot (continuous batching: every sequence can
+    be at its own decode depth).  Lockstep callers may pass kpos (L,) and
+    scalar pos — both are broadcast to the per-slot layout here, so the
+    scalar-``pos`` path is a thin wrapper over the same kernels.
 
     One fast path serves both cache layouts: under the replicated-cache
     layout the kernel is shard_mapped over (batch, heads); when the
@@ -463,10 +466,12 @@ def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
     ``pallas_cp`` — the partials kernel per sequence shard plus the
     flash-decoding psum combine."""
     assert backend in _BACKENDS, backend
-    if pos is None:
-        pos = jnp.max(kpos)
     b, hq, _ = q.shape
     length, hkv = k_cache.shape[1], k_cache.shape[2]
+    if pos is None:
+        pos = jnp.max(kpos, axis=-1) if kpos.ndim == 2 else jnp.max(kpos)
+    # normalization helper shared with the kernel entry points
+    kpos, pos = _per_slot(kpos, pos, b)
     decision, shard, interpret = _resolve_decode(b, length, hq, hkv,
                                                  backend)
     if decision.backend == "jnp":

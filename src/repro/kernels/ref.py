@@ -31,17 +31,21 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
 
 
 def decode_attention_ref(q, k_cache, v_cache, kpos, pos) -> jnp.ndarray:
-    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (L,) absolute position per slot
-    (-1 = empty); pos () current position.  -> (B,Hq,D)."""
+    """q (B,Hq,D); caches (B,L,Hkv,D); kpos (B,L) absolute position per slot
+    (-1 = empty); pos (B,) current position per sequence.  -> (B,Hq,D).
+    Lockstep shapes (kpos (L,), pos ()) broadcast to every row."""
     b, hq, d = q.shape
     hkv = k_cache.shape[2]
     g = hq // hkv
     scale = d ** -0.5
+    length = k_cache.shape[1]
+    kpos = jnp.broadcast_to(kpos, (b, length))
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
     qg = q.reshape(b, hkv, g, d)
     logits = jnp.einsum("bhgd,blhd->bhgl", qg.astype(jnp.float32),
                         k_cache.astype(jnp.float32)) * scale
-    valid = (kpos >= 0) & (kpos <= pos)
-    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhgl,blhd->bhgd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, hq, d).astype(q.dtype)

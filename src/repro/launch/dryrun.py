@@ -189,7 +189,7 @@ def lower_case(arch: str, shape_id: str, *, multi_pod: bool = False,
                                   None),
                     out_shardings=(None, None, c_shard),
                 ).lower(p_serve_specs, in_specs["cache"], in_specs["batch"],
-                        in_specs["pos"], in_specs["seed"])
+                        in_specs["pos"], in_specs["key"])
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()

@@ -1,48 +1,541 @@
-"""Serving driver: batched autoregressive decode (the actor path).
+"""Continuous-batching serve engine (the actor/serving path).
 
-Runs prefill + N decode steps with the KV/SSM cache for a (reduced) assigned
-architecture, reporting per-step latency and tokens/s.  This is the same
-``serve_step`` the decode dry-run shapes lower on the production mesh.
+A slot table of ``--slots`` concurrent sequences, fed by a queue of
+requests with Poisson (or trace-driven) arrivals and heterogeneous
+prompt/generation lengths:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --reduced \
-      --batch 4 --prompt-len 32 --gen 32
+  * **admission** — a finished sequence frees its slot; the oldest arrived
+    request is admitted, its prompt runs through *chunked flash prefill*
+    (``llm_a3c.make_prefill_step``: whole prompt chunks through the flash
+    forward kernel, KV caches written in blocks) and its per-slot decode
+    position starts at its true prompt length.  Architectures with
+    recurrent caches (SSM / xLSTM / enc-dec) fall back to a token-by-token
+    prefill loop through ``serve_step``.
+  * **decode** — all slots step together through one jitted ``serve_step``
+    with per-slot positions ``pos (B,)`` (the per-slot decode-attention
+    kernel masks each row at its own depth) and per-slot sampling keys
+    (``fold_in`` per step and per slot).
 
-``--decode-cp`` installs the context-parallel serving layout on the local
-devices: the KV cache's sequence dim is sharded over a (1, n_devices) host
-mesh via the ``decode_cp`` rules and the dispatch layer resolves the
-``pallas_cp`` flash-decoding combine (the unified serving fast path).  The
-resulting ``kernel_dispatch`` field in the output records what actually
-lowered — including the fallback reason when the cache is too short to
-slice per shard.
+Reports aggregate tokens/s, per-request latency percentiles (TTFT and
+end-to-end), slot-occupancy utilization, and the kernel dispatch summary.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+      --slots 4 --requests 16 --prompt-range 16,64 --gen-range 8,32
+
+``--mode lockstep`` keeps the old wave-batched driver (every slot the same
+position; waves admit ``--slots`` requests at once and wait for the
+slowest) — the baseline the engine is measured against in
+``benchmarks/bench_serve.py``.  ``--decode-cp`` installs the
+context-parallel serving layout on the local devices (seq-sharded KV cache
+-> ``pallas_cp`` dispatch) under either mode.
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import json
 import time
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# request trace
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int
+    arrival: float                # seconds after engine start
+    # filled by the engine:
+    tokens: list = dataclasses.field(default_factory=list)
+    t_admit: float = -1.0
+    t_first: float = -1.0
+    t_done: float = -1.0
+
+
+def gen_trace(n_requests: int, *, vocab: int, prompt_range, gen_range,
+              arrival_rate: float, seed: int) -> List[Request]:
+    """Poisson arrivals (exponential interarrival at ``arrival_rate`` req/s;
+    rate <= 0 = all at t=0) with uniform prompt/gen lengths — the same
+    trace drives both the engine and the lockstep baseline."""
+    if prompt_range[0] < 1 or gen_range[0] < 1:
+        raise ValueError("prompt and generation lengths must be >= 1 "
+                         f"(got ranges {prompt_range}, {gen_range})")
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        if arrival_rate > 0:
+            t += rng.exponential(1.0 / arrival_rate)
+        plen = int(rng.integers(prompt_range[0], prompt_range[1] + 1))
+        glen = int(rng.integers(gen_range[0], gen_range[1] + 1))
+        out.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new=glen, arrival=t))
+    return out
+
+
+def _percentiles(xs) -> dict:
+    if not xs:
+        return {}
+    return {p: round(float(np.percentile(xs, q)), 4)
+            for p, q in (("p50", 50), ("p90", 90), ("p99", 99))}
+
+
+def _validate_trace(trace: List[Request], cache_len: int) -> None:
+    """A full KV cache has no wrap semantics: ``slot = pos % cache_len``
+    silently clobbers row 0 onward if decode runs past the end, while kpos
+    keeps attributing the old positions — so reject traces that could
+    reach it (decode writes up to position prompt + max_new - 2)."""
+    for r in trace:
+        if len(r.prompt) < 1:
+            raise ValueError(f"request {r.rid}: empty prompt")
+        if len(r.prompt) + r.max_new - 1 > cache_len:
+            raise ValueError(
+                f"request {r.rid}: prompt {len(r.prompt)} + max_new "
+                f"{r.max_new} overruns cache_len {cache_len}; raise "
+                "--cache-len (a full cache would wrap and clobber "
+                "prompt rows silently)")
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill plumbing (shared by the engine, the lockstep baseline and
+# both warmups — one place to get the grid and the logit gather right)
+# ---------------------------------------------------------------------------
+
+def _chunk_grid(pmax: int, chunk: int, cache_len: int) -> List[tuple]:
+    """(offset, length) chunks covering the padded prompt grid.
+
+    The padded length rounds ``pmax`` up to the chunk grid but is clamped
+    to ``cache_len``: a full cache has no wrap semantics and
+    ``attend_prefill`` rejects writes past its end (window layers clamp
+    their own ring length and wrap), so the last chunk shrinks instead of
+    overflowing."""
+    if pmax > cache_len:
+        raise ValueError(f"prompt length {pmax} exceeds cache_len "
+                         f"{cache_len}")
+    padded = min(-(-pmax // chunk) * chunk, cache_len)
+    grid = []
+    p0 = 0
+    while p0 < padded:
+        grid.append((p0, min(chunk, padded - p0)))
+        p0 += grid[-1][1]
+    return grid
+
+
+def _pad_group(reqs: List[Request], n_rows: int, chunk: int,
+               cache_len: int):
+    """Right-pad a request group onto the shared chunk grid.  Returns
+    (toks (n_rows, padded) int32, plens, grid); rows beyond len(reqs) are
+    dummies with plen 0."""
+    pmax = max((len(r.prompt) for r in reqs), default=1)
+    grid = _chunk_grid(pmax, chunk, cache_len)
+    padded = grid[-1][0] + grid[-1][1]
+    toks = np.zeros((n_rows, padded), np.int32)
+    plens = [0] * n_rows
+    for i, r in enumerate(reqs):
+        toks[i, :len(r.prompt)] = r.prompt
+        plens[i] = len(r.prompt)
+    return toks, plens, grid
+
+
+def _chunked_prefill(prefill_step, params, cache, toks, plens, grid):
+    """Run one right-padded (B, padded) token block through the chunk
+    chain.  Returns (last_logits (B, V) np.float32 — each row's true
+    last-prompt-position logits — and the final cache).  The gather
+    accumulates on device so the chunk chain is dispatched without a
+    host sync per chunk; only the final (B, V) block crosses to host.
+    Rows with plen 0 (dummy padding rows) keep zeros."""
+    import jax.numpy as jnp
+
+    last = None
+    plens = np.asarray(plens)
+    for p0, c in grid:
+        logits, cache = prefill_step(
+            params, cache, {"tokens": jnp.asarray(toks[:, p0:p0 + c])},
+            pos0=p0)
+        if last is None:
+            last = jnp.zeros((toks.shape[0], logits.shape[-1]),
+                             jnp.float32)
+        rel = plens - 1 - p0
+        hit = (rel >= 0) & (rel < c)
+        if hit.any():
+            idx = jnp.asarray(np.clip(rel, 0, c - 1))
+            rows = jnp.take_along_axis(logits, idx[:, None, None],
+                                       axis=1)[:, 0]
+            last = jnp.where(jnp.asarray(hit)[:, None], rows, last)
+    return np.asarray(last), cache
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class ServeEngine:
+    """Slot table + schedulers around one jitted per-slot ``serve_step``.
+
+    The model cache is one batched pytree of ``n_slots`` rows; admission
+    prefills the whole arrived group in one batch-``n_slots`` chunk chain
+    (recurrent archs: a token loop per request) and lands each row in its
+    freed slot via a single jitted masked-permutation write — generic over
+    every cache kind, KV and recurrent alike (the batch dim per leaf is
+    found once by diffing eval_shapes).
+    """
+
+    def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
+                 chunk: int = 128, sample: bool = True, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import llm_a3c
+        from repro.models import model as M
+
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.cache_len, self.chunk = n_slots, cache_len, chunk
+        self.sample = sample
+        self.jnp, self.jax, self.M = jnp, jax, M
+        self.cache = M.init_cache(cfg, n_slots, cache_len,
+                                  dtype=jnp.float32)
+        self.serve_step = jax.jit(llm_a3c.make_serve_step(cfg,
+                                                          sample=sample))
+        self.prefill_step = llm_a3c.make_prefill_step(cfg)
+        self.sample_first = jax.jit(
+            lambda lg, key: llm_a3c.sample_slot_tokens(lg, key,
+                                                       sample=sample))
+        self.base_key = jax.random.key(seed)
+        # slot state (host side; shapes are static so no retraces)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.tok = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.req_of: List[Optional[Request]] = [None] * n_slots
+        self.step_count = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.occupancy: List[float] = []
+        # batch-dim index per cache leaf (-1 for per-layer scalars like
+        # "index", which have no batch dim): found once by diffing two
+        # eval_shape batch sizes, so the admission scatter needs no shape
+        # guessing at runtime
+        s1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, cache_len))
+        s2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, cache_len))
+        self._bdim = jax.tree.map(
+            lambda a, b: next((d for d in range(a.ndim)
+                               if a.shape[d] != b.shape[d]), -1), s1, s2)
+        # persistent admission-prefill cache (batch n_slots): stale rows
+        # beyond a new request's prompt are hidden by the kpos/pos
+        # invariant, so it never needs re-zeroing
+        self._group_cache = M.init_cache(cfg, n_slots, cache_len,
+                                         dtype=jnp.float32)
+        bdims = self._bdim
+
+        def scatter(big, small, perm, mask):
+            """big[j] <- small[perm[j]] where mask[j], per cache leaf —
+            the whole admission scatter is one jitted call."""
+            def one(bd, b, s):
+                if bd < 0:
+                    return b    # engine tracks per-slot pos itself
+                idx = jnp.clip(perm, 0, s.shape[bd] - 1)
+                taken = jnp.take(s, idx, axis=bd).astype(b.dtype)
+                shape = [1] * b.ndim
+                shape[bd] = -1
+                return jnp.where(mask.reshape(shape), taken, b)
+            return jax.tree.map(one, bdims, big, small)
+
+        self._scatter = jax.jit(scatter)
+
+    # -- admission ----------------------------------------------------------
+
+    def _write_rows(self, group_cache, row_to_slot):
+        """Scatter rows of an admission-prefill cache into their assigned
+        engine-cache slots (one jitted masked-permutation write)."""
+        perm = np.zeros(self.n_slots, np.int32)
+        mask = np.zeros(self.n_slots, bool)
+        for i, j in row_to_slot:
+            perm[j] = i
+            mask[j] = True
+        self.cache = self._scatter(self.cache, group_cache,
+                                   self.jnp.asarray(perm),
+                                   self.jnp.asarray(mask))
+
+    def _prefill_group(self, reqs: List[Request], key):
+        """Chunked flash prefill for up to ``n_slots`` requests in ONE
+        batched call chain (prompts right-padded to a shared chunk grid,
+        rows beyond len(reqs) are dummies) — admission costs the same
+        kernel launches as a full lockstep wave, shape-stable across
+        group sizes.  Returns (first_tokens (n_slots,), cache)."""
+        jnp = self.jnp
+        toks, plens, grid = _pad_group(reqs, self.n_slots, self.chunk,
+                                       self.cache_len)
+        last, cache = _chunked_prefill(self.prefill_step, self.params,
+                                       self._group_cache, toks, plens,
+                                       grid)
+        self._group_cache = cache
+        first = self.sample_first(jnp.asarray(last), key)
+        return np.asarray(first), cache
+
+    def _prefill_loop(self, req: Request, key):
+        """Recurrent caches: token-by-token loop on a single-row cache."""
+        jnp = self.jnp
+        cache = self.M.init_cache(self.cfg, 1, self.cache_len,
+                                  dtype=jnp.float32)
+        for i in range(len(req.prompt)):
+            tok, _, cache = self.serve_step(
+                self.params, cache,
+                {"tokens": jnp.asarray(req.prompt[None, i:i + 1])},
+                jnp.asarray(i, jnp.int32),
+                self.jax.random.fold_in(key, i))
+        return int(tok[0]), cache
+
+    def admit(self, pairs: List[tuple], now: float) -> List[Request]:
+        """Admit ``pairs`` of (request, free slot) — one batched prefill
+        for KV-cache archs, a per-request loop otherwise.  Returns the
+        requests already satisfied by their prefill token (max_new == 1),
+        which never occupy a slot."""
+        if not pairs:
+            return []
+        key = self.jax.random.fold_in(
+            self.base_key, np.uint32(2 ** 31 + pairs[0][0].rid))
+        if self.prefill_step is not None:
+            reqs = [r for r, _ in pairs]
+            first, cache = self._prefill_group(reqs, key)
+            self._write_rows(cache, [(i, j) for i, (_, j)
+                                     in enumerate(pairs)])
+            firsts = [int(first[i]) for i in range(len(pairs))]
+        else:
+            firsts = []
+            for r, j in pairs:
+                k = self.jax.random.fold_in(
+                    self.base_key, np.uint32(2 ** 31 + r.rid))
+                f, cache = self._prefill_loop(r, k)
+                self._write_rows(cache, [(0, j)])
+                firsts.append(f)
+        finished = []
+        for (req, j), f in zip(pairs, firsts):
+            self.prefill_tokens += len(req.prompt)
+            req.t_admit = now
+            req.t_first = time.perf_counter()
+            req.tokens.append(f)
+            if len(req.tokens) >= req.max_new:
+                req.t_done = req.t_first
+                finished.append(req)    # slot stays free
+                continue
+            self.pos[j] = len(req.prompt)
+            self.tok[j] = f
+            self.active[j] = True
+            self.req_of[j] = req
+        return finished
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_step_all(self):
+        """One per-slot decode step over the whole slot table."""
+        jnp = self.jnp
+        key = self.jax.random.fold_in(self.base_key, self.step_count)
+        tok, _, self.cache = self.serve_step(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(self.tok[:, None])},
+            jnp.asarray(self.pos), key)
+        self.step_count += 1
+        tok = np.asarray(tok)
+        finished = []
+        for j in range(self.n_slots):
+            req = self.req_of[j]
+            if req is None:
+                continue
+            req.tokens.append(int(tok[j]))
+            self.decode_tokens += 1
+            self.pos[j] += 1
+            self.tok[j] = int(tok[j])
+            if len(req.tokens) >= req.max_new:
+                req.t_done = time.perf_counter()
+                self.active[j] = False
+                self.req_of[j] = None
+                self.pos[j] = 0
+                self.tok[j] = 0
+                finished.append(req)
+        self.occupancy.append(float(np.mean([r is not None
+                                             for r in self.req_of])))
+        return finished
+
+    def reset(self):
+        """Clear slot state and counters (compiled steps and caches stay
+        warm) — used after the warmup pass."""
+        self.pos[:] = 0
+        self.tok[:] = 0
+        self.active[:] = False
+        self.req_of = [None] * self.n_slots
+        self.step_count = 0
+        self.prefill_tokens = self.decode_tokens = 0
+        self.occupancy = []
+
+
+def _warmup(eng: ServeEngine, trace: List[Request]) -> float:
+    """Compile everything the run can hit, outside the timed region: every
+    prefill chunk offset the trace can reach (admission prefills are
+    always batch = n_slots, so these are exactly the run's shapes), the
+    first-token sampler, and one decode step."""
+    t0 = time.perf_counter()
+    if eng.prefill_step is not None:
+        pmax = max((len(r.prompt) for r in trace), default=1)
+        toks, plens, grid = _pad_group(
+            [Request(rid=-1, prompt=np.zeros(pmax, np.int32), max_new=1,
+                     arrival=0.0)], eng.n_slots, eng.chunk, eng.cache_len)
+        wc = eng.M.init_cache(eng.cfg, eng.n_slots, eng.cache_len,
+                              dtype=eng.jnp.float32)
+        _chunked_prefill(eng.prefill_step, eng.params, wc, toks, plens,
+                         grid)
+    warm = Request(rid=-1, prompt=np.zeros(min(8, eng.cache_len - 1),
+                                           np.int32),
+                   max_new=2, arrival=0.0)
+    eng.admit([(warm, 0)], 0.0)
+    eng.decode_step_all()
+    eng.reset()
+    return time.perf_counter() - t0
+
+
+def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
+            warmup_s: float, t_start: float) -> dict:
+    lat = [r.t_done - (t_start + r.arrival) for r in done]
+    ttft = [r.t_first - (t_start + r.arrival) for r in done]
+    total_new = sum(len(r.tokens) for r in done)
+    first_req = min(done, key=lambda r: r.rid) if done else None
+    return {
+        "mode": mode, "slots": eng.n_slots, "requests": len(done),
+        "warmup_s": round(warmup_s, 3),
+        "wall_s": round(wall, 3),
+        "prefill_tokens": eng.prefill_tokens,
+        "generated_tokens": total_new,
+        "tokens_per_s": round(total_new / wall, 1) if wall else 0.0,
+        "latency_s": _percentiles(lat),
+        "ttft_s": _percentiles(ttft),
+        "occupancy": round(float(np.mean(eng.occupancy)), 3)
+        if eng.occupancy else 0.0,
+        "chunked_prefill": eng.prefill_step is not None,
+        # the FIRST REQUEST's first generated tokens, not the first decode
+        # step across the batch
+        "sample_tokens": first_req.tokens[:4] if first_req else [],
+    }
+
+
+def run_engine(cfg, params, trace: List[Request], *, n_slots: int,
+               cache_len: int, chunk: int, sample: bool, seed: int) -> dict:
+    """Continuous batching: admit into freed slots, per-slot decode."""
+    _validate_trace(trace, cache_len)
+    eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
+                      chunk=chunk, sample=sample, seed=seed)
+    warmup_s = _warmup(eng, trace)
+
+    pending = sorted(trace, key=lambda r: r.arrival)
+    done: List[Request] = []
+    qi = 0
+    t_start = time.perf_counter()
+    while qi < len(pending) or any(r is not None for r in eng.req_of):
+        now = time.perf_counter() - t_start
+        # admit arrived requests into free slots, oldest first — one
+        # batched prefill for the whole admission group
+        pairs = []
+        for j in range(n_slots):
+            if qi >= len(pending) or eng.req_of[j] is not None:
+                continue
+            if pending[qi].arrival <= now:
+                pairs.append((pending[qi], j))
+                qi += 1
+        done.extend(eng.admit(pairs, now))
+        if not any(r is not None for r in eng.req_of):
+            # idle: jump to the next arrival instead of spinning
+            if qi < len(pending):
+                time.sleep(max(0.0, pending[qi].arrival -
+                               (time.perf_counter() - t_start)))
+            continue
+        done.extend(eng.decode_step_all())
+    wall = time.perf_counter() - t_start
+    return _report("engine", eng, done, wall, warmup_s, t_start)
+
+
+def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
+                 cache_len: int, chunk: int, sample: bool, seed: int,
+                 chunked_prefill: bool = True) -> dict:
+    """Wave-batched baseline: admit ``n_slots`` requests at once (waiting
+    until the whole wave has arrived), then decode until the wave's
+    *slowest* request finishes before admitting the next wave.
+
+    Runs on the same ``ServeEngine`` machinery as ``run_engine`` — same
+    kernels, same (correct, per-request) prefill paths for every cache
+    kind — so the benchmark difference between the two runners is purely
+    the batching discipline: freed slots idle until the wave drains
+    instead of taking the next arrival."""
+    _validate_trace(trace, cache_len)
+    eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
+                      chunk=chunk, sample=sample, seed=seed)
+    if not chunked_prefill:
+        eng.prefill_step = None
+    warmup_s = _warmup(eng, trace)
+
+    pending = sorted(trace, key=lambda r: r.arrival)
+    waves = [pending[i:i + n_slots]
+             for i in range(0, len(pending), n_slots)]
+    done: List[Request] = []
+    t_start = time.perf_counter()
+    for wave in waves:
+        now = time.perf_counter() - t_start
+        wait = max(r.arrival for r in wave) - now
+        if wait > 0:       # whole wave must have arrived (lockstep admit)
+            time.sleep(wait)
+            now = time.perf_counter() - t_start
+        done.extend(eng.admit(list(zip(wave, range(len(wave)))), now))
+        # finished slots keep burning their decode step until the whole
+        # wave drains — the cost the continuous engine removes
+        while any(r is not None for r in eng.req_of):
+            done.extend(eng.decode_step_all())
+    wall = time.perf_counter() - t_start
+    return _report("lockstep", eng, done, wall, warmup_s, t_start)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _range(s: str):
+    lo, hi = s.split(",")
+    return int(lo), int(hi)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mode", choices=("engine", "lockstep"),
+                    default="engine")
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-range", type=_range, default=(16, 48),
+                    help="uniform prompt-length range lo,hi")
+    ap.add_argument("--gen-range", type=_range, default=(8, 32),
+                    help="uniform generation-length range lo,hi")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals, requests/s (0 = all at t=0)")
+    ap.add_argument("--chunk", type=int, default=128,
+                    help="prefill chunk length (tokens per flash launch)")
+    ap.add_argument("--cache-len", type=int, default=0,
+                    help="KV cache length (0 = max prompt + max gen)")
+    ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-seed", type=int, default=0)
     ap.add_argument("--decode-cp", action="store_true",
                     help="context-parallel serving: shard the KV cache's "
                     "sequence dim over the local devices (decode_cp rules "
                     "-> pallas_cp dispatch)")
     args = ap.parse_args()
 
+    import jax
+
     from repro import compat
     from repro.configs import get_config
-    from repro.core import llm_a3c
     from repro.distributed import ctx, sharding
     from repro.kernels import dispatch
     from repro.launch import hlo_analysis
@@ -51,11 +544,19 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    key = jax.random.key(args.seed)
-    params = M.init_params(cfg, key)
-    b = args.batch
-    cache_len = args.prompt_len + args.gen
-    cache = M.init_cache(cfg, b, cache_len, dtype=jnp.float32)
+    if cfg.family == "vlm" or cfg.is_encdec:
+        raise SystemExit(
+            f"{cfg.name}: the serve engine drives token-in/token-out LMs; "
+            "VLM embeds / encoder-decoder memories have no request-queue "
+            "source here (the decode dry-run still lowers those shapes)")
+    params = M.init_params(cfg, jax.random.key(args.seed))
+    cache_len = args.cache_len or (
+        args.prompt_range[1] + args.gen_range[1])
+    trace = gen_trace(args.requests, vocab=cfg.vocab_size,
+                      prompt_range=args.prompt_range,
+                      gen_range=args.gen_range,
+                      arrival_rate=args.arrival_rate,
+                      seed=args.trace_seed)
 
     decode_layout = "replicated"
     combine_bytes = 0
@@ -63,63 +564,34 @@ def main():
         if args.decode_cp:
             n_dev = len(jax.devices())
             mesh = jax.make_mesh((1, n_dev), ("data", "model"))
-            rules = sharding.decode_rules(cfg, mesh, batch_size=b)
+            rules = sharding.decode_rules(cfg, mesh, batch_size=args.slots)
             stack.enter_context(compat.set_mesh(mesh))
             stack.enter_context(ctx.use_mesh(mesh))
             stack.enter_context(ctx.sharding_rules(rules))
             n_shards = rules["decode_cp"]["n_shards"]
             decode_layout = f"decode_cp[{n_shards}]"
             from repro.launch import traffic
-            combine_bytes = traffic.decode_cp_combine_bytes(cfg, b,
-                                                            n_shards)
+            combine_bytes = traffic.decode_cp_combine_bytes(
+                cfg, args.slots, n_shards)
         dispatch.clear_decision_log()
 
-        prompt = jax.random.randint(key, (b, args.prompt_len), 0,
-                                    cfg.vocab_size)
-        # backend selection is automatic: the kernel dispatch layer
-        # resolves Pallas vs jnp (or the context-parallel pallas_cp
-        # combine) from the lowering target (see repro.kernels.dispatch)
-        serve_step = jax.jit(llm_a3c.make_serve_step(cfg))
+        run = run_engine if args.mode == "engine" else run_lockstep
+        rec = run(cfg, params, trace, n_slots=args.slots,
+                  cache_len=cache_len, chunk=args.chunk,
+                  sample=not args.greedy, seed=args.seed)
 
-        # prefill by stepping the cache token-by-token (keeps one code
-        # path for every cache kind: KV, ring, SSM, xLSTM)
-        tok = prompt[:, :1]
-        t0 = time.time()
-        for i in range(args.prompt_len):
-            batch = {"tokens": prompt[:, i:i + 1]}
-            if cfg.family == "vlm":
-                batch = {"embeds": jnp.zeros((b, 1, cfg.d_model)),
-                         "positions": jnp.full((3, b, 1), i, jnp.int32)}
-            tok, value, cache = serve_step(params, cache, batch,
-                                           jnp.asarray(i), jnp.uint32(i))
-        prefill_s = time.time() - t0
-
-        out_tokens = []
-        t0 = time.time()
-        for i in range(args.prompt_len, cache_len):
-            batch = {"tokens": tok[:, None]}
-            if cfg.family == "vlm":
-                batch = {"embeds": jnp.zeros((b, 1, cfg.d_model)),
-                         "positions": jnp.full((3, b, 1), i, jnp.int32)}
-            tok, value, cache = serve_step(params, cache, batch,
-                                           jnp.asarray(i), jnp.uint32(i))
-            out_tokens.append(tok)
-        jax.block_until_ready(tok)
-        decode_s = time.time() - t0
-    toks = args.gen * b
-    print(json.dumps({
-        "arch": cfg.name, "batch": b, "prompt_len": args.prompt_len,
-        "gen": args.gen,
+    rec.update({
+        "arch": cfg.name,
+        "prompt_range": list(args.prompt_range),
+        "gen_range": list(args.gen_range),
+        "arrival_rate": args.arrival_rate,
         "decode_layout": decode_layout,
         "cp_combine_bytes_per_token": combine_bytes,
-        "prefill_s": round(prefill_s, 3),
-        "decode_s": round(decode_s, 3),
-        "decode_tok_per_s": round(toks / decode_s, 1),
         "kernel_dispatch": [
             r for r in hlo_analysis.kernel_dispatch_summary()
-            if r["op"] == "decode_attention"],
-        "sample_tokens": [int(t) for t in out_tokens[0][:4]],
-    }))
+            if r["op"] in ("decode_attention", "flash_attention")],
+    })
+    print(json.dumps(rec))
 
 
 if __name__ == "__main__":

@@ -98,8 +98,11 @@ def input_specs(cfg: ModelConfig, shape_id: str) -> Tuple[str, Dict[str, Any]]:
              {"tokens": S((b, 1), jnp.int32)})
     cache = jax.eval_shape(
         lambda: M.init_cache(cfg, b, s, dtype=jnp.bfloat16))
+    # per-slot decode positions + a threaded PRNG key (the engine folds the
+    # step index in; serve_step folds the slot index per row)
     return kind, {"batch": batch, "cache": cache,
-                  "pos": S((), jnp.int32), "seed": S((), jnp.uint32)}
+                  "pos": S((b,), jnp.int32),
+                  "key": jax.eval_shape(lambda: jax.random.key(0))}
 
 
 def params_specs(cfg: ModelConfig):

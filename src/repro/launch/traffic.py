@@ -20,6 +20,11 @@ prefill:
   acts      2 * L * B * S * d * 2 (block in/out, bf16)
   kv        written once: cache_bytes
   logits    4 * B * S * V (bf16 out + reads)
+prefill (chunked, serve engine):
+  per chunk of C tokens at offset p0: params 2 * P, acts 4 * L * B * C * d,
+  chunk KV rows written once, the [0, p0) KV prefix re-read by every later
+  chunk (the quadratic term that bounds how small C should go — see
+  ``prefill_chunk_bytes`` and DESIGN.md §serve-engine), logits 4 * B * C * V
 decode (per token):
   params    1 read bf16: 2 * P   (grouped-einsum MoE reads ALL experts —
             an implementation property the roofline deliberately exposes)
@@ -62,6 +67,32 @@ def decode_cp_combine_bytes(cfg: ModelConfig, batch: int,
                  if k in ("attn", "attn_local"))
     per_layer = batch * cfg.n_heads * (cfg.hd + 2) * 4
     return n_attn * per_layer * n_seq_shards
+
+
+def prefill_chunk_bytes(cfg: ModelConfig, batch: int, prompt_len: int,
+                        chunk_len: int) -> int:
+    """HBM bytes for chunked flash prefill of a (batch, prompt_len) prompt
+    processed in ceil(prompt_len / chunk_len) chunks.
+
+    Each chunk re-reads the whole parameter set and the KV prefix written
+    by earlier chunks, so total traffic falls with larger chunks (fewer
+    param sweeps) until the quadratic prefix-re-read term takes over:
+    params ~ P * n_chunks, prefix re-reads ~ row_bytes * prompt^2 / (2C).
+    The token-by-token loop this replaces is the chunk_len == 1 case —
+    prompt_len full param reads and an O(prompt * cache_len) cache-stream
+    term, which is what makes it the dominant serving-latency cost."""
+    p = cfg.param_count()
+    l, d, v = cfg.n_layers, cfg.d_model, cfg.vocab_size
+    row = cache_bytes(cfg, batch, prompt_len) // max(prompt_len, 1)
+    total = 0
+    for p0 in range(0, prompt_len, chunk_len):
+        c = min(chunk_len, prompt_len - p0)
+        total += (2 * p                      # one bf16 param read per chunk
+                  + 4 * l * batch * c * d    # block in/out activations
+                  + row * c                  # chunk KV rows written
+                  + row * p0                 # prefix KV re-read (later chunks)
+                  + 4 * batch * c * v)       # logits
+    return total
 
 
 def hbm_bytes(cfg: ModelConfig, shape_id: str, kind: str,

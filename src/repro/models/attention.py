@@ -133,50 +133,60 @@ def _decode_cp_rule(cache_len: int) -> Optional[dict]:
 
 
 def _update_kv_cache_cp(cache: dict, k, v, slot, cp) -> tuple:
-    """Write the new token's K/V on the owning sequence shard only.
+    """Write each row's new K/V on the owning sequence shard only.
 
     The cache's sequence dim is sharded over ``cp['seq_axes']``; a plain
     dynamic_update_slice would make GSPMD re-gather the multi-GB cache, so
-    the write is a predicated dynamic_update_slice inside shard_map — each
-    shard updates its slice iff the slot falls in its range.  (The attention
+    the write is a predicated update inside shard_map — each shard updates
+    its slice iff the row's slot falls in its range.  ``slot`` is per batch
+    row (B,) (continuous batching) or a lockstep scalar.  (The attention
     over the updated cache then routes through ``dispatch.decode_attention``,
     which resolves the matching ``pallas_cp`` combine.)
     """
     from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
 
     from repro.distributed.sharding import decode_cp_spec
 
     # same layout spec the dispatch combine uses — the write and the
     # attention must agree on the cache's partitioning
-    spec = decode_cp_spec(cp, batch=k.shape[0])
+    b = k.shape[0]
+    spec = decode_cp_spec(cp, batch=b)
     mesh, seq_axes = spec.mesh, spec.seq_axes
     cache_len = cache["k"].shape[1]
     l_loc = cache_len // cp["n_shards"]
+    slot = jnp.broadcast_to(jnp.asarray(slot), (b,))
 
-    def write(k_, v_, ck, cv):
+    def write(slot_, k_, v_, ck, cv):
         # shard coordinate along the (possibly multi-axis) seq sharding
         idx = jnp.zeros((), jnp.int32)
         for a in seq_axes:
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        local_slot = slot - idx * l_loc
+        local_slot = slot_ - idx * l_loc               # (B_loc,)
         in_range = (local_slot >= 0) & (local_slot < l_loc)
         ls = jnp.clip(local_slot, 0, l_loc - 1)
-        ck2 = jax.lax.dynamic_update_slice(
-            ck, k_.astype(ck.dtype), (0, ls, 0, 0))
-        cv2 = jax.lax.dynamic_update_slice(
-            cv, v_.astype(cv.dtype), (0, ls, 0, 0))
-        return jnp.where(in_range, ck2, ck), jnp.where(in_range, cv2, cv)
+        rows = jnp.arange(ck.shape[0])
+        sel = in_range[:, None, None]                  # vs (B_loc, Hkv, D)
+        ck2 = ck.at[rows, ls].set(
+            jnp.where(sel, k_[:, 0].astype(ck.dtype), ck[rows, ls]))
+        cv2 = cv.at[rows, ls].set(
+            jnp.where(sel, v_[:, 0].astype(cv.dtype), cv[rows, ls]))
+        return ck2, cv2
 
     return shard_map(write, mesh=mesh,
-                     in_specs=(spec.new_kv, spec.new_kv, spec.kv, spec.kv),
+                     in_specs=(P(spec.batch), spec.new_kv, spec.new_kv,
+                               spec.kv, spec.kv),
                      out_specs=(spec.kv, spec.kv),
-                     check_rep=False)(k, v, cache["k"], cache["v"])
+                     check_rep=False)(slot, k, v, cache["k"], cache["v"])
 
 
 def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                   cfg, *, window: Optional[int] = None, use_rope: bool = True,
                   backend: str = "auto"):
-    """One-token decode.  x (B, 1, d_model); pos () absolute position.
+    """One-token decode.  x (B, 1, d_model); pos — absolute position, either
+    a lockstep scalar () or per-slot (B,) (continuous batching: every batch
+    row decodes at its own depth; writes, RoPE and the validity mask are all
+    per row).
 
     Returns (out (B, 1, d_model), new_cache).  When ``window`` is set the
     cache is a ring buffer of length == window (sub-linear memory for
@@ -186,16 +196,18 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     own the cache's sequence dim, the cache write is a predicated
     shard_map'd update on the owning shard and ``dispatch.decode_attention``
     resolves to the ``pallas_cp`` flash-decoding combine; otherwise the
-    write is a plain dynamic_update_slice and dispatch shard_maps over
+    write is a plain (per-row) update and dispatch shard_maps over
     (batch, heads) / runs the bare kernel.
     """
     n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b = x.shape[0]
+    per_slot = jnp.ndim(pos) == 1
     q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
     k = _split_heads(cm.linear(params["wk"], x), n_kv, hd)
     v = _split_heads(cm.linear(params["wv"], x), n_kv, hd)
     if use_rope:
-        cos, sin = cm.rope_cos_sin(pos[None, None], hd, cfg.rope_theta)
+        qpos = pos[:, None] if per_slot else pos[None, None]
+        cos, sin = cm.rope_cos_sin(qpos, hd, cfg.rope_theta)
         rd = getattr(cfg, "rotary_dim", None)
         q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
         k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
@@ -206,12 +218,16 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     cp = _decode_cp_rule(cache_len)
     if cp is not None:
         ck, cv = _update_kv_cache_cp(cache, k, v, slot, cp)
+    elif per_slot:
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
     else:
         ck = jax.lax.dynamic_update_slice(
             cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
         cv = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-    new_cache = {"k": ck, "v": cv, "index": pos + 1}
+    new_cache = {"k": ck, "v": cv, "index": jnp.max(pos) + 1}
 
     kpos = _cache_positions(cache_len, pos, window)
     o = dispatch.decode_attention(q[:, 0], ck, cv, kpos, pos,
@@ -221,8 +237,11 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
 
 def _cache_positions(cache_len: int, pos: jnp.ndarray,
                      window: Optional[int]) -> jnp.ndarray:
-    """Absolute position of each cache slot; -1 for not-yet-written slots."""
+    """Absolute position of each cache slot; -1 for not-yet-written slots.
+    pos () -> (L,); per-slot pos (B,) -> (B, L)."""
     idx = jnp.arange(cache_len)
+    if jnp.ndim(pos) == 1:
+        pos = pos[:, None]                             # (B, 1) vs (L,)
     if window is None:
         return jnp.where(idx <= pos, idx, -1)
     # ring buffer: slot s holds position p iff p % cache_len == s and
@@ -230,6 +249,97 @@ def _cache_positions(cache_len: int, pos: jnp.ndarray,
     cand = pos - (pos % cache_len) + idx
     cand = jnp.where(cand > pos, cand - cache_len, cand)
     return jnp.where(cand >= 0, cand, -1)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash prefill
+# ---------------------------------------------------------------------------
+
+def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
+                   cfg, *, window: Optional[int] = None,
+                   use_rope: bool = True, backend: str = "auto"):
+    """Prefill one prompt chunk.  x (B, C, d_model) covers absolute positions
+    [pos0, pos0 + C) — the same positions for every row (prompts are
+    right-padded to a common length; per-row true lengths are handled by the
+    caller's logit gather and the per-slot decode that follows).
+
+    Writes the chunk's K/V into cache rows [pos0, pos0 + C) (ring wrap for
+    window caches) and returns (out (B, C, d_model), new_cache).  ``pos0``
+    is a static python int, so the first chunk (pos0 == 0) is pure causal
+    self-attention and runs the flash kernel through the dispatch layer —
+    one kernel launch replacing C single-token steps; later chunks attend
+    to the statically-sized cache prefix through the masked reference path
+    (Sq != Sk is outside the flash kernel's grid).
+    """
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, c, _ = x.shape
+    q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
+    k = _split_heads(cm.linear(params["wk"], x), n_kv, hd)
+    v = _split_heads(cm.linear(params["wv"], x), n_kv, hd)
+    if use_rope:
+        positions = pos0 + jnp.arange(c)[None]         # (1, C)
+        cos, sin = cm.rope_cos_sin(positions, hd, cfg.rope_theta)
+        rd = getattr(cfg, "rotary_dim", None)
+        q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
+        k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
+
+    cache_len = cache["k"].shape[1]
+    if pos0 + c <= cache_len:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
+    else:
+        if window is None:
+            # a full cache has no wrap semantics: writing past the end
+            # would clobber real prompt rows that kpos still reports as
+            # valid — loud trace-time failure, the caller must size its
+            # chunk grid to the cache (serve._chunk_grid)
+            raise ValueError(
+                f"prefill chunk [{pos0}, {pos0 + c}) overflows the "
+                f"{cache_len}-slot full cache; chunk the prompt to fit")
+        # ring cache shorter than the history: only the chunk's last
+        # min(C, cache_len) tokens survive — write them (ascending, so a
+        # single scatter with unique rows), older rows stay as-is and are
+        # masked out by kpos
+        tail = min(c, cache_len)
+        rows = (pos0 + jnp.arange(c)[-tail:]) % cache_len
+        ck = cache["k"].at[:, rows].set(
+            k[:, -tail:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, rows].set(
+            v[:, -tail:].astype(cache["v"].dtype))
+    # strong int32: a weak-typed scalar here would retrace the decode step
+    # that consumes this cache
+    new_cache = {"k": ck, "v": cv, "index": jnp.asarray(pos0 + c, jnp.int32)}
+
+    if pos0 == 0:
+        o = dispatch.flash_attention(q, k, v, causal=True, window=window,
+                                     backend=backend)
+    else:
+        # chunk queries over [0, pos0 + C): the pre-chunk keys come from the
+        # cache (they include rows a ring write above may have evicted only
+        # for positions no chunk query can still see), the chunk's own keys
+        # from this projection
+        if window is None:
+            k_pre = cache["k"][:, :min(pos0, cache_len)].astype(q.dtype)
+            v_pre = cache["v"][:, :min(pos0, cache_len)].astype(q.dtype)
+            kpos_pre = jnp.arange(k_pre.shape[1])
+        else:
+            k_pre = cache["k"].astype(q.dtype)
+            v_pre = cache["v"].astype(q.dtype)
+            kpos_pre = _cache_positions(cache_len,
+                                        jnp.asarray(pos0 - 1), window)
+        k_all = jnp.concatenate([k_pre, k], axis=1)
+        v_all = jnp.concatenate([v_pre, v], axis=1)
+        kpos_all = jnp.concatenate([kpos_pre, pos0 + jnp.arange(c)])
+        qpos = pos0 + jnp.arange(c)
+        mask = (kpos_all[None, :] >= 0) & (kpos_all[None, :] <= qpos[:, None])
+        if window is not None:
+            mask &= kpos_all[None, :] > qpos[:, None] - window
+        n_rep = n_h // n_kv
+        o = sdpa(q, _repeat_kv(k_all, n_rep), _repeat_kv(v_all, n_rep),
+                 mask[None, None])
+    return cm.linear(params["wo"], o.reshape(b, c, n_h * hd)), new_cache
 
 
 # ---------------------------------------------------------------------------

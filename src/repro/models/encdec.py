@@ -141,13 +141,16 @@ def prefill_cross(cfg: ModelConfig, params, cache, frames):
 
 def decode_step(cfg: ModelConfig, params, cache, batch, pos):
     x = cm.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
-    # positional embedding at absolute pos (sinusoid computed directly)
+    # positional embedding at absolute pos (sinusoid computed directly);
+    # pos is a lockstep scalar () or per-slot (B,)
+    posb = pos if jnp.ndim(pos) == 1 else pos[None]
     dim = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)[None]
-    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / cfg.d_model)
-    pe_t = jnp.zeros((1, cfg.d_model))
+    ang = posb.astype(jnp.float32)[:, None] / \
+        jnp.power(10000.0, dim / cfg.d_model)
+    pe_t = jnp.zeros((ang.shape[0], cfg.d_model))
     pe_t = pe_t.at[:, 0::2].set(jnp.sin(ang))
     pe_t = pe_t.at[:, 1::2].set(jnp.cos(ang))
-    x = x + pe_t.astype(x.dtype)[None]
+    x = x + pe_t.astype(x.dtype)[:, None]
 
     new_self = []
     for i, lyr in enumerate(params["dec_layers"]):

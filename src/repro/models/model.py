@@ -174,6 +174,29 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache,
     raise ValueError(kind)
 
 
+def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, cache,
+                         pos0: int):
+    """One residual block over a whole prompt chunk, writing the KV cache.
+    Only attention blocks support this (checked by
+    ``supports_chunked_prefill``); recurrent caches need their own scan."""
+    window = cfg.sliding_window if kind == "attn_local" else None
+    if kind not in ("attn", "attn_local"):
+        raise NotImplementedError(
+            f"chunked prefill is KV-cache only, got block kind {kind}")
+    h, cache = attn.attend_prefill(
+        p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, pos0, cfg,
+        window=window)
+    x = x + h
+    y = cm.apply_norm(cfg.norm, p["ln2"], x)
+    if cfg.n_experts:
+        y, _ = moe_mod.moe_apply(p["moe"], y, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act)
+    else:
+        y = mlp_mod.gated_mlp(p["mlp"], y, act=cfg.act)
+    return x + y, cache
+
+
 # ---------------------------------------------------------------------------
 # stacking helpers
 # ---------------------------------------------------------------------------
@@ -358,7 +381,9 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 batch: Dict[str, jnp.ndarray], pos: jnp.ndarray):
     """One-token decode.  batch: {"tokens": (B,1)} or {"embeds": (B,1,d)};
-    pos () int32 — current absolute position.  Returns (out, new_cache)."""
+    pos int32 — current absolute position, lockstep scalar () or per-slot
+    (B,) (continuous batching; KV-cache blocks handle ragged depths, the
+    recurrent blocks are position-free).  Returns (out, new_cache)."""
     params = cast_params(cfg, params)
     if cfg.is_encdec:
         from repro.models import encdec
@@ -399,6 +424,77 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         cache["layers"] = new_caches
         if cfg.shared_attn_every:
             cache["shared"] = new_shared
+
+    x = cm.apply_norm(cfg.norm, params["final_norm"], x)
+    out = {}
+    if cfg.tie_embeddings:
+        out["logits"] = (x @ params["embed"]["table"].T.astype(x.dtype))
+    else:
+        out["logits"] = cm.linear(params["lm_head"], x, dtype=x.dtype)
+    if cfg.value_head:
+        out["value"] = cm.linear(params["value_head"], x)[..., 0] \
+            .astype(jnp.float32)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# chunked flash prefill
+# ---------------------------------------------------------------------------
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill block-writes KV caches; recurrent states (SSM,
+    xLSTM) and the enc-dec family would need state-returning train scans —
+    those architectures fall back to the token-by-token decode loop."""
+    return (not cfg.is_encdec
+            and not cfg.shared_attn_every
+            and all(k in ("attn", "attn_local") for k in cfg.layer_kinds()))
+
+
+def prefill_step(cfg: ModelConfig, params: Params, cache: Params,
+                 batch: Dict[str, jnp.ndarray], pos0: int = 0):
+    """Prefill one whole prompt chunk.  batch: {"tokens": (B, C)} (or
+    embeds) covering absolute positions [pos0, pos0 + C); pos0 is a static
+    python int (one compile per chunk offset — offsets are multiples of the
+    chunk size, so a handful of traces serve any prompt length).
+
+    Every attention layer runs the chunk through the flash forward path and
+    writes its KV cache rows in one block — replacing C single-token
+    ``decode_step`` launches, the dominant serving-latency term for long
+    prompts.  Returns (out {"logits" (B, C, V), ...}, new_cache); callers
+    gather each row's true last-prompt-token logits (prompts are
+    right-padded) and continue with per-slot decode.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: chunked prefill needs attention-only caches")
+    params = cast_params(cfg, params)
+    x = _embed_inputs(cfg, params, batch)
+    kinds = cfg.layer_kinds()
+
+    if _use_scan(cfg):
+        cyc_kinds = cfg.block_cycle
+
+        def body(x, inp):
+            cyc_params, cyc_cache = inp
+            new_caches = []
+            for j, kind in enumerate(cyc_kinds):
+                x, c = _apply_block_prefill(cfg, kind, cyc_params[j], x,
+                                            cyc_cache[j], pos0)
+                new_caches.append(c)
+            return x, tuple(new_caches)
+
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["layers"], cache["layers"]))
+        cache = dict(cache)
+        cache["layers"] = new_cache
+    else:
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            x, c = _apply_block_prefill(cfg, kind, params["layers"][i], x,
+                                        cache["layers"][i], pos0)
+            new_caches.append(c)
+        cache = dict(cache)
+        cache["layers"] = new_caches
 
     x = cm.apply_norm(cfg.norm, params["final_norm"], x)
     out = {}

@@ -83,6 +83,6 @@ def test_decode_step_shapes(arch):
              if cfg.family == "vlm" else
              {"tokens": jnp.zeros((b, 1), jnp.int32)})
     tok, value, cache = serve(params, cache, batch, jnp.asarray(0),
-                              jnp.uint32(0))
+                              jax.random.key(0))
     assert tok.shape == (b,)
     assert bool(jnp.all((tok >= 0) & (tok < cfg.vocab_size)))

@@ -38,7 +38,7 @@ def compile_case(arch, shape):
                 in_shardings=(p_shard, c_shard, b_shard, None, None),
                 out_shardings=(None, None, c_shard)).lower(
                 p_specs, in_specs["cache"], in_specs["batch"],
-                in_specs["pos"], in_specs["seed"])
+                in_specs["pos"], in_specs["key"])
         else:
             def prefill(params, batch):
                 out = M.forward(cfg, params, batch)
