@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.distributed import ctx
-from repro.kernels import dispatch, ops, ref
+from repro.kernels import dispatch, ref
 from repro.kernels.flash_attention import masked_tile_fraction
 
 
@@ -36,7 +36,7 @@ def run() -> list:
     # fwd+bwd through the Pallas kernel's custom VJP (interpret on CPU) vs
     # AD through the blockwise-jnp path — the training hot-path comparison
     grad_pl = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
-        ops.flash_attention(q, k, v, causal=True, backend="pallas")),
+        dispatch.flash_attention(q, k, v, causal=True, backend="pallas")),
         argnums=(0, 1, 2)))
     us_gpl = common.timed(grad_pl, q, k, v, iters=3)
     rows.append({"name": "attention_pallas_fwd_bwd", "us_per_call": us_gpl,

@@ -15,6 +15,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale budgets (hours on 1 CPU)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI perf-trajectory leg: just the prefill bench, "
+                    "writing the root-level BENCH_prefill.json artifact")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     args = ap.parse_args()
@@ -23,13 +26,15 @@ def main() -> None:
     from benchmarks import (bench_fig1_learning, bench_fig4_continuous,
                             bench_fig8_optimizers, bench_fig9_entropy,
                             bench_fig10_lr_robustness, bench_kernels,
-                            bench_llm_train, bench_replay_ablation,
-                            bench_roofline, bench_serve, bench_stability,
+                            bench_llm_train, bench_prefill,
+                            bench_replay_ablation, bench_roofline,
+                            bench_serve, bench_stability,
                             bench_table1_scores, bench_table2_scaling)
 
     benches = {
         "kernels": lambda: bench_kernels.run(),
         "serve": lambda: bench_serve.run(),
+        "prefill": lambda: bench_prefill.run(),
         "llm_train": lambda: bench_llm_train.run(),
         "fig1": lambda: bench_fig1_learning.run(frames=120_000 * mult),
         "table1": lambda: bench_table1_scores.run(frames=100_000 * mult),
@@ -45,7 +50,10 @@ def main() -> None:
         "stability": lambda: bench_stability.run(frames=40_000 * mult),
         "roofline": lambda: bench_roofline.run(),
     }
-    only = args.only.split(",") if args.only else list(benches)
+    if args.quick:
+        only = ["prefill"]
+    else:
+        only = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")
     for name in only:
         t0 = time.time()

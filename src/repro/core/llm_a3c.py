@@ -129,26 +129,23 @@ def make_prefill_step(cfg: ModelConfig):
     Returns None when the architecture's caches can't be block-written
     (SSM / xLSTM / enc-dec); callers fall back to the decode loop.
 
-    The returned fn is ``prefill_step(params, cache, batch, pos0) ->
-    (logits (B, C, V), cache)`` with ``pos0`` static (one trace per chunk
-    offset).
+    The returned fn is ``prefill_step(params, cache, batch, pos0,
+    true_len) -> (logits (B, C, V), cache)`` with ``pos0`` static (one
+    trace per chunk offset).
 
-    Ring (sliding-window) architectures are also gated to the loop here:
-    the engine right-pads admission prompts to a shared chunk grid, and
-    padding tokens written past a row's true length alias ring rows that
-    the decode-side kpos then attributes to real earlier positions — the
-    full-cache "rows beyond pos are masked until rewritten" invariant does
-    not hold in a ring.  (Direct ``M.prefill_step`` callers that control
-    their own padding — exact, unpadded prompt chunks — can still chunk
-    ring caches; the parity test covers that.)"""
+    Ring (sliding-window) architectures chunk-prefill too: ``true_len``
+    (B,) carries each row's real prompt length and the ring cache write
+    masks rows past it, so right-padded admission chunks can no longer
+    alias ring rows that the decode-side kpos attributes to real earlier
+    positions (the gate PR 4 had to place here).  Exact-chunk callers may
+    leave ``true_len`` None."""
     if not M.supports_chunked_prefill(cfg):
-        return None
-    if cfg.sliding_window and "attn_local" in cfg.layer_kinds():
         return None
 
     @functools.partial(jax.jit, static_argnames=("pos0",))
-    def prefill_step(params, cache, batch, pos0=0):
-        out, cache = M.prefill_step(cfg, params, cache, batch, pos0)
+    def prefill_step(params, cache, batch, pos0=0, true_len=None):
+        out, cache = M.prefill_step(cfg, params, cache, batch, pos0,
+                                    true_len)
         return out["logits"].astype(jnp.float32), cache
 
     return prefill_step

@@ -1,1 +1,1 @@
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import dispatch, ref  # noqa: F401

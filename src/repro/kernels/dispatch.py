@@ -22,6 +22,12 @@ Decision table (see DESIGN.md §kernel-dispatch for the full rationale):
   any               any       seq/rows misaligned      jnp (reason logged)
   rules, no mesh    any       any                      jnp (reason logged)
 
+``flash_attention_append`` (op ``flash_append``) follows the same table
+with its own alignment row: the chunk C and key stream Sk must both be
+128-multiples (linear layouts have Sk == pos0 + C, so chunk-multiple
+pos0 and a 128-multiple chunk size keep every chunk of a prompt on the
+fused path).
+
 The shard_map'd paths partition (batch -> data axes, heads -> model) using
 the specs from ``repro.distributed.sharding.attention_shard_spec``; the
 ``custom_vjp`` is defined *around* the shard_mapped calls so gradients flow
@@ -63,7 +69,9 @@ from repro.distributed.sharding import (AttnShardSpec, DecodeCPSpec,
 from repro.kernels import ref
 from repro.kernels.decode_attention import (_per_slot, decode_attention_fwd,
                                             decode_attention_partials)
-from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention import (
+    flash_attention_append as flash_attention_append_fwd,
+    flash_attention_fwd)
 from repro.kernels.flash_attention_bwd import flash_attention_bwd
 from repro.kernels.rmsnorm import rmsnorm_bwd, rmsnorm_fwd
 from repro.kernels.shared_rmsprop import rmsprop_update_2d
@@ -303,6 +311,144 @@ def flash_attention(q, k, v, *, causal: bool = True,
                                            window=window)  # naive oracle
         return _flash_dense(q, k, v, causal, window)
     return _flash_call(q, k, v, causal, window, shard, interpret)
+
+
+# ---------------------------------------------------------------------------
+# append-mode flash attention (chunked prefill: Sq != Sk, q-offset grid)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("pos0", "window",
+                                             "kpos_linear", "shard",
+                                             "interpret"))
+def _append_call(q, k, v, kpos, pos0, window, kpos_linear, shard,
+                 interpret):
+    def call(q, k, v, kpos):
+        bq = _flash_blocks(q.shape[1])
+        bk = _flash_blocks(k.shape[1])
+        return flash_attention_append_fwd(q, k, v, kpos, pos0=pos0,
+                                          window=window, block_q=bq,
+                                          block_k=bk,
+                                          kpos_linear=kpos_linear,
+                                          interpret=interpret)
+    if shard is None:
+        return call(q, k, v, kpos)
+    return shard_map(call, mesh=shard.mesh,
+                     in_specs=(shard.qo, shard.kv, shard.kv,
+                               shard.kpos_decode),
+                     out_specs=shard.qo, check_rep=False)(q, k, v, kpos)
+
+
+def _append_dense(q, k, v, kpos, pos0, window):
+    """jnp fallback — dense sdpa with the kpos mask (XLA CPU lowers the
+    4-D repeat_kv einsum better than the grouped 5-D oracle einsum)."""
+    from repro.models import attention as attn
+    c = q.shape[1]
+    n_rep = q.shape[2] // k.shape[2]
+    kk = attn._repeat_kv(k, n_rep)
+    vv = attn._repeat_kv(v, n_rep)
+    qpos = pos0 + jnp.arange(c)
+    mask = (kpos[:, None, :] >= 0) & \
+        (kpos[:, None, :] <= qpos[None, :, None])          # (B, C, Sk)
+    if window is not None:
+        mask &= kpos[:, None, :] > qpos[None, :, None] - window
+    return attn.sdpa(q, kk, vv, mask[:, None])
+
+
+def _resolve_append(b: int, c: int, sk: int, hq: int, hkv: int,
+                    pos0: int, backend: str
+                    ) -> Tuple[Decision, Optional[AttnShardSpec], bool]:
+    """Append arm alignment rules: the chunk (c) and the key stream (sk)
+    both need MXU-aligned 128-multiples; on the linear cache layout
+    sk == pos0 + c, so a 128-multiple chunk size and chunk-multiple pos0
+    make every chunk of a prompt eligible (serve rounds --chunk)."""
+    if hq % hkv != 0:
+        raise ValueError(f"GQA needs q heads to be a multiple of kv "
+                         f"heads, got {hq}/{hkv}")
+    mesh, platform = _mesh_for_dispatch()
+    interpret = platform != "tpu"
+    aligned = (128 <= c and c % 128 == 0 and 128 <= sk and sk % 128 == 0)
+    why_align = (f"chunk {c} / key stream {sk} (pos0={pos0}) not "
+                 "MXU-aligned (need 128-multiples)")
+    if backend == "jnp":
+        return _decide("flash_append", "jnp", "explicit backend"), \
+            None, interpret
+    if backend == "pallas":
+        if not aligned:
+            return _decide("flash_append", "jnp",
+                           f"explicit pallas but {why_align}; naive "
+                           "reference"), None, interpret
+        return _decide("flash_append", "pallas", "explicit backend"), \
+            None, interpret
+    if backend == "pallas_shard_map":
+        if not aligned:
+            raise ValueError(f"cannot shard_map append attention: "
+                             f"{why_align}")
+        raw_mesh = ctx.current_mesh()   # honor even a 1-device mesh
+        if raw_mesh is None:
+            raise ValueError("backend='pallas_shard_map' needs a mesh "
+                             "installed via ctx.use_mesh")
+        spec, why = attention_shard_spec(raw_mesh, batch=b, n_q_heads=hq,
+                                         n_kv_heads=hkv)
+        if spec is None:
+            raise ValueError(f"cannot shard_map append attention: {why}")
+        return _decide("flash_append", "pallas_shard_map",
+                       "explicit backend", raw_mesh), spec, interpret
+    # auto
+    if not aligned:
+        return _decide("flash_append", "jnp", why_align), None, interpret
+    if mesh is not None:
+        spec, why = attention_shard_spec(mesh, batch=b, n_q_heads=hq,
+                                         n_kv_heads=hkv)
+        if spec is None:
+            return _decide("flash_append", "jnp", why, mesh), \
+                None, interpret
+        return _decide("flash_append", "pallas_shard_map",
+                       "mesh axes divide batch/heads", mesh), \
+            spec, interpret
+    if ctx.current_rules():
+        return _decide("flash_append", "jnp",
+                       "sharding rules active without a dispatch mesh "
+                       "(install it via ctx.use_mesh)"), None, interpret
+    if platform == "tpu":
+        return _decide("flash_append", "pallas",
+                       "single-device tpu, aligned"), None, False
+    return _decide("flash_append", "jnp",
+                   f"platform {platform}: Pallas kernels run interpret-"
+                   "only off-TPU"), None, interpret
+
+
+def flash_attention_append(q, k, v, kpos, *, pos0: int,
+                           window: Optional[int] = None,
+                           kpos_linear: bool = False,
+                           backend: str = "auto") -> jnp.ndarray:
+    """Append-mode flash attention for chunked prefill.
+
+    q (B,C,Hq,D) — a prompt chunk at absolute positions ``pos0 + i``;
+    k,v (B,Sk,Hkv,D) — the key stream (cache prefix + chunk); kpos
+    (B,Sk) [or (Sk,), broadcast] — absolute position per key row (-1 =
+    invalid, the decode kernel's validity convention) -> (B,C,Hq,D).
+
+    ``kpos_linear`` asserts key row index == absolute position wherever
+    valid (full linear caches) and enables the ``tile_live`` prefix-tile
+    skip; ring (rotated) layouts must leave it False.  Serving-only:
+    forward, no VJP.  Under a mesh the kernel shard_maps over
+    (batch, heads) with the same ``AttnShardSpec`` the train/decode
+    kernels use (kpos batch-sharded with q)."""
+    assert backend in _BACKENDS, backend
+    b, c, hq, _ = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos, (b, sk))
+    decision, shard, interpret = _resolve_append(b, c, sk, hq, hkv, pos0,
+                                                 backend)
+    if decision.backend == "jnp":
+        if backend == "pallas":     # sub-kernel smoke shape: keep the
+            return ref.flash_attention_append_ref(q, k, v, kpos,
+                                                  pos0=pos0,
+                                                  window=window)  # oracle
+        return _append_dense(q, k, v, kpos, pos0, window)
+    return _append_call(q, k, v, kpos, pos0, window, kpos_linear, shard,
+                        interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,13 @@ shapes are MXU-aligned (multiples of 128 on the contracting/lane dims).
 Grid: (batch, q_heads, n_q_blocks, n_k_blocks), KV innermost.
 GQA: the k/v BlockSpec index maps q-head h to kv-head h // group, so
 repeated KV heads are never materialized in HBM or VMEM.
+
+``flash_attention_append`` decouples the q and kv grid dimensions for
+chunked prefill (Sq != Sk): C/bq query blocks at absolute positions
+``pos0 + i`` scan ceil(Sk/bk) key blocks covering the cache prefix plus
+the chunk, with causal/sliding-window masks on absolute positions from a
+runtime per-row ``kpos`` map (the decode kernel's validity convention)
+and the ``tile_live`` skip for provably-dead prefix tiles.
 """
 from __future__ import annotations
 
@@ -29,7 +36,8 @@ def tile_mask(iq, ik, block_q: int, block_k: int, causal: bool,
               window: Optional[int]):
     """(block_q, block_k) validity mask for score tile (iq, ik).  Shared by
     the forward and backward kernels — the backward reconstructs softmax
-    tiles from the forward's saved lse, so the masks must stay identical."""
+    tiles from the forward's saved lse, so the masks must stay identical.
+    (The append kernel builds its own mask from the runtime kpos map.)"""
     qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
                                                    (block_q, block_k), 0)
     kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
@@ -43,21 +51,24 @@ def tile_mask(iq, ik, block_q: int, block_k: int, causal: bool,
 
 
 def tile_live(iq, ik, block_q: int, block_k: int, causal: bool,
-              window: Optional[int]):
+              window: Optional[int], q_offset: int = 0):
     """Scalar predicate: does score tile (iq, ik) contain ANY valid entry?
 
     The complement of ``tile_mask(...).any()`` but computable from the two
     program ids alone (no iota materialization), so kernels can predicate
     the whole tile body with ``pl.when``.  Returns None when no mask is
     active (every tile live) so callers can skip the guard entirely.
+    ``q_offset`` places q rows at absolute positions like ``tile_mask``;
+    it is only meaningful when key row index == absolute key position
+    (a linear cache layout — ring layouts must not skip tiles).
     """
     live = None
     if causal:
         # live iff the smallest kpos can be <= the largest qpos
-        live = ik * block_k <= (iq + 1) * block_q - 1
+        live = ik * block_k <= q_offset + (iq + 1) * block_q - 1
     if window is not None:
         # live iff the largest kpos clears the smallest qpos' window floor
-        w_live = (ik + 1) * block_k - 1 > iq * block_q - window
+        w_live = (ik + 1) * block_k - 1 > q_offset + iq * block_q - window
         live = w_live if live is None else live & w_live
     return live
 
@@ -175,3 +186,126 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
     if save_residuals:
         return o, out[1]
     return o
+
+
+# ---------------------------------------------------------------------------
+# append mode (chunked prefill): Sq != Sk with a q-offset grid
+# ---------------------------------------------------------------------------
+
+def _append_kernel(q_ref, k_ref, v_ref, kpos_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, pos0: int, window: Optional[int],
+                   block_q: int, block_k: int, n_k: int, scale: float,
+                   kpos_linear: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile skip: on a linear key layout (key row index == absolute
+    # position where valid) whole prefix tiles beyond the causal bound /
+    # window floor are provably dead and the body never runs; rotated
+    # (ring) layouts visit every tile and rely on the kpos mask alone
+    live = tile_live(iq, ik, block_q, block_k, True, window,
+                     q_offset=pos0) if kpos_linear else None
+
+    def _body():
+        q = q_ref[0, 0]                      # (bq, D)
+        k = k_ref[0, :, 0, :]                # (bk, D)
+        v = v_ref[0, :, 0, :]                # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        # causal/window on ABSOLUTE positions: q row r sits at
+        # pos0 + iq*bq + r; the key positions come from the runtime kpos
+        # row map (-1 = unwritten slot), same validity the decode kernel
+        # applies per cache row
+        qpos = pos0 + iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kp = kpos_ref[0, :]                  # (bk,)
+        mask = (kp[None, :] >= 0) & (kp[None, :] <= qpos)
+        if window is not None:
+            mask &= kp[None, :] > qpos - window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p.astype(v.dtype), v,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if live is None:
+        _body()
+    else:
+        pl.when(live)(_body)
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l_safe = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_append(q, k, v, kpos, *, pos0: int,
+                           window: Optional[int] = None,
+                           block_q: int = 512, block_k: int = 512,
+                           kpos_linear: bool = False,
+                           interpret: Optional[bool] = None):
+    """Append-mode flash forward: a prompt chunk against a longer key
+    stream (the KV-cache prefix plus the chunk itself).
+
+    q (B, C, Hq, D) — chunk queries at absolute positions ``pos0 + i``;
+    k, v (B, Sk, Hkv, D) — the key stream; kpos (B, Sk) [or (Sk,)] the
+    absolute position held by each key row (-1 = invalid).  Returns
+    (B, C, Hq, D).  The q and kv grid dimensions are decoupled
+    (``n_q = C/bq``, ``n_k = Sk/bk``), so Sq != Sk is in-grid; causal and
+    sliding-window masks evaluate on absolute positions.  Serving-only:
+    no residuals, no backward."""
+    b, c, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(block_q, c)
+    bk = min(block_k, sk)
+    assert c % bq == 0 and sk % bk == 0, (c, sk, bq, bk)
+    n_q, n_k = c // bq, sk // bk
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos, (b, sk))
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    kern = functools.partial(
+        _append_kernel, pos0=pos0, window=window, block_q=bq, block_k=bk,
+        n_k=n_k, scale=d ** -0.5, kpos_linear=kpos_linear)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+            pl.BlockSpec((1, bk), lambda b_, h, iq, ik: (b_, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, c, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(jnp.moveaxis(q, 1, 2), k, v, kpos.astype(jnp.int32))
+    return out.swapaxes(1, 2)

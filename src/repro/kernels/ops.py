@@ -1,18 +1,28 @@
-"""Back-compat re-exports of the kernel entry points.
+"""DEPRECATED back-compat shim for the kernel entry points.
 
 The real logic lives in ``repro.kernels.dispatch`` — one place that owns
 backend resolution (mesh platform, shape alignment, GQA divisibility),
-shard_map partitioning, and the custom VJPs.  Import from there in new
-code; this module only keeps the historical ``kernels.ops`` names alive.
+shard_map partitioning, and the custom VJPs.  Importing this module emits
+a ``DeprecationWarning``; update imports to ``repro.kernels.dispatch``
+(same names, same signatures).  This shim will be removed once nothing in
+the tree references it.
 """
 from __future__ import annotations
 
-from repro.kernels.dispatch import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.kernels.ops is deprecated; import the kernel entry points from "
+    "repro.kernels.dispatch instead (same names, same signatures)",
+    DeprecationWarning, stacklevel=2)
+
+from repro.kernels.dispatch import (  # noqa: F401,E402
     decode_attention,
     flash_attention,
+    flash_attention_append,
     rmsnorm,
     rmsprop_update,
 )
 
-__all__ = ["decode_attention", "flash_attention", "rmsnorm",
-           "rmsprop_update"]
+__all__ = ["decode_attention", "flash_attention", "flash_attention_append",
+           "rmsnorm", "rmsprop_update"]

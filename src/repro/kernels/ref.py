@@ -30,6 +30,31 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return o.reshape(b, s, hq, d).astype(q.dtype)
 
 
+def flash_attention_append_ref(q, k, v, kpos, *, pos0: int,
+                               window: Optional[int] = None) -> jnp.ndarray:
+    """Append-mode oracle: q (B,C,Hq,D) at absolute positions pos0 + i;
+    k,v (B,Sk,Hkv,D) the key stream (cache prefix + chunk); kpos (B,Sk)
+    [or (Sk,)] absolute position per key row (-1 = invalid).
+    -> (B,C,Hq,D).  Causal on absolute positions; grouped-head einsum so
+    GQA never materializes repeated KV."""
+    b, c, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    kpos = jnp.broadcast_to(kpos, (b, sk))
+    qpos = pos0 + jnp.arange(c)
+    qg = q.reshape(b, c, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bshgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= qpos[None, :, None])
+    if window is not None:
+        mask &= kpos[:, None, :] > qpos[None, :, None] - window
+    logits = jnp.where(mask[:, :, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(b, c, hq, d).astype(q.dtype)
+
+
 def decode_attention_ref(q, k_cache, v_cache, kpos, pos) -> jnp.ndarray:
     """q (B,Hq,D); caches (B,L,Hkv,D); kpos (B,L) absolute position per slot
     (-1 = empty); pos (B,) current position per sequence.  -> (B,Hq,D).

@@ -35,6 +35,7 @@ import argparse
 import contextlib
 import dataclasses
 import json
+import logging
 import time
 from typing import List, Optional
 
@@ -155,10 +156,13 @@ def _chunked_prefill(prefill_step, params, cache, toks, plens, grid):
 
     last = None
     plens = np.asarray(plens)
+    # per-row true lengths: ring (sliding-window) caches mask writes past
+    # them, which is what makes right-padded admission chunks safe there
+    true_len = jnp.asarray(plens, jnp.int32)
     for p0, c in grid:
         logits, cache = prefill_step(
             params, cache, {"tokens": jnp.asarray(toks[:, p0:p0 + c])},
-            pos0=p0)
+            pos0=p0, true_len=true_len)
         if last is None:
             last = jnp.zeros((toks.shape[0], logits.shape[-1]),
                              jnp.float32)
@@ -520,7 +524,9 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals, requests/s (0 = all at t=0)")
     ap.add_argument("--chunk", type=int, default=128,
-                    help="prefill chunk length (tokens per flash launch)")
+                    help="prefill chunk length (tokens per flash launch); "
+                    "rounded to the nearest 128 multiple — the append "
+                    "kernel's MXU alignment unit")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="KV cache length (0 = max prompt + max gen)")
     ap.add_argument("--greedy", action="store_true")
@@ -531,6 +537,18 @@ def main():
                     "sequence dim over the local devices (decode_cp rules "
                     "-> pallas_cp dispatch)")
     args = ap.parse_args()
+
+    if args.chunk % 128 != 0:
+        # a misaligned chunk size would push EVERY chunk of every prompt
+        # off the fused append path (Sk = pos0 + C inherits the
+        # misalignment) — round instead of silently serving on jnp
+        rounded = max(128, round(args.chunk / 128) * 128)
+        logging.warning(
+            "--chunk %d is not a 128 multiple; rounding to %d so prefill "
+            "chunks stay on the fused append kernel (misaligned chunks "
+            "fall back to the jnp reference on every chunk)",
+            args.chunk, rounded)
+        args.chunk = rounded
 
     import jax
 
@@ -589,7 +607,8 @@ def main():
         "cp_combine_bytes_per_token": combine_bytes,
         "kernel_dispatch": [
             r for r in hlo_analysis.kernel_dispatch_summary()
-            if r["op"] in ("decode_attention", "flash_attention")],
+            if r["op"] in ("decode_attention", "flash_attention",
+                           "flash_append")],
     })
     print(json.dumps(rec))
 

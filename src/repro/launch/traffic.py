@@ -69,6 +69,42 @@ def decode_cp_combine_bytes(cfg: ModelConfig, batch: int,
     return n_attn * per_layer * n_seq_shards
 
 
+def prefill_attn_bytes(cfg: ModelConfig, batch: int, prompt_len: int,
+                       chunk_len: int, *, fused: bool) -> int:
+    """HBM bytes for the ATTENTION op across a whole chunked prefill —
+    the term the append kernel changes (everything else in
+    ``prefill_chunk_bytes`` is identical between the two paths).
+
+    masked-sdpa (``fused=False``, the pre-append prefix path): every chunk
+    materializes concat'ed K/V streams repeated to Hq (GQA fan-out leaves
+    VMEM) and an f32 (C, Sk) score tensor that makes ~5 HBM passes
+    (logits write, mask where read+write, softmax read+write) before the
+    PV matmul reads it again.
+
+    fused append (``fused=True``): the key-stream concat (cache prefix +
+    chunk) is written once and the kernel reads it once in Hkv layout;
+    q/o stream once; score tiles live in VMEM scratch and never touch
+    HBM."""
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n_attn = sum(1 for k in cfg.layer_kinds()
+                 if k in ("attn", "attn_local"))
+    total = 0
+    for p0 in range(0, prompt_len, chunk_len):
+        c = min(chunk_len, prompt_len - p0)
+        sk = p0 + c
+        qo = 2 * batch * c * hq * hd * 4            # q read + o write, f32
+        if fused:
+            # concat write + one kernel pass, both in Hkv layout
+            kv = 2 * batch * sk * 2 * hkv * hd * 4
+            scores = 0                              # VMEM-resident tiles
+        else:
+            # concat write + Hq-repeated read for both einsums
+            kv = 2 * batch * sk * (hkv + 2 * hq) * hd * 4
+            scores = 5 * batch * hq * c * sk * 4    # f32 materialization
+        total += n_attn * (qo + kv + scores)
+    return total
+
+
 def prefill_chunk_bytes(cfg: ModelConfig, batch: int, prompt_len: int,
                         chunk_len: int) -> int:
     """HBM bytes for chunked flash prefill of a (batch, prompt_len) prompt

@@ -257,19 +257,23 @@ def _cache_positions(cache_len: int, pos: jnp.ndarray,
 
 def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
                    cfg, *, window: Optional[int] = None,
-                   use_rope: bool = True, backend: str = "auto"):
+                   use_rope: bool = True, backend: str = "auto",
+                   true_len: Optional[jnp.ndarray] = None):
     """Prefill one prompt chunk.  x (B, C, d_model) covers absolute positions
     [pos0, pos0 + C) — the same positions for every row (prompts are
-    right-padded to a common length; per-row true lengths are handled by the
-    caller's logit gather and the per-slot decode that follows).
+    right-padded to a common length; ``true_len`` (B,) optionally carries
+    each row's real prompt length so ring writes can mask padding, and the
+    caller's logit gather / per-slot decode handle the rest).
 
     Writes the chunk's K/V into cache rows [pos0, pos0 + C) (ring wrap for
     window caches) and returns (out (B, C, d_model), new_cache).  ``pos0``
-    is a static python int, so the first chunk (pos0 == 0) is pure causal
-    self-attention and runs the flash kernel through the dispatch layer —
-    one kernel launch replacing C single-token steps; later chunks attend
-    to the statically-sized cache prefix through the masked reference path
-    (Sq != Sk is outside the flash kernel's grid).
+    is a static python int.  Every chunk — first and later alike — runs
+    one ``dispatch.flash_attention_append`` call: the chunk's queries at
+    absolute positions [pos0, pos0 + C) attend the key stream
+    (cache prefix + the chunk's own K/V) under the kernel's q-offset grid,
+    with ring caches passing the same per-row kpos validity the decode
+    kernel uses.  There is no masked-sdpa prefix branch; unaligned smoke
+    shapes fall back to the jnp append oracle inside dispatch.
     """
     n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b, c, _ = x.shape
@@ -284,13 +288,8 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
         k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
 
     cache_len = cache["k"].shape[1]
-    if pos0 + c <= cache_len:
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
-    else:
-        if window is None:
+    if window is None:
+        if pos0 + c > cache_len:
             # a full cache has no wrap semantics: writing past the end
             # would clobber real prompt rows that kpos still reports as
             # valid — loud trace-time failure, the caller must size its
@@ -298,47 +297,61 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
             raise ValueError(
                 f"prefill chunk [{pos0}, {pos0 + c}) overflows the "
                 f"{cache_len}-slot full cache; chunk the prompt to fit")
-        # ring cache shorter than the history: only the chunk's last
-        # min(C, cache_len) tokens survive — write them (ascending, so a
-        # single scatter with unique rows), older rows stay as-is and are
-        # masked out by kpos
-        tail = min(c, cache_len)
-        rows = (pos0 + jnp.arange(c)[-tail:]) % cache_len
-        ck = cache["k"].at[:, rows].set(
-            k[:, -tail:].astype(cache["k"].dtype))
-        cv = cache["v"].at[:, rows].set(
-            v[:, -tail:].astype(cache["v"].dtype))
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
+    else:
+        # ring cache: slot s must end up holding the LAST written position
+        # p ≡ s (mod cache_len) with pos0 <= p < end[row].  Computed as a
+        # per-slot gather instead of a scatter, which (a) has no duplicate
+        # -index ordering hazard when C > cache_len and (b) takes a
+        # per-row ``end`` — rows shorter than the padded chunk grid
+        # (true_len) simply stop writing at their real prompt length, so
+        # right-padded admission chunks can no longer alias ring rows that
+        # kpos attributes to real earlier positions.
+        end = jnp.full((b,), pos0 + c, jnp.int32) if true_len is None \
+            else jnp.minimum(pos0 + c, true_len.astype(jnp.int32))
+        idx = jnp.arange(cache_len)
+        last = end[:, None] - 1                              # (B, 1)
+        p_cand = last - ((last - idx[None, :]) % cache_len)  # (B, L)
+        valid = p_cand >= pos0
+        sel = jnp.clip(p_cand - pos0, 0, c - 1)
+        gk = jnp.take_along_axis(k.astype(cache["k"].dtype),
+                                 sel[:, :, None, None], axis=1)
+        gv = jnp.take_along_axis(v.astype(cache["v"].dtype),
+                                 sel[:, :, None, None], axis=1)
+        ck = jnp.where(valid[:, :, None, None], gk, cache["k"])
+        cv = jnp.where(valid[:, :, None, None], gv, cache["v"])
     # strong int32: a weak-typed scalar here would retrace the decode step
     # that consumes this cache
     new_cache = {"k": ck, "v": cv, "index": jnp.asarray(pos0 + c, jnp.int32)}
 
+    # key stream for the append call: the pre-chunk cache prefix (rows a
+    # ring write above may have evicted are only positions no chunk query
+    # can still see) plus the chunk's own K/V from this projection
     if pos0 == 0:
-        o = dispatch.flash_attention(q, k, v, causal=True, window=window,
-                                     backend=backend)
+        k_all, v_all = k, v
+        kpos_all = jnp.arange(c)
+        linear = True
+    elif window is None:
+        k_all = jnp.concatenate([cache["k"][:, :pos0].astype(q.dtype), k],
+                                axis=1)
+        v_all = jnp.concatenate([cache["v"][:, :pos0].astype(q.dtype), v],
+                                axis=1)
+        kpos_all = jnp.arange(pos0 + c)
+        linear = True
     else:
-        # chunk queries over [0, pos0 + C): the pre-chunk keys come from the
-        # cache (they include rows a ring write above may have evicted only
-        # for positions no chunk query can still see), the chunk's own keys
-        # from this projection
-        if window is None:
-            k_pre = cache["k"][:, :min(pos0, cache_len)].astype(q.dtype)
-            v_pre = cache["v"][:, :min(pos0, cache_len)].astype(q.dtype)
-            kpos_pre = jnp.arange(k_pre.shape[1])
-        else:
-            k_pre = cache["k"].astype(q.dtype)
-            v_pre = cache["v"].astype(q.dtype)
-            kpos_pre = _cache_positions(cache_len,
-                                        jnp.asarray(pos0 - 1), window)
-        k_all = jnp.concatenate([k_pre, k], axis=1)
-        v_all = jnp.concatenate([v_pre, v], axis=1)
+        k_all = jnp.concatenate([cache["k"].astype(q.dtype), k], axis=1)
+        v_all = jnp.concatenate([cache["v"].astype(q.dtype), v], axis=1)
+        kpos_pre = _cache_positions(cache_len, jnp.asarray(pos0 - 1),
+                                    window)
         kpos_all = jnp.concatenate([kpos_pre, pos0 + jnp.arange(c)])
-        qpos = pos0 + jnp.arange(c)
-        mask = (kpos_all[None, :] >= 0) & (kpos_all[None, :] <= qpos[:, None])
-        if window is not None:
-            mask &= kpos_all[None, :] > qpos[:, None] - window
-        n_rep = n_h // n_kv
-        o = sdpa(q, _repeat_kv(k_all, n_rep), _repeat_kv(v_all, n_rep),
-                 mask[None, None])
+        linear = False
+    o = dispatch.flash_attention_append(q, k_all, v_all, kpos_all,
+                                        pos0=pos0, window=window,
+                                        kpos_linear=linear,
+                                        backend=backend)
     return cm.linear(params["wo"], o.reshape(b, c, n_h * hd)), new_cache
 
 

@@ -175,17 +175,19 @@ def _apply_block_decode(cfg: ModelConfig, kind: str, p: Params, x, cache,
 
 
 def _apply_block_prefill(cfg: ModelConfig, kind: str, p: Params, x, cache,
-                         pos0: int):
+                         pos0: int, true_len=None):
     """One residual block over a whole prompt chunk, writing the KV cache.
     Only attention blocks support this (checked by
-    ``supports_chunked_prefill``); recurrent caches need their own scan."""
+    ``supports_chunked_prefill``); recurrent caches need their own scan.
+    ``true_len`` (B,) masks ring-cache writes past each row's real prompt
+    length (right-padded admission chunks)."""
     window = cfg.sliding_window if kind == "attn_local" else None
     if kind not in ("attn", "attn_local"):
         raise NotImplementedError(
             f"chunked prefill is KV-cache only, got block kind {kind}")
     h, cache = attn.attend_prefill(
         p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, pos0, cfg,
-        window=window)
+        window=window, true_len=true_len)
     x = x + h
     y = cm.apply_norm(cfg.norm, p["ln2"], x)
     if cfg.n_experts:
@@ -451,18 +453,23 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
 
 
 def prefill_step(cfg: ModelConfig, params: Params, cache: Params,
-                 batch: Dict[str, jnp.ndarray], pos0: int = 0):
+                 batch: Dict[str, jnp.ndarray], pos0: int = 0,
+                 true_len=None):
     """Prefill one whole prompt chunk.  batch: {"tokens": (B, C)} (or
     embeds) covering absolute positions [pos0, pos0 + C); pos0 is a static
     python int (one compile per chunk offset — offsets are multiples of the
     chunk size, so a handful of traces serve any prompt length).
 
-    Every attention layer runs the chunk through the flash forward path and
-    writes its KV cache rows in one block — replacing C single-token
-    ``decode_step`` launches, the dominant serving-latency term for long
-    prompts.  Returns (out {"logits" (B, C, V), ...}, new_cache); callers
-    gather each row's true last-prompt-token logits (prompts are
-    right-padded) and continue with per-slot decode.
+    Every attention layer — every chunk, not just the first — runs through
+    one ``dispatch.flash_attention_append`` launch (q-offset grid over the
+    cache prefix plus the chunk) and writes its KV cache rows in one
+    block — replacing C single-token ``decode_step`` launches, the
+    dominant serving-latency term for long prompts.  Returns
+    (out {"logits" (B, C, V), ...}, new_cache); callers gather each row's
+    true last-prompt-token logits (prompts are right-padded; ``true_len``
+    (B,) additionally masks ring-cache writes past each row's real length,
+    which is what lets right-padded engine admission chunk sliding-window
+    architectures) and continue with per-slot decode.
     """
     if not supports_chunked_prefill(cfg):
         raise NotImplementedError(
@@ -479,7 +486,7 @@ def prefill_step(cfg: ModelConfig, params: Params, cache: Params,
             new_caches = []
             for j, kind in enumerate(cyc_kinds):
                 x, c = _apply_block_prefill(cfg, kind, cyc_params[j], x,
-                                            cyc_cache[j], pos0)
+                                            cyc_cache[j], pos0, true_len)
                 new_caches.append(c)
             return x, tuple(new_caches)
 
@@ -491,7 +498,7 @@ def prefill_step(cfg: ModelConfig, params: Params, cache: Params,
         new_caches = []
         for i, kind in enumerate(kinds):
             x, c = _apply_block_prefill(cfg, kind, params["layers"][i], x,
-                                        cache["layers"][i], pos0)
+                                        cache["layers"][i], pos0, true_len)
             new_caches.append(c)
         cache = dict(cache)
         cache["layers"] = new_caches

@@ -38,7 +38,7 @@ def shared_rmsprop(*, alpha: float = 0.99, eps: float = 0.1,
 
     def update(grads, state, lr):
         if fused:
-            from repro.kernels import ops as kops
+            from repro.kernels import dispatch as kops
 
             def upd(g_acc, dg):
                 return kops.rmsprop_update(g_acc, dg, lr=lr, alpha=alpha,

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ref
 
 KEY = jax.random.key(42)
 
@@ -28,7 +28,7 @@ def test_flash_attention_sweep(b, s, hq, hkv, d, window, causal, dtype):
     q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
     k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
     v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
-    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+    out = dispatch.flash_attention(q, k, v, causal=causal, window=window,
                               backend="pallas")
     want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
@@ -58,7 +58,7 @@ def test_flash_attention_grad_sweep(b, s, hq, hkv, d, window, causal, dtype):
     do = jax.random.normal(ks[3], (b, s, hq, d), dtype)
 
     def loss_pl(q, k, v):
-        o = ops.flash_attention(q, k, v, causal=causal, window=window,
+        o = dispatch.flash_attention(q, k, v, causal=causal, window=window,
                                 backend="pallas")
         return jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32))
 
@@ -83,7 +83,7 @@ def test_flash_attention_grad_matches_sdpa():
     k = jax.random.normal(ks[1], (b, s, hkv, d))
     v = jax.random.normal(ks[2], (b, s, hkv, d))
     g_pl = jax.grad(lambda q, k, v: jnp.sum(
-        ops.flash_attention(q, k, v, causal=True, backend="pallas") ** 2),
+        dispatch.flash_attention(q, k, v, causal=True, backend="pallas") ** 2),
         argnums=(0, 1, 2))(q, k, v)
     g_rf = jax.grad(lambda q, k, v: jnp.sum(
         ref.flash_attention_ref(q, k, v, causal=True) ** 2),
@@ -126,7 +126,7 @@ def test_decode_attention_sweep(b, length, hq, hkv, d, frac, dtype):
     vc = jax.random.normal(ks[2], (b, length, hkv, d), dtype)
     pos = jnp.array(int(frac * (length - 1)), jnp.int32)
     kpos = jnp.where(jnp.arange(length) <= pos, jnp.arange(length), -1)
-    out = ops.decode_attention(q, kc, vc, kpos, pos, backend="pallas")
+    out = dispatch.decode_attention(q, kc, vc, kpos, pos, backend="pallas")
     want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -145,7 +145,7 @@ def test_decode_attention_ring_cache():
     idx = jnp.arange(length)
     cand = pos - (pos % length) + idx
     kpos = jnp.where(cand > pos, cand - length, cand)
-    out = ops.decode_attention(q, kc, vc, kpos, pos, backend="pallas")
+    out = dispatch.decode_attention(q, kc, vc, kpos, pos, backend="pallas")
     want = ref.decode_attention_ref(q, kc, vc, kpos, pos)
     np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
 
@@ -157,7 +157,7 @@ def test_rmsprop_kernel_sweep(shape, lr):
     ks = jax.random.split(KEY, 2)
     g = jnp.abs(jax.random.normal(ks[0], shape))
     dg = jax.random.normal(ks[1], shape)
-    new_g, upd = ops.rmsprop_update(g, dg, lr=lr)
+    new_g, upd = dispatch.rmsprop_update(g, dg, lr=lr)
     ng_ref, upd_ref = ref.rmsprop_update_ref(g, dg, lr=lr)
     np.testing.assert_allclose(new_g, ng_ref, rtol=1e-5, atol=1e-7)
     np.testing.assert_allclose(upd, upd_ref, rtol=1e-5, atol=1e-9)
@@ -173,7 +173,7 @@ def test_flash_jnp_blockwise_matches_kernel():
     v = jax.random.normal(ks[2], (b, s, hkv, d))
     o_ref = ref.flash_attention_ref(q, k, v, causal=True)
     o_jnp = flash_attention_jnp(q, k, v, True, None, 128)
-    o_pl = ops.flash_attention(q, k, v, causal=True, backend="pallas")
+    o_pl = dispatch.flash_attention(q, k, v, causal=True, backend="pallas")
     np.testing.assert_allclose(o_jnp, o_ref, atol=2e-5, rtol=2e-5)
     np.testing.assert_allclose(o_pl, o_ref, atol=2e-5, rtol=2e-5)
 
@@ -184,7 +184,7 @@ def test_rmsnorm_kernel_sweep(shape, dtype):
     ks = jax.random.split(KEY, 2)
     x = jax.random.normal(ks[0], shape, dtype)
     scale = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],))
-    out = ops.rmsnorm(x, scale, backend="pallas")
+    out = dispatch.rmsnorm(x, scale, backend="pallas")
     want = ref.rmsnorm_ref(x, scale)
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -219,10 +219,27 @@ def test_flash_bwd_skips_fully_masked_tiles():
                                    atol=2e-2, rtol=2e-2, err_msg=name)
 
 
+def test_ops_shim_warns_and_reexports():
+    """kernels.ops is a deprecation shim: importing it warns, and the
+    historical names still resolve to the dispatch entry points."""
+    import importlib
+    import sys
+    import warnings
+    sys.modules.pop("repro.kernels.ops", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ops = importlib.import_module("repro.kernels.ops")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert ops.flash_attention is dispatch.flash_attention
+    assert ops.decode_attention is dispatch.decode_attention
+    assert ops.flash_attention_append is dispatch.flash_attention_append
+    assert ops.rmsnorm is dispatch.rmsnorm
+    assert ops.rmsprop_update is dispatch.rmsprop_update
+
+
 @pytest.mark.parametrize("shape", [(64, 256), (2, 16, 128)])
 def test_rmsnorm_vjp_kernel_matches_ad(shape):
     """The fused one-pass dx/dscale backward vs AD through the reference."""
-    from repro.kernels import dispatch
     ks = jax.random.split(KEY, 3)
     x = jax.random.normal(ks[0], shape)
     scale = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],))

@@ -82,13 +82,13 @@ def test_supports_chunked_prefill_gating():
     xl = get_config("xlstm-1.3b").reduced()
     assert not M.supports_chunked_prefill(xl)
     assert llm_a3c.make_prefill_step(xl) is None
-    # ring (sliding-window) archs CAN chunk-prefill exact prompts, but the
-    # engine's right-padded admission would alias ring rows — the engine
-    # factory gates them to the token loop
+    # ring (sliding-window) archs chunk-prefill too now: per-row true_len
+    # masks ring writes past each row's real prompt length, so the padded
+    # admission chunks that used to alias ring rows are safe
     ring = dataclasses.replace(_cfg(), block_cycle=("attn_local",),
                                sliding_window=8)
     assert M.supports_chunked_prefill(ring)
-    assert llm_a3c.make_prefill_step(ring) is None
+    assert llm_a3c.make_prefill_step(ring) is not None
 
 
 def _reference_greedy(cfg, params, prompt, max_new, cache_len):
@@ -155,10 +155,12 @@ def test_chunk_grid_clamps_to_cache_len():
                        {"tokens": jnp.zeros((1, 16), jnp.int32)}, 0)
 
 
-def test_engine_ring_arch_uses_loop_and_matches():
-    """Sliding-window arch through the engine: loop-prefill fallback (the
-    padded chunk write would alias ring rows) and per-slot ragged decode
-    must still match per-request sequential greedy decode."""
+def test_engine_ring_arch_chunked_prefill_matches():
+    """Sliding-window arch through the engine, now on the CHUNKED prefill
+    path (true_len-masked ring writes make right-padded admission chunks
+    safe): mixed-length requests must match per-request sequential greedy
+    decode.  chunk > window covers the ring-wrap write; prompts shorter
+    than the padded grid cover the masked-write rows."""
     cfg = dataclasses.replace(_cfg(), block_cycle=("attn_local",),
                               sliding_window=8)
     params = M.init_params(cfg, jax.random.key(0))
@@ -166,8 +168,9 @@ def test_engine_ring_arch_uses_loop_and_matches():
                                 prompt_range=(3, 12), gen_range=(2, 5),
                                 arrival_rate=0.0, seed=4)
     rec = serve_mod.run_engine(cfg, params, trace, n_slots=2,
-                               cache_len=20, chunk=8, sample=False, seed=0)
-    assert not rec["chunked_prefill"]
+                               cache_len=20, chunk=16, sample=False,
+                               seed=0)
+    assert rec["chunked_prefill"]
     for r in trace:
         want = _reference_greedy(cfg, params, r.prompt, r.max_new, 20)
         assert r.tokens == want, (r.rid, r.tokens, want)

@@ -45,3 +45,17 @@ def test_sw_variant_cache_is_sublinear():
     full = traffic.cache_bytes(cfg, 1, 524_288)
     ring = traffic.cache_bytes(sw, 1, 524_288)
     assert ring < full / 32   # ring buffers: window/seq = 1/64
+
+
+def test_prefill_attn_bytes_fused_vs_masked():
+    """The append kernel removes the masked path's f32 score
+    materialization and Hq-repeated K/V streams; the attention-term
+    traffic ratio must grow with prompt length (the quadratic score term)
+    and the fused term must stay linear in Sk per chunk."""
+    cfg = get_config("qwen2-72b")
+    masked = traffic.prefill_attn_bytes(cfg, 1, 2048, 128, fused=False)
+    fused = traffic.prefill_attn_bytes(cfg, 1, 2048, 128, fused=True)
+    assert fused < masked / 2      # the BENCH_prefill acceptance ratio
+    r_short = traffic.prefill_attn_bytes(cfg, 1, 512, 128, fused=False) \
+        / traffic.prefill_attn_bytes(cfg, 1, 512, 128, fused=True)
+    assert masked / fused > r_short
