@@ -2,22 +2,35 @@
 loop, and continuous batching vs lockstep waves under mixed-length traffic.
 
 Emits ``benchmarks/results/serve_engine.json`` (next to
-``kernels_micro.json``) with tokens/s and latency percentiles — the
-numbers backing the serve-engine acceptance criteria:
+``kernels_micro.json``) with tokens/s and latency percentiles, plus the
+root ``BENCH_serve.json`` CI artifact (tokens/s, TTFT/latency
+percentiles, page occupancy, prefix dedup ratio) — the numbers backing
+the serve-engine acceptance criteria:
 
   * chunked prefill >= 5x faster than the single-token loop at
     prompt_len 128;
   * the continuous-batching engine sustains higher aggregate tokens/s
-    than lockstep wave batching on the same mixed-length trace.
+    than lockstep wave batching on the same mixed-length trace;
+  * the paged KV cache dedups a shared-prefix trace (> 1.5x page dedup,
+    skipped prefill chunks) with tokens identical to no-sharing, and
+    the capacity model sustains >= 4x the slot count on the contiguous
+    layout's HBM budget.
 
   PYTHONPATH=src python -m benchmarks.run --only serve
 """
 from __future__ import annotations
 
+import json
+import os
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_serve.json")
 
 
 def bench_prefill(cfg, params, *, prompt_len: int, chunk: int) -> tuple:
@@ -125,6 +138,104 @@ def bench_engine_vs_lockstep(cfg, params, *, n_slots: int, n_requests: int,
     return rows
 
 
+def shared_prefix_trace(vocab: int, *, shared_len: int, n_requests: int,
+                        seed: int) -> list:
+    """Mixed trace built for prefix reuse: every prompt opens with the
+    same ``shared_len`` tokens; two requests are exact duplicates (their
+    shared partial page forks via copy-on-write at first decode write);
+    generation lengths are staggered so early finishers free slots while
+    the shared pages are still referenced by live requests — the regime
+    cross-admission prefix hits need."""
+    from repro.launch import serve as serve_mod
+
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, shared_len).astype(np.int32)
+    dup_tail = rng.integers(0, vocab, 9).astype(np.int32)
+    trace = []
+    for rid in range(n_requests):
+        if rid in (1, 2):
+            prompt = np.concatenate([shared, dup_tail])
+        else:
+            tail = rng.integers(0, vocab,
+                                1 + (rid % 4) * 7).astype(np.int32)
+            prompt = np.concatenate([shared, tail])
+        trace.append(serve_mod.Request(
+            rid=rid, prompt=prompt, max_new=2 + (rid % 3) * 8,
+            arrival=0.0))
+    return trace
+
+
+def bench_paged_sharing(cfg, params, *, n_slots: int, n_requests: int,
+                        seed: int) -> tuple:
+    """Shared-prefix trace through the paged engine with the prefix cache
+    on and off: identical tokens, fewer prefill chunks and fewer live
+    pages with sharing on.  Returns (rows, record) — the record feeds the
+    root BENCH_serve.json artifact."""
+    from repro.kernels import dispatch
+    from repro.launch import serve as serve_mod
+    from repro.launch import traffic
+
+    recs, toks, ops = {}, {}, {}
+    for mode, pc in (("share", True), ("noshare", False)):
+        trace = shared_prefix_trace(cfg.vocab_size, shared_len=192,
+                                    n_requests=n_requests, seed=seed)
+        dispatch.clear_decision_log()
+        recs[mode] = serve_mod.run_engine(
+            cfg, params, trace, n_slots=n_slots, cache_len=256, chunk=64,
+            sample=False, seed=seed, prefix_cache=pc)
+        toks[mode] = {r.rid: list(r.tokens) for r in trace}
+        ops[mode] = sorted({d.op for d in dispatch.decision_log()
+                            if d.op in ("append_paged", "decode_paged")})
+
+    rows = []
+    for mode in ("share", "noshare"):
+        rec = recs[mode]
+        rows.append({
+            "name": f"serve_paged_{mode}",
+            "us_per_call": rec["wall_s"] * 1e6,
+            "derived": f"tok_s={rec['tokens_per_s']} "
+                       f"dedup={rec['dedup_ratio']} "
+                       f"chunks_skipped={rec['prefill_chunks_skipped']} "
+                       f"cow={rec['cow_events']} "
+                       f"pages={rec['pages_alloced']}/"
+                       f"{rec['pages_requested']} "
+                       f"paged_ops={ops[mode]}",
+        })
+    cap = traffic.paged_capacity(
+        cfg, n_slots=n_slots, cache_len=1024, page_size=128,
+        resident_tokens_per_req=256, shared_tokens=128)
+    rows.append({
+        "name": "paged_capacity_model", "us_per_call": 0.0,
+        "derived": f"slots {cap['slots_contiguous']} -> "
+                   f"{cap['slots_paged']} "
+                   f"(ratio={cap['slot_ratio']:.2f}x) on the same "
+                   f"{cap['budget_bytes']:.3e} B budget, "
+                   f"model_dedup={cap['dedup_ratio_model']:.2f}"})
+
+    share = recs["share"]
+    record = {
+        "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "n_slots": n_slots,
+        "n_requests": n_requests,
+        "tokens_per_s": share["tokens_per_s"],
+        "ttft_s": share["ttft_s"],
+        "latency_s": share["latency_s"],
+        "occupancy": share["occupancy"],
+        "page_occupancy": share.get("page_occupancy"),
+        "page_size": share.get("page_size"),
+        "dedup_ratio": share["dedup_ratio"],
+        "cow_events": share["cow_events"],
+        "prefill_chunks_skipped": share["prefill_chunks_skipped"],
+        "noshare_chunks_skipped": recs["noshare"]["prefill_chunks_skipped"],
+        "noshare_pages_alloced": recs["noshare"]["pages_alloced"],
+        "tokens_identical_vs_noshare": toks["share"] == toks["noshare"],
+        "kernel_dispatch": ops["share"],
+        "capacity_model": cap,
+    }
+    return rows, record
+
+
 def run(*, arch: str = "stablelm-1.6b", prompt_len: int = 128,
         chunk: int = 128, n_slots: int = 4, n_requests: int = 24,
         seed: int = 0) -> list:
@@ -142,7 +253,13 @@ def run(*, arch: str = "stablelm-1.6b", prompt_len: int = 128,
     rows += pf_rows
     rows += bench_engine_vs_lockstep(cfg, params, n_slots=n_slots,
                                      n_requests=n_requests, seed=seed)
+    sh_rows, record = bench_paged_sharing(cfg, params, n_slots=n_slots,
+                                          n_requests=12, seed=seed)
+    rows += sh_rows
     common.save_rows("serve_engine", rows)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
     return rows
 
 

@@ -16,8 +16,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale budgets (hours on 1 CPU)")
     ap.add_argument("--quick", action="store_true",
-                    help="CI perf-trajectory leg: just the prefill bench, "
-                    "writing the root-level BENCH_prefill.json artifact")
+                    help="CI perf-trajectory leg: the prefill and serve "
+                    "benches, writing the root-level BENCH_prefill.json "
+                    "and BENCH_serve.json artifacts")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     args = ap.parse_args()
@@ -51,7 +52,7 @@ def main() -> None:
         "roofline": lambda: bench_roofline.run(),
     }
     if args.quick:
-        only = ["prefill"]
+        only = ["prefill", "serve"]
     else:
         only = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

@@ -442,6 +442,31 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
         off = 1 if (stacked and ps.startswith("layers")) else 0
         if leaf.ndim == 0 or ps.endswith("index"):
             return NamedSharding(mesh, P())
+        if re.search(r"/(kp|vp)$", ps) and leaf.ndim >= 4:
+            # paged pool (P, page_size, Hkv, hd) [+leading stack dim]: no
+            # batch dim to give the data axes.  Replicated-cache layout:
+            # heads on 'model' (the same dim the gathered dense view
+            # shards); context-parallel layout: the page dim takes the seq
+            # axes — page boundaries are 128-multiples, so whole pages per
+            # shard keep the gathered slices MXU-aligned.
+            hkv = leaf.shape[off + 2]
+            n_pages = leaf.shape[off + 0]
+            m_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
+            if batch_ok:
+                heads = "model" if (m_size > 1 and hkv % m_size == 0
+                                    and hkv >= m_size) else None
+                spec = (None,) * off + (None, None, heads, None)
+            else:
+                axes = seq_ax if isinstance(seq_ax, tuple) else (seq_ax,)
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                pages = seq_ax if n_pages % size == 0 else None
+                spec = (None,) * off + (pages, None, None, None)
+            return NamedSharding(mesh, P(*spec))
+        if re.search(r"/pt$", ps):
+            # page tables are gather/scatter indices — replicate
+            return NamedSharding(mesh, P())
         if re.search(r"/(k|v)$", ps) and leaf.ndim >= 4:
             # (B, L, Hkv, hd) [+leading stack dim]
             cache_len = leaf.shape[off + 1]

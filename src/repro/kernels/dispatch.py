@@ -632,6 +632,110 @@ def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache layout (page pool + per-slot page table)
+# ---------------------------------------------------------------------------
+#
+# The paged arms are an indirection layer, not a new kernel family: the
+# decode and append kernels already read key validity from a runtime
+# per-row ``kpos`` map, so a paged cache lowers as (1) a page-table gather
+# producing a dense per-slot view, (2) the paged kpos map (-1 on unmapped
+# pages), then (3) a delegated call into the existing ``decode_attention``
+# / ``flash_attention_append`` arms.  The gathered view is *statically*
+# sliced to the logical cache length so the delegated call sees the exact
+# shapes the contiguous layout produces — paged and contiguous compute
+# streams are bitwise identical, which is what the engine parity tests
+# pin.  Alignment rule: ``page_size`` must be a 128-multiple so page
+# boundaries coincide with the kernels' key-block tiles; smaller or odd
+# page sizes fall back to the jnp oracle with a logged reason.  Every
+# paged call logs two decision rows — its own (op ``decode_paged`` /
+# ``append_paged``) plus the delegated op's row.
+
+def _paged_misalignment(page_size: int) -> Optional[str]:
+    if page_size < 128 or page_size % 128 != 0:
+        return (f"page size {page_size} not MXU-aligned (need a "
+                "128-multiple so page boundaries coincide with key-block "
+                "tiles)")
+    return None
+
+
+def decode_attention_paged(q, k_pool, v_pool, page_table, pos, *,
+                           length: Optional[int] = None,
+                           backend: str = "auto") -> jnp.ndarray:
+    """Paged-layout decode.  q (B,Hq,D); pools (P,page_size,Hkv,D);
+    page_table (B,M) int32 (-1 = unmapped, 0 = reserved garbage sink);
+    pos (B,) or scalar -> (B,Hq,D).
+
+    ``length`` statically truncates the gathered view to the logical
+    cache length (M * page_size may over-cover); passing the contiguous
+    layout's cache_len makes the delegated call's shapes — and therefore
+    its dispatch decision and reduction order — identical to the
+    contiguous path."""
+    assert backend in _BACKENDS, backend
+    ps = k_pool.shape[1]
+    m = page_table.shape[1]
+    length = m * ps if length is None else length
+    why = _paged_misalignment(ps)
+    if why is None and (length < 128 or length % 128 != 0):
+        why = (f"logical length {length} not MXU-aligned (need a "
+               "128-multiple)")
+    if why is not None:
+        _decide("decode_paged", "jnp", why)
+        return ref.decode_attention_paged_ref(q, k_pool, v_pool,
+                                              page_table, pos,
+                                              length=length)
+    k = ref.paged_gather_ref(k_pool, page_table)[:, :length]
+    v = ref.paged_gather_ref(v_pool, page_table)[:, :length]
+    kpos = ref.paged_kpos_ref(page_table, ps)[:, :length]
+    o = decode_attention(q, k, v, kpos, pos, backend=backend)
+    inner = last_decision("decode_attention")
+    _decide("decode_paged", inner.backend if inner else "jnp",
+            "page-gathered dense view, delegated to decode_attention")
+    return o
+
+
+def flash_attention_append_paged(q, k_pool, v_pool, page_table,
+                                 k_chunk, v_chunk, *, pos0: int,
+                                 backend: str = "auto") -> jnp.ndarray:
+    """Paged-layout append-mode prefill.  q (B,C,Hq,D) at absolute
+    positions pos0 + i; pools hold the already-written prefix [0, pos0)
+    behind page_table (B,M); k_chunk/v_chunk (B,C,Hkv,D) are the chunk's
+    own K/V (not yet in the pool, or written by the caller — the key
+    stream uses these tensors, not pool rows).
+
+    Linear layouts only (no window: ring caches stay contiguous).  The
+    gathered prefix keeps key row index == absolute position wherever
+    mapped, so the delegated call runs with ``kpos_linear=True`` and
+    keeps the tile_live prefix-tile skip."""
+    assert backend in _BACKENDS, backend
+    ps = k_pool.shape[1]
+    b, c = q.shape[0], q.shape[1]
+    why = _paged_misalignment(ps)
+    if why is not None:
+        _decide("append_paged", "jnp", why)
+        return ref.flash_attention_append_paged_ref(
+            q, k_pool, v_pool, page_table, k_chunk, v_chunk, pos0=pos0)
+    if pos0 == 0:
+        k_all, v_all = k_chunk, v_chunk
+        kpos = jnp.arange(c)
+    else:
+        n_pre = -(-pos0 // ps)
+        pt = page_table[:, :n_pre]
+        k_pre = ref.paged_gather_ref(k_pool, pt)[:, :pos0].astype(q.dtype)
+        v_pre = ref.paged_gather_ref(v_pool, pt)[:, :pos0].astype(q.dtype)
+        kpos_pre = ref.paged_kpos_ref(pt, ps)[:, :pos0]
+        k_all = jnp.concatenate([k_pre, k_chunk], axis=1)
+        v_all = jnp.concatenate([v_pre, v_chunk], axis=1)
+        kpos_chunk = jnp.broadcast_to(pos0 + jnp.arange(c), (b, c))
+        kpos = jnp.concatenate([kpos_pre, kpos_chunk], axis=1)
+    o = flash_attention_append(q, k_all, v_all, kpos, pos0=pos0,
+                               kpos_linear=True, backend=backend)
+    inner = last_decision("flash_append")
+    _decide("append_paged", inner.backend if inner else "jnp",
+            "page-gathered prefix + chunk, delegated to flash_append")
+    return o
+
+
+# ---------------------------------------------------------------------------
 # fused rmsnorm (fwd + one-pass vjp)
 # ---------------------------------------------------------------------------
 

@@ -76,6 +76,69 @@ def decode_attention_ref(q, k_cache, v_cache, kpos, pos) -> jnp.ndarray:
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
+def paged_gather_ref(pool, page_table) -> jnp.ndarray:
+    """Gather a dense per-slot view from a shared page pool.
+
+    pool (P, page_size, Hkv, D); page_table (B, M) int32, -1 = unmapped.
+    -> (B, M * page_size, Hkv, D).  Unmapped rows gather page 0 (the
+    reserved garbage sink); callers mask them out through kpos."""
+    b, m = page_table.shape
+    ps = pool.shape[1]
+    safe = jnp.maximum(page_table, 0)
+    dense = pool[safe]                       # (B, M, ps, Hkv, D)
+    return dense.reshape(b, m * ps, pool.shape[2], pool.shape[3])
+
+
+def paged_kpos_ref(page_table, page_size: int) -> jnp.ndarray:
+    """kpos for a page-gathered dense view: row i of the view holds absolute
+    position i iff its page is mapped, else -1.  (B, M) -> (B, M * ps)."""
+    b, m = page_table.shape
+    mapped = jnp.repeat(page_table >= 0, page_size, axis=1)
+    idx = jnp.arange(m * page_size)
+    return jnp.where(mapped, idx[None, :], -1)
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, page_table, pos,
+                               *, length: Optional[int] = None
+                               ) -> jnp.ndarray:
+    """Paged-layout decode oracle: gather the dense view through the page
+    table, build the linear kpos map, and run the dense oracle.  ``length``
+    statically truncates the view to the logical cache length so the
+    compute stream is identical to the contiguous layout."""
+    ps = k_pool.shape[1]
+    k = paged_gather_ref(k_pool, page_table)
+    v = paged_gather_ref(v_pool, page_table)
+    kpos = paged_kpos_ref(page_table, ps)
+    if length is not None:
+        k, v, kpos = k[:, :length], v[:, :length], kpos[:, :length]
+    return decode_attention_ref(q, k, v, kpos, pos)
+
+
+def flash_attention_append_paged_ref(q, k_pool, v_pool, page_table,
+                                     k_chunk, v_chunk, *, pos0: int
+                                     ) -> jnp.ndarray:
+    """Paged-layout append oracle: the key stream is the gathered prefix
+    [0, pos0) from the page pool plus the chunk's own K/V.  Linear-attention
+    only (no window — ring caches stay contiguous)."""
+    ps = k_pool.shape[1]
+    n_pre = -(-pos0 // ps)                   # pages covering [0, pos0)
+    c = q.shape[1]
+    if pos0 == 0:
+        kpos = jnp.arange(c)
+        return flash_attention_append_ref(q, k_chunk, v_chunk, kpos,
+                                          pos0=0)
+    pt = page_table[:, :n_pre]
+    k_pre = paged_gather_ref(k_pool, pt)[:, :pos0].astype(q.dtype)
+    v_pre = paged_gather_ref(v_pool, pt)[:, :pos0].astype(q.dtype)
+    kpos_pre = paged_kpos_ref(pt, ps)[:, :pos0]
+    k = jnp.concatenate([k_pre, k_chunk], axis=1)
+    v = jnp.concatenate([v_pre, v_chunk], axis=1)
+    b = q.shape[0]
+    kpos_chunk = jnp.broadcast_to(pos0 + jnp.arange(c), (b, c))
+    kpos = jnp.concatenate([kpos_pre, kpos_chunk], axis=1)
+    return flash_attention_append_ref(q, k, v, kpos, pos0=pos0)
+
+
 def rmsprop_update_ref(g, grad, *, lr: float, alpha: float = 0.99,
                        eps: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Paper Eq. 8-9 (non-centered, shared-statistics RMSProp).

@@ -145,13 +145,19 @@ def _pad_group(reqs: List[Request], n_rows: int, chunk: int,
     return toks, plens, grid
 
 
-def _chunked_prefill(prefill_step, params, cache, toks, plens, grid):
+def _chunked_prefill(prefill_step, params, cache, toks, plens, grid,
+                     skip=()):
     """Run one right-padded (B, padded) token block through the chunk
     chain.  Returns (last_logits (B, V) np.float32 — each row's true
     last-prompt-position logits — and the final cache).  The gather
     accumulates on device so the chunk chain is dispatched without a
     host sync per chunk; only the final (B, V) block crosses to host.
-    Rows with plen 0 (dummy padding rows) keep zeros."""
+    Rows with plen 0 (dummy padding rows) keep zeros.
+
+    ``skip`` — chunk offsets the prefix cache already covers for EVERY
+    row (and that contain no row's last prompt token, whose logits feed
+    the first sample): those chunks are not launched at all — the shared
+    pages already hold their KV."""
     import jax.numpy as jnp
 
     last = None
@@ -160,6 +166,8 @@ def _chunked_prefill(prefill_step, params, cache, toks, plens, grid):
     # them, which is what makes right-padded admission chunks safe there
     true_len = jnp.asarray(plens, jnp.int32)
     for p0, c in grid:
+        if p0 in skip:
+            continue
         logits, cache = prefill_step(
             params, cache, {"tokens": jnp.asarray(toks[:, p0:p0 + c])},
             pos0=p0, true_len=true_len)
@@ -174,6 +182,101 @@ def _chunked_prefill(prefill_step, params, cache, toks, plens, grid):
                                        axis=1)[:, 0]
             last = jnp.where(jnp.asarray(hit)[:, None], rows, last)
     return np.asarray(last), cache
+
+
+# ---------------------------------------------------------------------------
+# page allocator + prefix index (paged KV layout, host side)
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Host-side free-list allocator over the shared page pool.
+
+    Page 0 is the reserved garbage sink (writes through unmapped page-table
+    rows land there; reads mask it via kpos) and is never handed out.
+    Pages are refcounted — prefix sharing maps one physical page into many
+    slots' tables read-only — and ``version`` bumps every time a page's
+    refcount returns to zero, so prefix-index entries naming a
+    freed-and-reissued page fail validation instead of aliasing."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (sink + 1), got {n_pages}")
+        self.n_pages = n_pages
+        self.free = list(range(n_pages - 1, 0, -1))      # LIFO, 0 reserved
+        self.ref = np.zeros(n_pages, np.int32)
+        self.version = np.zeros(n_pages, np.int64)
+
+    def alloc(self) -> int:
+        if not self.free:
+            raise RuntimeError("page pool exhausted; raise --pages")
+        p = self.free.pop()
+        self.ref[p] = 1
+        return p
+
+    def incref(self, p: int) -> None:
+        self.ref[p] += 1
+
+    def decref(self, p: int) -> None:
+        self.ref[p] -= 1
+        if self.ref[p] == 0:
+            self.version[p] += 1
+            self.free.append(p)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self.free)
+
+
+class PrefixIndex:
+    """Prompt-prefix dedup: hash chains over page-sized token blocks.
+
+    Block i of a prompt keys on ``hash((key_{i-1}, block_tokens))`` so a
+    match at block i implies the whole prefix matched; lookup walks blocks
+    in order and stops at the first miss.  Values carry the page, the
+    allocator version at registration, and the exact token tuple — a hit
+    must pass refcount > 0, version equality AND token equality, which
+    makes recycled pages and hash collisions both non-events (stale
+    entries are pruned lazily).  The final partial block registers too;
+    its token tuple is part of the key, so it only ever matches an
+    identical-length identical-content tail (i.e. identical prompts) —
+    divergent continuations fork it via copy-on-write at decode time."""
+
+    def __init__(self, page_size: int):
+        self.ps = page_size
+        self.entries: dict = {}          # chain hash -> (page, ver, toks)
+
+    def _blocks(self, prompt):
+        h = 0x9E3779B9
+        for i in range(0, len(prompt), self.ps):
+            blk = tuple(int(t) for t in prompt[i:i + self.ps])
+            h = hash((h, blk))
+            yield h, blk
+
+    def lookup(self, prompt, alloc: PageAllocator) -> List[tuple]:
+        """Longest valid shared-page chain covering the prompt's leading
+        blocks: [(page, n_tokens), ...]."""
+        out = []
+        for h, blk in self._blocks(prompt):
+            e = self.entries.get(h)
+            if e is None:
+                break
+            page, ver, toks = e
+            if alloc.ref[page] <= 0 or alloc.version[page] != ver \
+                    or toks != blk:
+                del self.entries[h]      # page recycled since registration
+                break
+            out.append((page, len(blk)))
+        return out
+
+    def register(self, prompt, pages, alloc: PageAllocator) -> None:
+        """Record block -> page for every prompt block (first writer
+        wins; re-registering a shared page is a no-op)."""
+        for (h, blk), page in zip(self._blocks(prompt), pages):
+            if h not in self.entries:
+                self.entries[h] = (int(page), int(alloc.version[page]), blk)
+
+    def clear(self) -> None:
+        self.entries.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -192,22 +295,52 @@ class ServeEngine:
     """
 
     def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
-                 chunk: int = 128, sample: bool = True, seed: int = 0):
+                 chunk: int = 128, sample: bool = True, seed: int = 0,
+                 page_size: int = 128, n_pages: int = 0,
+                 prefix_cache: bool = True, paged: Optional[bool] = None):
         import jax
         import jax.numpy as jnp
 
         from repro.core import llm_a3c
+        from repro.models import attention as attn_mod
         from repro.models import model as M
 
         self.cfg, self.params = cfg, params
         self.n_slots, self.cache_len, self.chunk = n_slots, cache_len, chunk
         self.sample = sample
         self.jnp, self.jax, self.M = jnp, jax, M
-        self.cache = M.init_cache(cfg, n_slots, cache_len,
-                                  dtype=jnp.float32)
         self.serve_step = jax.jit(llm_a3c.make_serve_step(cfg,
                                                           sample=sample))
         self.prefill_step = llm_a3c.make_prefill_step(cfg)
+
+        # paged layout: global-attention layers move to a shared page pool
+        # + per-slot page tables.  Auto mode needs the chunked-prefill path
+        # (recurrent archs keep per-request prefill loops on contiguous
+        # state) and whole-page slots; ring layers stay contiguous inside
+        # a paged cache either way.
+        kinds = cfg.layer_kinds()
+        if paged is None:
+            paged = (self.prefill_step is not None
+                     and "attn" in kinds
+                     and cache_len % page_size == 0)
+        self.paged = bool(paged)
+        self.page_size = page_size
+        self.max_pages = cache_len // page_size if self.paged else 0
+        if self.paged:
+            # worst case (no sharing): every slot fills its table, +1 sink
+            self.n_pages = n_pages or n_slots * self.max_pages + 1
+            self.paged_layout = attn_mod.PagedLayout(page_size, self.n_pages)
+            self.alloc = PageAllocator(self.n_pages)
+            self.prefix_cache = bool(prefix_cache)
+            self.prefix_index = PrefixIndex(page_size)
+            self.pt_host = np.full((n_slots, self.max_pages), -1, np.int32)
+        else:
+            self.n_pages = 0
+            self.paged_layout = None
+            self.prefix_cache = False
+        self.cache = M.init_cache(cfg, n_slots, cache_len,
+                                  dtype=jnp.float32,
+                                  paged=self.paged_layout)
         self.sample_first = jax.jit(
             lambda lg, key: llm_a3c.sample_slot_tokens(lg, key,
                                                        sample=sample))
@@ -221,26 +354,50 @@ class ServeEngine:
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.occupancy: List[float] = []
+        self.page_occupancy: List[float] = []
+        self.pages_requested = self.pages_alloced = 0
+        self.cow_events = self.prefill_chunks_skipped = 0
         # batch-dim index per cache leaf (-1 for per-layer scalars like
         # "index", which have no batch dim): found once by diffing two
         # eval_shape batch sizes, so the admission scatter needs no shape
-        # guessing at runtime
-        s1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, cache_len))
-        s2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, cache_len))
-        self._bdim = jax.tree.map(
+        # guessing at runtime.  Paged leaves get path-based codes on top:
+        # -2 = shared page pool (kp/vp — no batch dim; admission takes the
+        # group's pools wholesale since prefill updated them in place),
+        # -3 = page table (pt — batch dim known from rank).
+        pl = self.paged_layout
+        s1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, cache_len,
+                                                 paged=pl))
+        s2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, cache_len,
+                                                 paged=pl))
+        bdim = jax.tree.map(
             lambda a, b: next((d for d in range(a.ndim)
                                if a.shape[d] != b.shape[d]), -1), s1, s2)
+
+        def kind_of(path, bd):
+            name = str(getattr(path[-1], "key", ""))
+            if name in ("kp", "vp"):
+                return -2
+            if name == "pt":
+                return -3
+            return bd
+        self._bdim = jax.tree_util.tree_map_with_path(kind_of, bdim)
         # persistent admission-prefill cache (batch n_slots): stale rows
         # beyond a new request's prompt are hidden by the kpos/pos
         # invariant, so it never needs re-zeroing
         self._group_cache = M.init_cache(cfg, n_slots, cache_len,
-                                         dtype=jnp.float32)
+                                         dtype=jnp.float32,
+                                         paged=self.paged_layout)
         bdims = self._bdim
 
         def scatter(big, small, perm, mask):
             """big[j] <- small[perm[j]] where mask[j], per cache leaf —
             the whole admission scatter is one jitted call."""
             def one(bd, b, s):
+                if bd == -2:
+                    return s    # shared pool: the group's writes ARE the
+                                # engine's (one physical pool)
+                if bd == -3:
+                    bd = b.ndim - 2   # page table (…, n_slots, max_pages)
                 if bd < 0:
                     return b    # engine tracks per-slot pos itself
                 idx = jnp.clip(perm, 0, s.shape[bd] - 1)
@@ -251,6 +408,46 @@ class ServeEngine:
             return jax.tree.map(one, bdims, big, small)
 
         self._scatter = jax.jit(scatter)
+
+        def build_group(group, engine, pt_rows):
+            """Assemble the admission-prefill input cache: shared pools
+            from the ENGINE cache (decode wrote pages since the last
+            admission), page tables from the admission mapping, and
+            contiguous / recurrent leaves from the persistent group
+            cache."""
+            def one(bd, g, e):
+                if bd == -2:
+                    return e
+                if bd == -3:
+                    return jnp.broadcast_to(pt_rows, g.shape)
+                return g
+            return jax.tree.map(one, bdims, group, engine)
+
+        self._build_group = jax.jit(build_group)
+
+        def set_pt(cache, pt):
+            """Push the host page table into every pt leaf (decode-time
+            incremental allocs / COW forks / completion frees)."""
+            def one(bd, leaf):
+                if bd == -3:
+                    return jnp.broadcast_to(pt, leaf.shape)
+                return leaf
+            return jax.tree.map(one, bdims, cache)
+
+        self._set_pt = jax.jit(set_pt)
+
+        def copy_page(cache, src, dst):
+            """Copy-on-write fork: pool row src -> dst in every layer's
+            pools (scan-stacked pools carry a leading cycle dim)."""
+            def one(bd, leaf):
+                if bd != -2:
+                    return leaf
+                if leaf.ndim == 5:
+                    return leaf.at[:, dst].set(leaf[:, src])
+                return leaf.at[dst].set(leaf[src])
+            return jax.tree.map(one, bdims, cache)
+
+        self._copy_page = jax.jit(copy_page)
 
     # -- admission ----------------------------------------------------------
 
@@ -266,18 +463,76 @@ class ServeEngine:
                                    self.jnp.asarray(perm),
                                    self.jnp.asarray(mask))
 
-    def _prefill_group(self, reqs: List[Request], key):
+    def _map_prompt_pages(self, pairs: List[tuple]) -> List[int]:
+        """Build each admitted request's page-table row: map matching
+        cached prefix pages read-only (incref), allocate fresh pages for
+        the rest, and register the prompt's blocks so LATER admissions —
+        including requests in this same group — can share them.  Returns
+        per-request shared coverage in tokens (drives chunk skipping).
+
+        Same-group sharing is safe because every non-skipped chunk's
+        writes into a shared page replay the identical token values at the
+        identical positions; first divergent DECODE writes fork the page
+        via copy-on-write in ``decode_step_all``."""
+        shared_lens = []
+        for req, j in pairs:
+            plen = len(req.prompt)
+            n_p = -(-plen // self.page_size)
+            self.pages_requested += n_p
+            row = np.full(self.max_pages, -1, np.int32)
+            matched = self.prefix_index.lookup(req.prompt, self.alloc) \
+                if self.prefix_cache else []
+            cov = 0
+            for idx, (page, ntok) in enumerate(matched):
+                self.alloc.incref(page)
+                row[idx] = page
+                cov += ntok
+            for idx in range(len(matched), n_p):
+                row[idx] = self.alloc.alloc()
+                self.pages_alloced += 1
+            if self.prefix_cache:
+                self.prefix_index.register(req.prompt, row[:n_p],
+                                           self.alloc)
+            self.pt_host[j] = row
+            shared_lens.append(cov)
+        return shared_lens
+
+    def _prefill_group(self, pairs: List[tuple], key):
         """Chunked flash prefill for up to ``n_slots`` requests in ONE
         batched call chain (prompts right-padded to a shared chunk grid,
         rows beyond len(reqs) are dummies) — admission costs the same
         kernel launches as a full lockstep wave, shape-stable across
-        group sizes.  Returns (first_tokens (n_slots,), cache)."""
+        group sizes.  Returns (first_tokens (n_slots,), cache).
+
+        Paged layout: page tables are mapped (with prefix reuse) before
+        the chunk chain, and any chunk every row's shared coverage already
+        spans — and that holds no row's last prompt token — is skipped
+        outright: its KV already sits in the shared pages."""
         jnp = self.jnp
+        reqs = [r for r, _ in pairs]
         toks, plens, grid = _pad_group(reqs, self.n_slots, self.chunk,
                                        self.cache_len)
+        skip: set = set()
+        in_cache = self._group_cache
+        if self.paged:
+            shared = self._map_prompt_pages(pairs)
+            pt_rows = np.full((self.n_slots, self.max_pages), -1, np.int32)
+            for i, (_, j) in enumerate(pairs):
+                pt_rows[i] = self.pt_host[j]
+            in_cache = self._build_group(self._group_cache, self.cache,
+                                         jnp.asarray(pt_rows))
+            if self.prefix_cache and all(
+                    k == "attn" for k in self.cfg.layer_kinds()):
+                # ring layers keep contiguous caches that need every
+                # chunk, so skipping is global-attention-only
+                for p0, c in grid:
+                    if all(pl <= p0 or (sh >= p0 + c and pl - 1 >= p0 + c)
+                           for pl, sh in zip(plens[:len(reqs)], shared)):
+                        skip.add(p0)
+                self.prefill_chunks_skipped += len(skip)
         last, cache = _chunked_prefill(self.prefill_step, self.params,
-                                       self._group_cache, toks, plens,
-                                       grid)
+                                       in_cache, toks, plens, grid,
+                                       skip=skip)
         self._group_cache = cache
         first = self.sample_first(jnp.asarray(last), key)
         return np.asarray(first), cache
@@ -305,8 +560,7 @@ class ServeEngine:
         key = self.jax.random.fold_in(
             self.base_key, np.uint32(2 ** 31 + pairs[0][0].rid))
         if self.prefill_step is not None:
-            reqs = [r for r, _ in pairs]
-            first, cache = self._prefill_group(reqs, key)
+            first, cache = self._prefill_group(pairs, key)
             self._write_rows(cache, [(i, j) for i, (_, j)
                                      in enumerate(pairs)])
             firsts = [int(first[i]) for i in range(len(pairs))]
@@ -319,6 +573,7 @@ class ServeEngine:
                 self._write_rows(cache, [(0, j)])
                 firsts.append(f)
         finished = []
+        freed = False
         for (req, j), f in zip(pairs, firsts):
             self.prefill_tokens += len(req.prompt)
             req.t_admit = now
@@ -327,18 +582,67 @@ class ServeEngine:
             if len(req.tokens) >= req.max_new:
                 req.t_done = req.t_first
                 finished.append(req)    # slot stays free
+                if self.paged:
+                    self._free_slot_pages(j)
+                    freed = True
                 continue
             self.pos[j] = len(req.prompt)
             self.tok[j] = f
             self.active[j] = True
             self.req_of[j] = req
+        if freed:
+            self._push_pt()
         return finished
 
     # -- decode -------------------------------------------------------------
 
+    def _free_slot_pages(self, j: int) -> None:
+        for p in self.pt_host[j]:
+            if p >= 0:
+                self.alloc.decref(int(p))
+        self.pt_host[j] = -1
+
+    def _push_pt(self) -> None:
+        self.cache = self._set_pt(self.cache,
+                                  self.jnp.asarray(self.pt_host))
+
+    def _cow(self, src: int) -> int:
+        """Fork a shared page before the first divergent write: allocate a
+        private copy, copy the pool rows in every layer, drop our
+        reference to the shared original."""
+        dst = self.alloc.alloc()
+        jnp = self.jnp
+        self.cache = self._copy_page(self.cache,
+                                     jnp.asarray(src, jnp.int32),
+                                     jnp.asarray(dst, jnp.int32))
+        self.alloc.decref(src)
+        self.cow_events += 1
+        self.pages_alloced += 1
+        return dst
+
     def decode_step_all(self):
         """One per-slot decode step over the whole slot table."""
         jnp = self.jnp
+        if self.paged:
+            # the step writes row pos[j] of each active slot: grow the
+            # table a page at a time, and fork (COW) any still-shared page
+            # the write would land in
+            dirty = False
+            for j in range(self.n_slots):
+                if self.req_of[j] is None:
+                    continue
+                idx = int(self.pos[j]) // self.page_size
+                page = int(self.pt_host[j, idx])
+                if page < 0:
+                    self.pt_host[j, idx] = self.alloc.alloc()
+                    self.pages_requested += 1
+                    self.pages_alloced += 1
+                    dirty = True
+                elif self.alloc.ref[page] > 1:
+                    self.pt_host[j, idx] = self._cow(page)
+                    dirty = True
+            if dirty:
+                self._push_pt()
         key = self.jax.random.fold_in(self.base_key, self.step_count)
         tok, _, self.cache = self.serve_step(
             self.params, self.cache,
@@ -362,13 +666,26 @@ class ServeEngine:
                 self.pos[j] = 0
                 self.tok[j] = 0
                 finished.append(req)
+                if self.paged:
+                    # free before the next step: a stale table row would
+                    # let the idle slot's pos-0 write land in a page the
+                    # allocator may hand to someone else
+                    self._free_slot_pages(j)
+        if self.paged:
+            if finished:
+                self._push_pt()
+            self.page_occupancy.append(
+                self.alloc.used_pages / max(self.n_pages - 1, 1))
         self.occupancy.append(float(np.mean([r is not None
                                              for r in self.req_of])))
         return finished
 
     def reset(self):
         """Clear slot state and counters (compiled steps and caches stay
-        warm) — used after the warmup pass."""
+        warm) — used after the warmup pass.  Paged state resets too: fresh
+        allocator, cleared prefix index, unmapped tables (stale pool
+        content is unreachable once no table row names it — the kpos
+        invariant)."""
         self.pos[:] = 0
         self.tok[:] = 0
         self.active[:] = False
@@ -376,6 +693,14 @@ class ServeEngine:
         self.step_count = 0
         self.prefill_tokens = self.decode_tokens = 0
         self.occupancy = []
+        if self.paged:
+            self.alloc = PageAllocator(self.n_pages)
+            self.prefix_index.clear()
+            self.pt_host[:] = -1
+            self._push_pt()
+        self.page_occupancy = []
+        self.pages_requested = self.pages_alloced = 0
+        self.cow_events = self.prefill_chunks_skipped = 0
 
 
 def _warmup(eng: ServeEngine, trace: List[Request]) -> float:
@@ -389,8 +714,12 @@ def _warmup(eng: ServeEngine, trace: List[Request]) -> float:
         toks, plens, grid = _pad_group(
             [Request(rid=-1, prompt=np.zeros(pmax, np.int32), max_new=1,
                      arrival=0.0)], eng.n_slots, eng.chunk, eng.cache_len)
+        # paged warmup cache compiles the real (pool + table) shapes; its
+        # all-unmapped tables route every write to the page-0 sink and
+        # every read through fully-masked kpos — numerically safe garbage
         wc = eng.M.init_cache(eng.cfg, eng.n_slots, eng.cache_len,
-                              dtype=eng.jnp.float32)
+                              dtype=eng.jnp.float32,
+                              paged=eng.paged_layout)
         _chunked_prefill(eng.prefill_step, eng.params, wc, toks, plens,
                          grid)
     warm = Request(rid=-1, prompt=np.zeros(min(8, eng.cache_len - 1),
@@ -408,7 +737,23 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
     ttft = [r.t_first - (t_start + r.arrival) for r in done]
     total_new = sum(len(r.tokens) for r in done)
     first_req = min(done, key=lambda r: r.rid) if done else None
+    paged = {}
+    if eng.paged:
+        paged = {
+            "page_size": eng.page_size,
+            "n_pages": eng.n_pages,
+            "page_occupancy": round(float(np.mean(eng.page_occupancy)), 3)
+            if eng.page_occupancy else 0.0,
+            "pages_requested": eng.pages_requested,
+            "pages_alloced": eng.pages_alloced,
+            "dedup_ratio": round(
+                eng.pages_requested / max(eng.pages_alloced, 1), 3),
+            "cow_events": eng.cow_events,
+            "prefill_chunks_skipped": eng.prefill_chunks_skipped,
+            "prefix_cache": eng.prefix_cache,
+        }
     return {
+        "paged": eng.paged, **paged,
         "mode": mode, "slots": eng.n_slots, "requests": len(done),
         "warmup_s": round(warmup_s, 3),
         "wall_s": round(wall, 3),
@@ -427,11 +772,16 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
 
 
 def run_engine(cfg, params, trace: List[Request], *, n_slots: int,
-               cache_len: int, chunk: int, sample: bool, seed: int) -> dict:
+               cache_len: int, chunk: int, sample: bool, seed: int,
+               page_size: int = 128, n_pages: int = 0,
+               prefix_cache: bool = True,
+               paged: Optional[bool] = None) -> dict:
     """Continuous batching: admit into freed slots, per-slot decode."""
     _validate_trace(trace, cache_len)
     eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
-                      chunk=chunk, sample=sample, seed=seed)
+                      chunk=chunk, sample=sample, seed=seed,
+                      page_size=page_size, n_pages=n_pages,
+                      prefix_cache=prefix_cache, paged=paged)
     warmup_s = _warmup(eng, trace)
 
     pending = sorted(trace, key=lambda r: r.arrival)
@@ -463,7 +813,9 @@ def run_engine(cfg, params, trace: List[Request], *, n_slots: int,
 
 def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
                  cache_len: int, chunk: int, sample: bool, seed: int,
-                 chunked_prefill: bool = True) -> dict:
+                 chunked_prefill: bool = True, page_size: int = 128,
+                 n_pages: int = 0, prefix_cache: bool = True,
+                 paged: Optional[bool] = None) -> dict:
     """Wave-batched baseline: admit ``n_slots`` requests at once (waiting
     until the whole wave has arrived), then decode until the wave's
     *slowest* request finishes before admitting the next wave.
@@ -474,8 +826,12 @@ def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
     the batching discipline: freed slots idle until the wave drains
     instead of taking the next arrival."""
     _validate_trace(trace, cache_len)
+    if not chunked_prefill and paged is None:
+        paged = False   # the token-loop prefill writes contiguous caches
     eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
-                      chunk=chunk, sample=sample, seed=seed)
+                      chunk=chunk, sample=sample, seed=seed,
+                      page_size=page_size, n_pages=n_pages,
+                      prefix_cache=prefix_cache, paged=paged)
     if not chunked_prefill:
         eng.prefill_step = None
     warmup_s = _warmup(eng, trace)
@@ -529,6 +885,16 @@ def main():
                     "kernel's MXU alignment unit")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="KV cache length (0 = max prompt + max gen)")
+    ap.add_argument("--page-size", type=int, default=128,
+                    help="paged-KV page size in tokens; rounded to the "
+                    "nearest 128 multiple so page boundaries coincide "
+                    "with the kernels' key-block tiles")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size (0 = worst case: slots * "
+                    "pages-per-slot + 1 sink page)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix page reuse (isolates the "
+                    "dedup win in benches; pages stay per-slot private)")
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-seed", type=int, default=0)
@@ -549,6 +915,18 @@ def main():
             "fall back to the jnp reference on every chunk)",
             args.chunk, rounded)
         args.chunk = rounded
+
+    if args.page_size % 128 != 0:
+        # a misaligned page size pushes the paged decode/append arms onto
+        # the jnp oracle (page boundaries must coincide with key-block
+        # tiles) — round instead of silently serving unfused
+        rounded = max(128, round(args.page_size / 128) * 128)
+        logging.warning(
+            "--page-size %d is not a 128 multiple; rounding to %d so the "
+            "paged dispatch arms stay on the fused kernels (misaligned "
+            "pages fall back to the jnp reference)",
+            args.page_size, rounded)
+        args.page_size = rounded
 
     import jax
 
@@ -596,7 +974,9 @@ def main():
         run = run_engine if args.mode == "engine" else run_lockstep
         rec = run(cfg, params, trace, n_slots=args.slots,
                   cache_len=cache_len, chunk=args.chunk,
-                  sample=not args.greedy, seed=args.seed)
+                  sample=not args.greedy, seed=args.seed,
+                  page_size=args.page_size, n_pages=args.pages,
+                  prefix_cache=not args.no_prefix_cache)
 
     rec.update({
         "arch": cfg.name,
@@ -608,7 +988,8 @@ def main():
         "kernel_dispatch": [
             r for r in hlo_analysis.kernel_dispatch_summary()
             if r["op"] in ("decode_attention", "flash_attention",
-                           "flash_append")],
+                           "flash_append", "decode_paged",
+                           "append_paged")],
     })
     print(json.dumps(rec))
 

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.launch import specs as specs_mod
+from repro.models import attention
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -53,6 +54,68 @@ def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
     cache = jax.eval_shape(
         lambda: M.init_cache(cfg, batch, seq, dtype=jnp.bfloat16))
     return _tree_bytes(cache)
+
+
+def page_pool_bytes(cfg: ModelConfig, n_pages: int, page_size: int,
+                    dtype=jnp.bfloat16) -> int:
+    """Bytes of K+V page pool for ``n_pages`` pages across every
+    global-attention layer (the only kind the paged layout covers —
+    windowed and recurrent layers keep contiguous per-slot state)."""
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+    item = jnp.dtype(dtype).itemsize
+    return n_attn * 2 * n_pages * page_size * cfg.n_kv_heads \
+        * cfg.head_dim * item
+
+
+def paged_cache_bytes(cfg: ModelConfig, batch: int, seq: int, *,
+                      page_size: int, n_pages: int) -> int:
+    """Exact byte count of the paged serve cache (shared K/V pools +
+    int32 page tables + contiguous non-attn leaves), via eval_shape of
+    the real ``init_cache`` so layout knowledge lives in one place."""
+    paged = attention.PagedLayout(page_size=page_size, n_pages=n_pages)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, seq, dtype=jnp.bfloat16,
+                             paged=paged))
+    return _tree_bytes(cache)
+
+
+def paged_capacity(cfg: ModelConfig, *, n_slots: int, cache_len: int,
+                   page_size: int, resident_tokens_per_req: int,
+                   shared_tokens: int = 0) -> dict:
+    """Concurrency the paged layout sustains on the SAME HBM budget the
+    contiguous layout spends on ``n_slots`` full-length slots.
+
+    Contiguous reserves ``cache_len`` rows per slot no matter how many a
+    request uses; paged charges each live request only
+    ``ceil(resident_tokens_per_req / page_size)`` pages, of which the
+    leading ``shared_tokens // page_size`` full blocks are deduplicated
+    across all requests via the prefix index.  Per-slot overhead (int32
+    page-table rows plus any contiguous non-attn layer state) is charged
+    exactly via ``paged_cache_bytes``."""
+    budget = cache_bytes(cfg, n_slots, cache_len)
+    per_page = page_pool_bytes(cfg, 1, page_size)
+    # everything in a one-slot paged cache that is NOT pool: table + the
+    # contiguous leaves of windowed/recurrent layers + index scalars
+    per_slot = paged_cache_bytes(cfg, 1, cache_len, page_size=page_size,
+                                 n_pages=1) - per_page
+    shared_pages = shared_tokens // page_size
+    req_pages = -(-resident_tokens_per_req // page_size)
+    unique = max(req_pages - shared_pages, 1)
+    slots_paged = int((budget - shared_pages * per_page)
+                      // (unique * per_page + per_slot))
+    dedup = (slots_paged * req_pages
+             / max(shared_pages + slots_paged * unique, 1))
+    return {
+        "budget_bytes": budget,
+        "page_bytes": per_page,
+        "per_slot_overhead_bytes": per_slot,
+        "shared_pages": shared_pages,
+        "unique_pages_per_req": unique,
+        "slots_contiguous": n_slots,
+        "slots_paged": slots_paged,
+        "slot_ratio": slots_paged / max(n_slots, 1),
+        "dedup_ratio_model": dedup,
+    }
 
 
 def decode_cp_combine_bytes(cfg: ModelConfig, batch: int,

@@ -120,6 +120,36 @@ def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
     }
 
 
+class PagedLayout(NamedTuple):
+    """Static description of a paged cache: fixed-size pages in a shared
+    pool, per-slot page tables.  Page 0 is the reserved garbage sink —
+    writes through unmapped table rows land there and reads mask them out
+    via kpos — so allocators hand out pages 1..n_pages-1."""
+    page_size: int
+    n_pages: int
+
+
+def init_paged_kv_cache(batch: int, cache_len: int, n_kv_heads: int,
+                        head_dim: int, *, page_size: int, n_pages: int,
+                        dtype=jnp.bfloat16) -> dict:
+    """Paged cache for one attention layer: a shared page pool ``kp``/``vp``
+    (n_pages, page_size, Hkv, D) plus a per-slot page table ``pt``
+    (batch, cache_len // page_size) int32 (-1 = unmapped).  The logical
+    per-slot length is exactly ``cache_len``, so ``cache_len`` must divide
+    into whole pages — the dense gathered view then has the contiguous
+    layout's shapes bit-for-bit."""
+    if cache_len % page_size:
+        raise ValueError(f"cache_len {cache_len} must be a multiple of "
+                         f"page_size {page_size} (whole-page slots)")
+    max_pages = cache_len // page_size
+    return {
+        "kp": jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
+        "vp": jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
+        "pt": jnp.full((batch, max_pages), -1, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
 def _decode_cp_rule(cache_len: int) -> Optional[dict]:
     """The active ``decode_cp`` rule when it actually owns this cache's
     sequence dim (divisible into one slice per shard), else None."""
@@ -212,6 +242,33 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
         k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
 
+    if "kp" in cache:
+        # paged layout: write through the page table, read through the
+        # page-gathered dispatch arm.  Linear caches only — a rotating
+        # window has no reusable prefix, so ring layers stay contiguous.
+        if window is not None:
+            raise ValueError("paged KV caches do not support sliding "
+                             "windows; keep ring layers contiguous")
+        ps = cache["kp"].shape[1]
+        cache_len = cache["pt"].shape[1] * ps
+        pt = cache["pt"]
+        pidx = pos // ps
+        off = pos % ps
+        if per_slot:
+            page = pt[jnp.arange(b), pidx]             # (B,)
+        else:
+            page = pt[:, pidx]                         # (B,) scalar col
+        # unmapped rows write the page-0 garbage sink; kpos masks them
+        page_w = jnp.maximum(page, 0)
+        kp = cache["kp"].at[page_w, off].set(k[:, 0].astype(cache["kp"].dtype))
+        vp = cache["vp"].at[page_w, off].set(v[:, 0].astype(cache["vp"].dtype))
+        new_cache = {"kp": kp, "vp": vp, "pt": pt,
+                     "index": jnp.max(pos) + 1}
+        o = dispatch.decode_attention_paged(q[:, 0], kp, vp, pt, pos,
+                                            length=cache_len,
+                                            backend=backend)[:, None]
+        return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
+
     cache_len = cache["k"].shape[1]
     # full cache: slot == pos (pos < cache_len); ring cache: wrap around.
     slot = pos % cache_len
@@ -286,6 +343,42 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
         rd = getattr(cfg, "rotary_dim", None)
         q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
         k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
+
+    if "kp" in cache:
+        if window is not None:
+            raise ValueError("paged KV caches do not support sliding "
+                             "windows; keep ring layers contiguous")
+        ps = cache["kp"].shape[1]
+        cache_len = cache["pt"].shape[1] * ps
+        if pos0 + c > cache_len:
+            raise ValueError(
+                f"prefill chunk [{pos0}, {pos0 + c}) overflows the "
+                f"{cache_len}-slot paged cache; chunk the prompt to fit")
+        pt = cache["pt"]
+        positions = pos0 + jnp.arange(c)               # (C,)
+        pi = positions // ps
+        offs = positions % ps
+        pages = pt[:, pi]                              # (B, C)
+        end = jnp.full((b,), pos0 + c, jnp.int32) if true_len is None \
+            else jnp.minimum(pos0 + c, true_len.astype(jnp.int32))
+        # mask BOTH unmapped pages and padding positions >= true_len: a
+        # right-padded row must not clobber a shared page another slot's
+        # real tokens (or decode output) live in — invalid writes land in
+        # the page-0 sink instead
+        valid = (positions[None, :] < end[:, None]) & (pages > 0)
+        page_w = jnp.where(valid, pages, 0)
+        kp = cache["kp"].at[page_w, offs[None, :]].set(
+            k.astype(cache["kp"].dtype))
+        vp = cache["vp"].at[page_w, offs[None, :]].set(
+            v.astype(cache["vp"].dtype))
+        new_cache = {"kp": kp, "vp": vp, "pt": pt,
+                     "index": jnp.asarray(pos0 + c, jnp.int32)}
+        # key stream: the PRE-write pool holds the prefix [0, pos0) —
+        # the chunk's own K/V ride alongside as dense tensors
+        o = dispatch.flash_attention_append_paged(
+            q, cache["kp"], cache["vp"], pt, k, v, pos0=pos0,
+            backend=backend)
+        return cm.linear(params["wo"], o.reshape(b, c, n_h * hd)), new_cache
 
     cache_len = cache["k"].shape[1]
     if window is None:

@@ -122,8 +122,16 @@ def _apply_block_train(cfg: ModelConfig, kind: str, p: Params, x, cos, sin,
 
 
 def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
-                 dtype) -> Params:
+                 dtype, paged=None) -> Params:
     if kind == "attn":
+        if paged is not None:
+            # shared page pool + per-slot page table; ring layers below
+            # keep contiguous caches (a rotating window has no reusable
+            # prefix to share)
+            return attn.init_paged_kv_cache(
+                batch, cache_len, cfg.n_kv_heads, cfg.hd,
+                page_size=paged.page_size, n_pages=paged.n_pages,
+                dtype=dtype)
         return attn.init_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.hd,
                                   dtype)
     if kind == "attn_local":
@@ -358,12 +366,16 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16) -> Params:
+               dtype=jnp.bfloat16, paged=None) -> Params:
+    """``paged`` — an ``attention.PagedLayout`` switches every global
+    (kind == "attn") layer to the page-pool layout; sliding-window and
+    recurrent layers keep their contiguous/recurrent state either way."""
     if cfg.is_encdec:
         from repro.models import encdec
         return encdec.init_cache(cfg, batch, cache_len, dtype)
     kinds = cfg.layer_kinds()
-    caches = [_block_cache(cfg, k, batch, cache_len, dtype) for k in kinds]
+    caches = [_block_cache(cfg, k, batch, cache_len, dtype, paged)
+              for k in kinds]
     cache: Dict[str, Any] = {}
     if _use_scan(cfg):
         cyc = len(cfg.block_cycle)

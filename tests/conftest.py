@@ -1,0 +1,18 @@
+"""Shared pytest plumbing.
+
+The full suite runs hundreds of XLA:CPU compilations in one process;
+letting the jit/compile caches accumulate across all modules eventually
+segfaults inside ``backend_compile`` (reproducible on the pristine seed
+tree too — it is a jaxlib compile-state accumulation issue, not a test
+bug).  Dropping the caches at module boundaries keeps per-process
+compile state bounded; each module pays its own (re)traces, which it
+would also pay when run alone.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

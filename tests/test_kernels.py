@@ -3,6 +3,8 @@
 ``backend="pallas"`` pins the dispatch layer to the bare kernels — on this
 CPU suite auto dispatch would (correctly) resolve to jnp, which is covered
 separately in test_dispatch_mesh.py."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -219,22 +221,21 @@ def test_flash_bwd_skips_fully_masked_tiles():
                                    atol=2e-2, rtol=2e-2, err_msg=name)
 
 
-def test_ops_shim_warns_and_reexports():
-    """kernels.ops is a deprecation shim: importing it warns, and the
-    historical names still resolve to the dispatch entry points."""
+def test_ops_shim_is_gone_and_lint_passes():
+    """kernels.ops served one deprecation cycle and is deleted; the tree
+    must not import it (enforced in CI by tools/check_no_ops_import.py,
+    invoked here so the lint is also a tier-1 test)."""
     import importlib
+    import subprocess
     import sys
-    import warnings
-    sys.modules.pop("repro.kernels.ops", None)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        ops = importlib.import_module("repro.kernels.ops")
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    assert ops.flash_attention is dispatch.flash_attention
-    assert ops.decode_attention is dispatch.decode_attention
-    assert ops.flash_attention_append is dispatch.flash_attention_append
-    assert ops.rmsnorm is dispatch.rmsnorm
-    assert ops.rmsprop_update is dispatch.rmsprop_update
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.kernels.ops")  # lint: allow-ops-ref
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tools",
+                                      "check_no_ops_import.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
 
 
 @pytest.mark.parametrize("shape", [(64, 256), (2, 16, 128)])

@@ -68,6 +68,39 @@ def test_cache_shardings_batch1_context_parallel():
     assert spec[2] == ("data", "model")
 
 
+def test_cache_shardings_paged_pool():
+    """Paged pool leaves: batch-sharded serving puts Hkv on 'model' (same
+    dim the gathered dense view shards); batch=1 context parallelism puts
+    the PAGE dim on the seq axes (whole 128-row pages per shard); page
+    tables replicate (they are gather/scatter indices)."""
+    from repro.models import attention as attn
+    from repro.models import model as M
+
+    cfg = get_config("qwen2-72b")
+    layout = attn.PagedLayout(page_size=128, n_pages=256)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, 16, 4096, dtype=jnp.bfloat16,
+                             paged=layout))
+    flat = {str(path[-1].key): s for path, s in
+            jax.tree_util.tree_flatten_with_path(
+                sharding.cache_shardings(cfg, MESH, cache,
+                                         batch_size=256))[0]}
+    off = 1 if len(cfg.layer_kinds()) > 1 else 0
+    kp = tuple(flat["kp"].spec)
+    assert kp[off + 2] is None or kp[off + 2] == "model"
+    assert kp[off + 0] is None                     # pages whole, batch path
+    assert tuple(flat["pt"].spec) == ()            # replicated indices
+
+    # batch=1: the page dim takes the seq axes (256 pages % 256 mesh == 0)
+    flat1 = {str(path[-1].key): s for path, s in
+             jax.tree_util.tree_flatten_with_path(
+                 sharding.cache_shardings(cfg, MESH, cache,
+                                          batch_size=1))[0]}
+    kp1 = tuple(flat1["kp"].spec)
+    assert kp1[off + 0] == ("data", "model")
+    assert tuple(flat1["pt"].spec) == ()
+
+
 def test_activation_rules_gqa_fallback():
     cfg = get_config("qwen2-72b")     # kv=8 < model=16
     rules = sharding.activation_rules(MESH, batch_size=256, cfg=cfg)

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Lint: fail if anything in the tree imports the deleted kernels.ops shim.
+
+``repro.kernels.ops`` was a deprecation shim over ``repro.kernels.dispatch``
+(PR 5); after one full cycle it is deleted.  This walks every tracked
+Python file and flags any import of the old module so it cannot grow back:
+
+    python tools/check_no_ops_import.py
+
+Exit 0 when clean, 1 with a file:line listing otherwise.  Runs as a CI
+step and from tests/test_kernels.py so it is also a tier-1 test.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SELF = os.path.abspath(__file__)
+
+# any spelling of the import: "import repro.kernels.ops",
+# "from repro.kernels import ops", "from repro.kernels.ops import ...",
+# "from .kernels import ops", "from . import ops" inside kernels/
+PATTERNS = (
+    re.compile(r"^\s*import\s+repro\.kernels\.ops\b"),
+    re.compile(r"^\s*from\s+repro\.kernels\.ops\s+import\b"),
+    re.compile(r"^\s*from\s+repro\.kernels\s+import\s+.*\bops\b"),
+    re.compile(r"^\s*from\s+\.kernels\s+import\s+.*\bops\b"),
+    re.compile(r"[\"']repro\.kernels\.ops[\"']"),
+)
+KERNELS_LOCAL = re.compile(r"^\s*from\s+\.\s+import\s+.*\bops\b")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "results"}
+
+
+def scan(path: str) -> list:
+    hits = []
+    in_kernels = os.sep + os.path.join("kernels", "") in path + os.sep \
+        and os.path.basename(os.path.dirname(path)) == "kernels"
+    with open(path, encoding="utf-8", errors="replace") as f:
+        for ln, line in enumerate(f, 1):
+            if "lint: allow-ops-ref" in line:
+                continue          # e.g. the test asserting the import FAILS
+            pats = PATTERNS + ((KERNELS_LOCAL,) if in_kernels else ())
+            if any(p.search(line) for p in pats):
+                hits.append((path, ln, line.rstrip()))
+    return hits
+
+
+def main() -> int:
+    shim = os.path.join(ROOT, "src", "repro", "kernels", "ops.py")
+    hits = []
+    if os.path.exists(shim):
+        hits.append((shim, 0, "shim file still exists"))
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            if os.path.abspath(path) == SELF:
+                continue
+            hits += scan(path)
+    if hits:
+        print("kernels.ops is deleted; update these to "
+              "repro.kernels.dispatch:")
+        for path, ln, line in hits:
+            print(f"  {os.path.relpath(path, ROOT)}:{ln}: {line}")
+        return 1
+    print("ok: no kernels.ops imports")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
