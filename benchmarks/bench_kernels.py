@@ -120,6 +120,32 @@ def run() -> list:
                                 f"backend={d.backend if d else '?'} "
                                 f"tok_s={b * 1e6 / us_dcp:.1f}"})
 
+    # decode cache-dtype sweep through auto dispatch: measured tok/s next
+    # to the analytic cache bytes each decoded token streams (the int8
+    # win is the bytes column — off-TPU the jnp arm dequantizes up front,
+    # so the wall-time ratio is indicative, the bytes ratio is the
+    # roofline term).  int8 rows carry the f32 scale reads too.
+    from repro.kernels import kv_quant
+    hd = qd.shape[-1]
+    for kvname in ("f32", "int8"):
+        if kvname == "int8":
+            k8, ksc = kv_quant.quantize(kc)
+            v8, vsc = kv_quant.quantize(vc)
+            fn = jax.jit(lambda q, k, v, kp, p, ks, vs:
+                         dispatch.decode_attention(q, k, v, kp, p,
+                                                   k_scale=ks, v_scale=vs))
+            us_kv = common.timed(fn, qd, k8, v8, kpos, pos, ksc, vsc,
+                                 iters=3)
+            cache_b = 2 * b * L * hkv * (hd + 4)
+        else:
+            fn = jax.jit(lambda q, k, v, kp, p:
+                         dispatch.decode_attention(q, k, v, kp, p))
+            us_kv = common.timed(fn, qd, kc, vc, kpos, pos, iters=3)
+            cache_b = 2 * b * L * hkv * hd * 4
+        rows.append({"name": f"decode_kv_{kvname}", "us_per_call": us_kv,
+                     "derived": f"L={L} tok_s={b * 1e6 / us_kv:.1f} "
+                                f"cache_B_tok={cache_b}"})
+
     # fused rmsprop (jnp ref — the pallas path is interpret-mode on CPU)
     g = jnp.abs(jax.random.normal(ks[0], (1024, 1024)))
     dg = jax.random.normal(ks[1], (1024, 1024))

@@ -201,6 +201,7 @@ def run(*, arch: str = "stablelm-1.6b", demo: bool = True) -> list:
     record = {
         "arch": cfg.name,
         "platform": jax.default_backend(),
+        "provenance": common.provenance(),
         "note": ("fused_append numbers ride the Pallas append kernel on "
                  "TPU; off-TPU auto dispatch serves the jnp append "
                  "oracle (Pallas runs interpret-only there), so the "

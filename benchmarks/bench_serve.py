@@ -236,6 +236,68 @@ def bench_paged_sharing(cfg, params, *, n_slots: int, n_requests: int,
     return rows, record
 
 
+def bench_kv_dtypes(cfg, params, *, n_slots: int, n_requests: int,
+                    seed: int) -> tuple:
+    """The same greedy paged trace with an f32 and an int8 KV cache, side
+    by side: measured tok/s next to the analytic decode bytes/token, and
+    the capacity model's slot count per dtype on the identical bf16
+    contiguous HBM budget.  Fresh trace objects per run (Request.tokens
+    accumulates in place across runs).  Returns (rows, record) — the
+    record lands in BENCH_serve.json as the ``kv_dtype`` section."""
+    from repro.launch import serve as serve_mod
+    from repro.launch import traffic
+
+    rows, recs, first = [], {}, {}
+    for kv in ("f32", "int8"):
+        trace = serve_mod.gen_trace(
+            n_requests, vocab=cfg.vocab_size, prompt_range=(16, 64),
+            gen_range=(4, 32), arrival_rate=0.0, seed=seed)
+        recs[kv] = serve_mod.run_engine(
+            cfg, params, trace, n_slots=n_slots, cache_len=256, chunk=64,
+            sample=False, seed=seed, prefix_cache=True, kv_dtype=kv)
+        first[kv] = [int(r.tokens[0]) for r in trace if r.tokens]
+    match = float(np.mean([a == b for a, b in
+                           zip(first["f32"], first["int8"])]))
+    caps = {kv: traffic.paged_capacity(
+        cfg, n_slots=n_slots, cache_len=1024, page_size=128,
+        resident_tokens_per_req=256, shared_tokens=128, kv_dtype=kv)
+        for kv in ("f32", "bf16", "int8")}
+    dtype_rows = []
+    for kv in ("f32", "int8"):
+        rec = recs[kv]
+        # contiguous-equivalent analytic stream (params + cache incl.
+        # scales) — the roofline denominator next to the measured rate
+        bpt = traffic.decode_bytes_per_token(cfg, n_slots, 256,
+                                             kv_dtype=kv)
+        dtype_rows.append({
+            "kv_dtype": kv,
+            "tokens_per_s": rec["tokens_per_s"],
+            "decode_bytes_per_token": bpt,
+            "slots_on_same_budget": caps[kv]["slots_paged"],
+        })
+        rows.append({
+            "name": f"serve_kv_{kv}",
+            "us_per_call": rec["wall_s"] * 1e6,
+            "derived": f"tok_s={rec['tokens_per_s']} "
+                       f"decode_B_tok={bpt:.3e} "
+                       f"slots_on_same_budget={caps[kv]['slots_paged']}"})
+    ratio = caps["int8"]["slots_paged"] / max(caps["f32"]["slots_paged"], 1)
+    rows.append({
+        "name": "kv_dtype_capacity", "us_per_call": 0.0,
+        "derived": f"slots f32={caps['f32']['slots_paged']} "
+                   f"bf16={caps['bf16']['slots_paged']} "
+                   f"int8={caps['int8']['slots_paged']} "
+                   f"(int8/f32={ratio:.2f}x) "
+                   f"first_tok_match={match:.2f}"})
+    record = {
+        "rows": dtype_rows,
+        "first_token_match_int8_vs_f32": match,
+        "int8_vs_f32_slot_ratio": ratio,
+        "capacity_model_per_dtype": {k: caps[k] for k in caps},
+    }
+    return rows, record
+
+
 def run(*, arch: str = "stablelm-1.6b", prompt_len: int = 128,
         chunk: int = 128, n_slots: int = 4, n_requests: int = 24,
         seed: int = 0) -> list:
@@ -256,6 +318,11 @@ def run(*, arch: str = "stablelm-1.6b", prompt_len: int = 128,
     sh_rows, record = bench_paged_sharing(cfg, params, n_slots=n_slots,
                                           n_requests=12, seed=seed)
     rows += sh_rows
+    kv_rows, kv_record = bench_kv_dtypes(cfg, params, n_slots=n_slots,
+                                         n_requests=8, seed=seed)
+    rows += kv_rows
+    record["kv_dtype"] = kv_record
+    record["provenance"] = common.provenance()
     common.save_rows("serve_engine", rows)
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=1)

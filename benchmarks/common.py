@@ -11,6 +11,26 @@ from typing import Any, Dict, List
 import jax
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def provenance() -> Dict[str, Any]:
+    """Environment stamp for every root BENCH_*.json artifact, so the
+    per-PR perf trajectory rows are attributable: which commit, which jax,
+    which backend produced the number."""
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=REPO_ROOT, timeout=10).stdout.strip() or None
+    except Exception:  # noqa: BLE001 — no git is a degraded stamp, not a crash
+        sha = None
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+    }
 
 
 def save_rows(name: str, rows: List[Dict[str, Any]]) -> str:

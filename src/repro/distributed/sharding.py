@@ -442,8 +442,9 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
         off = 1 if (stacked and ps.startswith("layers")) else 0
         if leaf.ndim == 0 or ps.endswith("index"):
             return NamedSharding(mesh, P())
-        if re.search(r"/(kp|vp)$", ps) and leaf.ndim >= 4:
-            # paged pool (P, page_size, Hkv, hd) [+leading stack dim]: no
+        if re.search(r"/(kp|vp|kps|vps)$", ps) and leaf.ndim >= 4:
+            # paged pool (P, page_size, Hkv, hd) [+leading stack dim] and
+            # its rank-matched scale pools (P, page_size, Hkv, 1): no
             # batch dim to give the data axes.  Replicated-cache layout:
             # heads on 'model' (the same dim the gathered dense view
             # shards); context-parallel layout: the page dim takes the seq
@@ -467,8 +468,10 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_tree,
         if re.search(r"/pt$", ps):
             # page tables are gather/scatter indices — replicate
             return NamedSharding(mesh, P())
-        if re.search(r"/(k|v)$", ps) and leaf.ndim >= 4:
-            # (B, L, Hkv, hd) [+leading stack dim]
+        if re.search(r"/(k|v|ks|vs)$", ps) and leaf.ndim >= 4:
+            # (B, L, Hkv, hd) [+leading stack dim]; int8 caches carry
+            # rank-matched scale leaves (B, L, Hkv, 1) that take the same
+            # (batch, seq) spec — the trailing singleton stays unsharded
             cache_len = leaf.shape[off + 1]
             seq = seq_ax
             # guard divisibility of the seq dim

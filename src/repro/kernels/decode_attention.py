@@ -40,7 +40,10 @@ NEG = -1e30
 
 
 def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, *refs,
-            block_k: int, n_k: int, scale: float, partials: bool):
+            block_k: int, n_k: int, scale: float, partials: bool,
+            quant: bool):
+    if quant:
+        ks_ref, vs_ref, *refs = refs
     if partials:
         acc_out_ref, m_out_ref, l_out_ref, m_ref, l_ref, acc_ref = refs
     else:
@@ -56,6 +59,11 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref, *refs,
     q = q_ref[0, 0]                         # (G, D)
     k = k_ref[0, :, 0, :]                   # (bk, D)
     v = v_ref[0, :, 0, :]                   # (bk, D)
+    if quant:
+        # dequant in VMEM: the HBM stream stays int8, the per-(row, head)
+        # f32 scales ((bk, 1) blocks) broadcast over the lane dim
+        k = k.astype(jnp.float32) * ks_ref[0, :, 0, :]
+        v = v.astype(jnp.float32) * vs_ref[0, :, 0, :]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     kpos = kpos_ref[0, :]                   # (bk,) — this row's slot map
@@ -100,7 +108,7 @@ def _per_slot(kpos, pos, batch: int):
 
 
 def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
-          interpret: Optional[bool]):
+          interpret: Optional[bool], k_scale=None, v_scale=None):
     b, hq, d = q.shape
     length = k_cache.shape[1]
     hkv = k_cache.shape[2]
@@ -108,6 +116,7 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
     bk = min(block_k, length)
     assert length % bk == 0
     n_k = length // bk
+    quant = k_scale is not None
     kpos, pos = _per_slot(kpos, pos, b)
     if interpret is None:
         # resolve from the lowering target like the dispatch layer does for
@@ -118,7 +127,7 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
 
     qg = q.reshape(b, hkv, g, d)
     kern = functools.partial(_kernel, block_k=bk, n_k=n_k, scale=d ** -0.5,
-                             partials=partials)
+                             partials=partials, quant=quant)
     blk4 = pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0))
     blk3 = pl.BlockSpec((1, 1, g), lambda b_, h, ik: (b_, h, 0))
     if partials:
@@ -129,16 +138,26 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
     else:
         out_specs = blk4
         out_shape = jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),   # pos (B,)
+        pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0)),
+        pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
+        pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
+        pl.BlockSpec((1, bk), lambda b_, h, ik: (b_, ik)),
+    ]
+    operands = [pos.astype(jnp.int32), qg, k_cache, v_cache, kpos]
+    if quant:
+        # per-(row, head) f32 scales (B, L, Hkv, 1) ride next to the caches
+        in_specs += [
+            pl.BlockSpec((1, bk, 1, 1), lambda b_, h, ik: (b_, ik, h, 0)),
+            pl.BlockSpec((1, bk, 1, 1), lambda b_, h, ik: (b_, ik, h, 0)),
+        ]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     return pl.pallas_call(
         kern,
         grid=(b, hkv, n_k),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # pos (B,)
-            pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda b_, h, ik: (b_, ik, h, 0)),
-            pl.BlockSpec((1, bk), lambda b_, h, ik: (b_, ik)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
@@ -149,23 +168,30 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(pos.astype(jnp.int32), qg, k_cache, v_cache, kpos)
+    )(*operands)
 
 
 def decode_attention_fwd(q, k_cache, v_cache, kpos, pos, *,
                          block_k: int = 1024,
-                         interpret: Optional[bool] = None) -> jnp.ndarray:
+                         interpret: Optional[bool] = None,
+                         k_scale=None, v_scale=None) -> jnp.ndarray:
     """q (B,Hq,D); caches (B,L,Hkv,D); kpos (B,L) [or (L,) lockstep];
-    pos (B,) [or () lockstep] -> (B,Hq,D)."""
+    pos (B,) [or () lockstep] -> (B,Hq,D).
+
+    With ``k_scale``/``v_scale`` ((B, L, Hkv, 1) f32) the caches are int8
+    and dequantized inside the kernel body (VMEM), so HBM traffic stays
+    int8."""
     b, hq, d = q.shape
     out = _call(q, k_cache, v_cache, kpos, pos, block_k=block_k,
-                partials=False, interpret=interpret)
+                partials=False, interpret=interpret,
+                k_scale=k_scale, v_scale=v_scale)
     return out.reshape(b, hq, d)
 
 
 def decode_attention_partials(q, k_cache, v_cache, kpos, pos, *,
                               block_k: int = 1024,
-                              interpret: Optional[bool] = None):
+                              interpret: Optional[bool] = None,
+                              k_scale=None, v_scale=None):
     """Flash-decoding partials over a (local) cache slice.
 
     Same shapes as ``decode_attention_fwd`` but returns the unnormalized
@@ -174,5 +200,6 @@ def decode_attention_partials(q, k_cache, v_cache, kpos, pos, *,
     ``o = psum(acc * exp(m - pmax(m))) / psum(l * exp(m - pmax(m)))``.
     """
     acc, m, l = _call(q, k_cache, v_cache, kpos, pos, block_k=block_k,
-                      partials=True, interpret=interpret)
+                      partials=True, interpret=interpret,
+                      k_scale=k_scale, v_scale=v_scale)
     return acc, m, l

@@ -140,6 +140,25 @@ def decision_summary() -> list:
             for (op, be, rs), n in sorted(counts.items())]
 
 
+def _quant_note(decision: Decision, quant: bool) -> Decision:
+    """Amend the just-logged decision row with the int8-cache marker.
+
+    Quantization does not change routing — every arm (bare pallas,
+    shard_map, pallas_cp, paged delegates, jnp fallback) handles the int8
+    cache — so the resolvers stay dtype-blind and the row's *reason* gains
+    a suffix saying how the arm consumes the quantized bytes."""
+    if not quant:
+        return decision
+    suffix = ("; int8 kv dequantized for jnp fallback"
+              if decision.backend == "jnp"
+              else "; int8 kv dequant-in-kernel")
+    amended = decision._replace(reason=decision.reason + suffix)
+    with _LOG_LOCK:
+        if _log and _log[-1] == decision:
+            _log[-1] = amended
+    return amended
+
+
 def _mesh_for_dispatch():
     """(mesh, platform) of the lowering target; mesh None when dispatch
     should treat the run as single-device."""
@@ -320,22 +339,29 @@ def flash_attention(q, k, v, *, causal: bool = True,
 @functools.partial(jax.jit, static_argnames=("pos0", "window",
                                              "kpos_linear", "shard",
                                              "interpret"))
-def _append_call(q, k, v, kpos, pos0, window, kpos_linear, shard,
+def _append_call(q, k, v, kpos, ks, vs, pos0, window, kpos_linear, shard,
                  interpret):
-    def call(q, k, v, kpos):
+    def call(q, k, v, kpos, ks=None, vs=None):
         bq = _flash_blocks(q.shape[1])
         bk = _flash_blocks(k.shape[1])
         return flash_attention_append_fwd(q, k, v, kpos, pos0=pos0,
                                           window=window, block_q=bq,
                                           block_k=bk,
                                           kpos_linear=kpos_linear,
-                                          interpret=interpret)
+                                          interpret=interpret,
+                                          k_scale=ks, v_scale=vs)
     if shard is None:
-        return call(q, k, v, kpos)
+        return call(q, k, v, kpos, ks, vs)
+    base = (shard.qo, shard.kv, shard.kv, shard.kpos_decode)
+    if ks is None:
+        return shard_map(call, mesh=shard.mesh, in_specs=base,
+                         out_specs=shard.qo, check_rep=False)(q, k, v, kpos)
+    # the rank-4 scale tensors (B, Sk, Hkv, 1) shard exactly like the
+    # caches they annotate
     return shard_map(call, mesh=shard.mesh,
-                     in_specs=(shard.qo, shard.kv, shard.kv,
-                               shard.kpos_decode),
-                     out_specs=shard.qo, check_rep=False)(q, k, v, kpos)
+                     in_specs=base + (shard.kv, shard.kv),
+                     out_specs=shard.qo,
+                     check_rep=False)(q, k, v, kpos, ks, vs)
 
 
 def _append_dense(q, k, v, kpos, pos0, window):
@@ -420,6 +446,7 @@ def _resolve_append(b: int, c: int, sk: int, hq: int, hkv: int,
 def flash_attention_append(q, k, v, kpos, *, pos0: int,
                            window: Optional[int] = None,
                            kpos_linear: bool = False,
+                           k_scale=None, v_scale=None,
                            backend: str = "auto") -> jnp.ndarray:
     """Append-mode flash attention for chunked prefill.
 
@@ -430,25 +457,37 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
 
     ``kpos_linear`` asserts key row index == absolute position wherever
     valid (full linear caches) and enables the ``tile_live`` prefix-tile
-    skip; ring (rotated) layouts must leave it False.  Serving-only:
-    forward, no VJP.  Under a mesh the kernel shard_maps over
-    (batch, heads) with the same ``AttnShardSpec`` the train/decode
-    kernels use (kpos batch-sharded with q)."""
+    skip; ring (rotated) layouts must leave it False.  With
+    ``k_scale``/``v_scale`` ((B,Sk,Hkv,1) f32) the key stream is int8 and
+    dequantized inside the kernel (jnp fallbacks dequantize up front) —
+    same routing rules, annotated decision rows.  Serving-only: forward,
+    no VJP.  Under a mesh the kernel shard_maps over (batch, heads) with
+    the same ``AttnShardSpec`` the train/decode kernels use (kpos
+    batch-sharded with q, scales sharded like the caches)."""
     assert backend in _BACKENDS, backend
+    quant = k_scale is not None
     b, c, hq, _ = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     if kpos.ndim == 1:
         kpos = jnp.broadcast_to(kpos, (b, sk))
     decision, shard, interpret = _resolve_append(b, c, sk, hq, hkv, pos0,
                                                  backend)
+    decision = _quant_note(decision, quant)
     if decision.backend == "jnp":
         if backend == "pallas":     # sub-kernel smoke shape: keep the
+            if quant:               # naive oracle
+                return ref.flash_attention_append_quant_ref(
+                    q, k, v, k_scale, v_scale, kpos, pos0=pos0,
+                    window=window)
             return ref.flash_attention_append_ref(q, k, v, kpos,
                                                   pos0=pos0,
-                                                  window=window)  # oracle
+                                                  window=window)
+        if quant:
+            k = ref.dequant_ref(k, k_scale, q.dtype)
+            v = ref.dequant_ref(v, v_scale, q.dtype)
         return _append_dense(q, k, v, kpos, pos0, window)
-    return _append_call(q, k, v, kpos, pos0, window, kpos_linear, shard,
-                        interpret)
+    return _append_call(q, k, v, kpos, k_scale, v_scale, pos0, window,
+                        kpos_linear, shard, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -456,25 +495,34 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("shard", "interpret"))
-def _decode_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
-    def call(q, kc, vc, kpos, pos):
+def _decode_call(q, k_cache, v_cache, kpos, pos, ks, vs, shard, interpret):
+    def call(q, kc, vc, kpos, pos, ks=None, vs=None):
         length = kc.shape[1]
         bk = min(1024, length)
         while length % bk:
             bk //= 2
         return decode_attention_fwd(q, kc, vc, kpos, pos, block_k=bk,
-                                    interpret=interpret)
+                                    interpret=interpret,
+                                    k_scale=ks, v_scale=vs)
     if shard is None:
-        return call(q, k_cache, v_cache, kpos, pos)
+        return call(q, k_cache, v_cache, kpos, pos, ks, vs)
+    base = (shard.q_decode, shard.kv, shard.kv, shard.kpos_decode,
+            shard.pos_decode)
+    if ks is None:
+        return shard_map(call, mesh=shard.mesh, in_specs=base,
+                         out_specs=shard.q_decode,
+                         check_rep=False)(q, k_cache, v_cache, kpos, pos)
+    # rank-4 scales (B, L, Hkv, 1) shard exactly like the caches
     return shard_map(call, mesh=shard.mesh,
-                     in_specs=(shard.q_decode, shard.kv, shard.kv,
-                               shard.kpos_decode, shard.pos_decode),
+                     in_specs=base + (shard.kv, shard.kv),
                      out_specs=shard.q_decode,
-                     check_rep=False)(q, k_cache, v_cache, kpos, pos)
+                     check_rep=False)(q, k_cache, v_cache, kpos, pos,
+                                      ks, vs)
 
 
 @functools.partial(jax.jit, static_argnames=("shard", "interpret"))
-def _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
+def _decode_cp_call(q, k_cache, v_cache, kpos, pos, ks, vs, shard,
+                    interpret):
     """Context-parallel flash decoding: the cache's sequence dim is sharded
     over ``shard.seq_axes``; each shard runs the partials kernel over its
     slice and the combine is an O(B*Hq*D) psum of (m, l, acc) — the same
@@ -482,13 +530,14 @@ def _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
     by the Pallas kernel."""
     axes = shard.seq_axes
 
-    def call(q, kc, vc, kp, p):
+    def call(q, kc, vc, kp, p, ks=None, vs=None):
         l_loc = kc.shape[1]
         bk = min(1024, l_loc)
         while l_loc % bk:
             bk //= 2
         acc, m, l = decode_attention_partials(q, kc, vc, kp, p, block_k=bk,
-                                              interpret=interpret)
+                                              interpret=interpret,
+                                              k_scale=ks, v_scale=vs)
         m_max = jax.lax.pmax(m, axes)
         corr = jnp.exp(m - m_max)
         l_tot = jax.lax.psum(l * corr, axes)
@@ -497,11 +546,18 @@ def _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard, interpret):
         b, hkv, g, d = acc.shape
         return o.reshape(b, hkv * g, d).astype(q.dtype)
 
+    base = (shard.q_decode, shard.kv, shard.kv, shard.kpos,
+            shard.pos_decode)
+    if ks is None:
+        return shard_map(call, mesh=shard.mesh, in_specs=base,
+                         out_specs=shard.q_decode,
+                         check_rep=False)(q, k_cache, v_cache, kpos, pos)
+    # the seq-sharded cache slice carries its seq-sharded scale slice
     return shard_map(call, mesh=shard.mesh,
-                     in_specs=(shard.q_decode, shard.kv, shard.kv,
-                               shard.kpos, shard.pos_decode),
+                     in_specs=base + (shard.kv, shard.kv),
                      out_specs=shard.q_decode,
-                     check_rep=False)(q, k_cache, v_cache, kpos, pos)
+                     check_rep=False)(q, k_cache, v_cache, kpos, pos,
+                                      ks, vs)
 
 
 def _decode_dense(q, k_cache, v_cache, kpos, pos):
@@ -598,6 +654,7 @@ def _resolve_decode(b: int, length: int, hq: int, hkv: int, backend: str
 
 
 def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
+                     k_scale=None, v_scale=None,
                      backend: str = "auto") -> jnp.ndarray:
     """q (B,Hq,D); caches (B,L,Hkv,D); kpos (B,L); pos (B,) -> (B,Hq,D).
 
@@ -610,8 +667,14 @@ def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
     layout the kernel is shard_mapped over (batch, heads); when the
     ``decode_cp`` rules own the cache's sequence dim it resolves to
     ``pallas_cp`` — the partials kernel per sequence shard plus the
-    flash-decoding psum combine."""
+    flash-decoding psum combine.
+
+    With ``k_scale``/``v_scale`` ((B,L,Hkv,1) f32) the caches are int8;
+    every arm consumes them (dequant inside the kernel bodies, up-front
+    dequant on the jnp fallback) under the same routing rules, with the
+    decision row annotated."""
     assert backend in _BACKENDS, backend
+    quant = k_scale is not None
     b, hq, _ = q.shape
     length, hkv = k_cache.shape[1], k_cache.shape[2]
     if pos is None:
@@ -620,15 +683,23 @@ def decode_attention(q, k_cache, v_cache, kpos, pos=None, *,
     kpos, pos = _per_slot(kpos, pos, b)
     decision, shard, interpret = _resolve_decode(b, length, hq, hkv,
                                                  backend)
+    decision = _quant_note(decision, quant)
     if decision.backend == "jnp":
         if backend == "pallas":     # sub-kernel smoke shape: keep the
+            if quant:               # naive oracle
+                return ref.decode_attention_quant_ref(
+                    q, k_cache, v_cache, k_scale, v_scale, kpos, pos)
             return ref.decode_attention_ref(q, k_cache, v_cache, kpos,
-                                            pos)  # naive oracle
+                                            pos)
+        if quant:
+            k_cache = ref.dequant_ref(k_cache, k_scale, q.dtype)
+            v_cache = ref.dequant_ref(v_cache, v_scale, q.dtype)
         return _decode_dense(q, k_cache, v_cache, kpos, pos)
     if decision.backend == "pallas_cp":
-        return _decode_cp_call(q, k_cache, v_cache, kpos, pos, shard,
-                               interpret)
-    return _decode_call(q, k_cache, v_cache, kpos, pos, shard, interpret)
+        return _decode_cp_call(q, k_cache, v_cache, kpos, pos, k_scale,
+                               v_scale, shard, interpret)
+    return _decode_call(q, k_cache, v_cache, kpos, pos, k_scale, v_scale,
+                        shard, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -660,6 +731,7 @@ def _paged_misalignment(page_size: int) -> Optional[str]:
 
 def decode_attention_paged(q, k_pool, v_pool, page_table, pos, *,
                            length: Optional[int] = None,
+                           k_scale=None, v_scale=None,
                            backend: str = "auto") -> jnp.ndarray:
     """Paged-layout decode.  q (B,Hq,D); pools (P,page_size,Hkv,D);
     page_table (B,M) int32 (-1 = unmapped, 0 = reserved garbage sink);
@@ -669,8 +741,12 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, pos, *,
     cache length (M * page_size may over-cover); passing the contiguous
     layout's cache_len makes the delegated call's shapes — and therefore
     its dispatch decision and reduction order — identical to the
-    contiguous path."""
+    contiguous path.  With ``k_scale``/``v_scale`` ((P,page_size,Hkv,1)
+    f32) the pools are int8; the scale pools are gathered through the
+    same page table and ride into the delegated call — the contiguous
+    quant arms do the rest."""
     assert backend in _BACKENDS, backend
+    quant = k_scale is not None
     ps = k_pool.shape[1]
     m = page_table.shape[1]
     length = m * ps if length is None else length
@@ -679,6 +755,12 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, pos, *,
         why = (f"logical length {length} not MXU-aligned (need a "
                "128-multiple)")
     if why is not None:
+        if quant:
+            _decide("decode_paged", "jnp",
+                    why + "; int8 kv dequantized for jnp fallback")
+            return ref.decode_attention_paged_quant_ref(
+                q, k_pool, v_pool, k_scale, v_scale, page_table, pos,
+                length=length)
         _decide("decode_paged", "jnp", why)
         return ref.decode_attention_paged_ref(q, k_pool, v_pool,
                                               page_table, pos,
@@ -686,15 +768,23 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, pos, *,
     k = ref.paged_gather_ref(k_pool, page_table)[:, :length]
     v = ref.paged_gather_ref(v_pool, page_table)[:, :length]
     kpos = ref.paged_kpos_ref(page_table, ps)[:, :length]
-    o = decode_attention(q, k, v, kpos, pos, backend=backend)
+    ks = vs = None
+    if quant:
+        ks = ref.paged_gather_ref(k_scale, page_table)[:, :length]
+        vs = ref.paged_gather_ref(v_scale, page_table)[:, :length]
+    o = decode_attention(q, k, v, kpos, pos, k_scale=ks, v_scale=vs,
+                         backend=backend)
     inner = last_decision("decode_attention")
     _decide("decode_paged", inner.backend if inner else "jnp",
-            "page-gathered dense view, delegated to decode_attention")
+            "page-gathered dense view, delegated to decode_attention" +
+            ("; int8 pool + scale pool gathered together" if quant else ""))
     return o
 
 
 def flash_attention_append_paged(q, k_pool, v_pool, page_table,
                                  k_chunk, v_chunk, *, pos0: int,
+                                 k_scale=None, v_scale=None,
+                                 ks_chunk=None, vs_chunk=None,
                                  backend: str = "auto") -> jnp.ndarray:
     """Paged-layout append-mode prefill.  q (B,C,Hq,D) at absolute
     positions pos0 + i; pools hold the already-written prefix [0, pos0)
@@ -705,33 +795,58 @@ def flash_attention_append_paged(q, k_pool, v_pool, page_table,
     Linear layouts only (no window: ring caches stay contiguous).  The
     gathered prefix keeps key row index == absolute position wherever
     mapped, so the delegated call runs with ``kpos_linear=True`` and
-    keeps the tile_live prefix-tile skip."""
+    keeps the tile_live prefix-tile skip.
+
+    Quantized pools pass scale pools via ``k_scale``/``v_scale`` and the
+    chunk *already quantized* (int8 chunk + ``ks_chunk``/``vs_chunk``
+    (B,C,Hkv,1)) — the same bytes the caller's cache write lands, so
+    prefill attention and later decode reads see identical dequantized
+    values."""
     assert backend in _BACKENDS, backend
+    quant = k_scale is not None
     ps = k_pool.shape[1]
     b, c = q.shape[0], q.shape[1]
     why = _paged_misalignment(ps)
     if why is not None:
+        if quant:
+            _decide("append_paged", "jnp",
+                    why + "; int8 kv dequantized for jnp fallback")
+            return ref.flash_attention_append_paged_quant_ref(
+                q, k_pool, v_pool, k_scale, v_scale, page_table,
+                k_chunk, v_chunk, ks_chunk, vs_chunk, pos0=pos0)
         _decide("append_paged", "jnp", why)
         return ref.flash_attention_append_paged_ref(
             q, k_pool, v_pool, page_table, k_chunk, v_chunk, pos0=pos0)
+    ks_all = vs_all = None
     if pos0 == 0:
         k_all, v_all = k_chunk, v_chunk
+        ks_all, vs_all = ks_chunk, vs_chunk
         kpos = jnp.arange(c)
     else:
         n_pre = -(-pos0 // ps)
         pt = page_table[:, :n_pre]
-        k_pre = ref.paged_gather_ref(k_pool, pt)[:, :pos0].astype(q.dtype)
-        v_pre = ref.paged_gather_ref(v_pool, pt)[:, :pos0].astype(q.dtype)
+        k_pre = ref.paged_gather_ref(k_pool, pt)[:, :pos0]
+        v_pre = ref.paged_gather_ref(v_pool, pt)[:, :pos0]
+        if not quant:
+            k_pre = k_pre.astype(q.dtype)
+            v_pre = v_pre.astype(q.dtype)
         kpos_pre = ref.paged_kpos_ref(pt, ps)[:, :pos0]
         k_all = jnp.concatenate([k_pre, k_chunk], axis=1)
         v_all = jnp.concatenate([v_pre, v_chunk], axis=1)
         kpos_chunk = jnp.broadcast_to(pos0 + jnp.arange(c), (b, c))
         kpos = jnp.concatenate([kpos_pre, kpos_chunk], axis=1)
+        if quant:
+            ks_pre = ref.paged_gather_ref(k_scale, pt)[:, :pos0]
+            vs_pre = ref.paged_gather_ref(v_scale, pt)[:, :pos0]
+            ks_all = jnp.concatenate([ks_pre, ks_chunk], axis=1)
+            vs_all = jnp.concatenate([vs_pre, vs_chunk], axis=1)
     o = flash_attention_append(q, k_all, v_all, kpos, pos0=pos0,
-                               kpos_linear=True, backend=backend)
+                               kpos_linear=True, k_scale=ks_all,
+                               v_scale=vs_all, backend=backend)
     inner = last_decision("flash_append")
     _decide("append_paged", inner.backend if inner else "jnp",
-            "page-gathered prefix + chunk, delegated to flash_append")
+            "page-gathered prefix + chunk, delegated to flash_append" +
+            ("; int8 pool + scale pool gathered together" if quant else ""))
     return o
 
 

@@ -192,10 +192,12 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
 # append mode (chunked prefill): Sq != Sk with a q-offset grid
 # ---------------------------------------------------------------------------
 
-def _append_kernel(q_ref, k_ref, v_ref, kpos_ref, o_ref, m_ref, l_ref,
-                   acc_ref, *, pos0: int, window: Optional[int],
-                   block_q: int, block_k: int, n_k: int, scale: float,
-                   kpos_linear: bool):
+def _append_kernel(q_ref, k_ref, v_ref, kpos_ref, *refs, pos0: int,
+                   window: Optional[int], block_q: int, block_k: int,
+                   n_k: int, scale: float, kpos_linear: bool, quant: bool):
+    if quant:
+        ks_ref, vs_ref, *refs = refs
+    o_ref, m_ref, l_ref, acc_ref = refs
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -216,6 +218,11 @@ def _append_kernel(q_ref, k_ref, v_ref, kpos_ref, o_ref, m_ref, l_ref,
         q = q_ref[0, 0]                      # (bq, D)
         k = k_ref[0, :, 0, :]                # (bk, D)
         v = v_ref[0, :, 0, :]                # (bk, D)
+        if quant:
+            # dequant in VMEM: the int8 key stream carries per-(row, head)
+            # f32 scales ((bk, 1) blocks) that broadcast over the lane dim
+            k = k.astype(jnp.float32) * ks_ref[0, :, 0, :]
+            v = v.astype(jnp.float32) * vs_ref[0, :, 0, :]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
 
@@ -257,7 +264,8 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
                            window: Optional[int] = None,
                            block_q: int = 512, block_k: int = 512,
                            kpos_linear: bool = False,
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           k_scale=None, v_scale=None):
     """Append-mode flash forward: a prompt chunk against a longer key
     stream (the KV-cache prefix plus the chunk itself).
 
@@ -266,8 +274,10 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
     absolute position held by each key row (-1 = invalid).  Returns
     (B, C, Hq, D).  The q and kv grid dimensions are decoupled
     (``n_q = C/bq``, ``n_k = Sk/bk``), so Sq != Sk is in-grid; causal and
-    sliding-window masks evaluate on absolute positions.  Serving-only:
-    no residuals, no backward."""
+    sliding-window masks evaluate on absolute positions.  With
+    ``k_scale``/``v_scale`` ((B, Sk, Hkv, 1) f32) the key stream is int8
+    and dequantized inside the kernel body.  Serving-only: no residuals,
+    no backward."""
     b, c, hq, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
@@ -275,6 +285,7 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
     bk = min(block_k, sk)
     assert c % bq == 0 and sk % bk == 0, (c, sk, bq, bk)
     n_q, n_k = c // bq, sk // bk
+    quant = k_scale is not None
     if kpos.ndim == 1:
         kpos = jnp.broadcast_to(kpos, (b, sk))
     if interpret is None:
@@ -282,19 +293,30 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
 
     kern = functools.partial(
         _append_kernel, pos0=pos0, window=window, block_q=bq, block_k=bk,
-        n_k=n_k, scale=d ** -0.5, kpos_linear=kpos_linear)
+        n_k=n_k, scale=d ** -0.5, kpos_linear=kpos_linear, quant=quant)
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d),
+                     lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        pl.BlockSpec((1, bk, 1, d),
+                     lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+        pl.BlockSpec((1, bk, 1, d),
+                     lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+        pl.BlockSpec((1, bk), lambda b_, h, iq, ik: (b_, ik)),
+    ]
+    operands = [jnp.moveaxis(q, 1, 2), k, v, kpos.astype(jnp.int32)]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, bk, 1, 1),
+                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, 1),
+                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
+        ]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     out = pl.pallas_call(
         kern,
         grid=(b, hq, n_q, n_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d),
-                         lambda b_, h, iq, ik: (b_, h, iq, 0)),
-            pl.BlockSpec((1, bk, 1, d),
-                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
-            pl.BlockSpec((1, bk, 1, d),
-                         lambda b_, h, iq, ik, g=g: (b_, ik, h // g, 0)),
-            pl.BlockSpec((1, bk), lambda b_, h, iq, ik: (b_, ik)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, d),
                                lambda b_, h, iq, ik: (b_, h, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hq, c, d), q.dtype),
@@ -307,5 +329,5 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(jnp.moveaxis(q, 1, 2), k, v, kpos.astype(jnp.int32))
+    )(*operands)
     return out.swapaxes(1, 2)

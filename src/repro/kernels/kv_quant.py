@@ -1,0 +1,79 @@
+"""Symmetric int8 KV-cache quantization: the canonical quant/dequant pair.
+
+Decode at serving scale is HBM-bound on cache reads — every generated
+token streams the whole KV prefix — so an int8 cache halves the pool
+bytes and roughly doubles the slots a fixed HBM budget sustains (the
+capacity model in ``launch/traffic.py``).  One quantization scheme is
+used everywhere (model-layer writes, kernel-body dequant, jnp oracles):
+
+  * **Granularity**: per-(cache row, kv head) symmetric absmax.  Each
+    written row ``(…, Hkv, D)`` carries an f32 scale ``(…, Hkv, 1)`` —
+    in the paged layout that is per (page, in-page offset, head), stored
+    alongside the pool and sharded like it.  Row granularity is what
+    makes quantize-on-write O(new token) (a per-page scale would need a
+    whole-page rescan every decode write) and keeps garbage rows — the
+    page-0 sink, unwritten slots — from poisoning any live row's scale.
+  * **Zero init is safe**: unwritten rows hold scale 0, so dequant
+    yields exact zeros; kpos masks them out of the softmax anyway.
+  * **Scales are rank-matched** to their payload with a trailing
+    singleton (``(B, L, Hkv, 1)`` next to ``(B, L, Hkv, D)``), so every
+    layout-level treatment of a K/V leaf — sharding specs, page COW
+    copies, admission scatters — applies to the scale leaf verbatim.
+
+``quantize`` is the single write-side entry point and ``dequantize`` the
+single read-side one; the Pallas kernels inline the same two-op dequant
+(int8 -> f32 multiply by the broadcast scale) in VMEM so the HBM stream
+stays int8.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = 127.0
+# absmax floor: rows of exact zeros quantize with scale 0 (dequant gives
+# zeros back); any nonzero row divides by at least this
+EPS = 1e-12
+
+KV_DTYPES = ("f32", "bf16", "int8")
+
+
+def resolve_kv_dtype(name):
+    """CLI/config name -> jnp dtype (passthrough for dtype objects)."""
+    table = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+    if isinstance(name, str):
+        if name not in table:
+            raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                             f"got {name!r}")
+        return table[name]
+    return jnp.dtype(name)
+
+
+def is_quantized(dtype) -> bool:
+    return jnp.dtype(dtype) == jnp.int8
+
+
+def dtype_name(dtype) -> str:
+    """jnp dtype -> the short CLI/report name ("f32", "bf16", "int8")."""
+    return {"float32": "f32", "bfloat16": "bf16",
+            "int8": "int8"}[jnp.dtype(dtype).name]
+
+
+def quantize(x):
+    """Symmetric per-(row, head) absmax quantization over the last dim.
+
+    x (…, D) float -> (q (…, D) int8, scale (…, 1) f32) with
+    ``q * scale ~= x``.  Deterministic round-to-nearest (no stochastic
+    rounding: cache writes must be bit-reproducible across the engine's
+    replay paths — prefix-sharing admission re-writes must land identical
+    bytes)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = amax / QMAX
+    q = jnp.round(xf / jnp.maximum(scale, EPS))
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    """q (…, D) int8, scale (…, 1) f32 -> (…, D) ``dtype``."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -76,6 +76,39 @@ def decode_attention_ref(q, k_cache, v_cache, kpos, pos) -> jnp.ndarray:
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# int8 KV quantization (dequant-then-attend oracles)
+# ---------------------------------------------------------------------------
+#
+# Each quant oracle is BY CONSTRUCTION the standalone dequant
+# (``kv_quant.dequantize``) composed with the corresponding float oracle —
+# the bit-for-bit pin the kernel parity tests rely on: a kernel that
+# dequantizes inside its body must match dequantize-then-attend.
+
+def dequant_ref(q8, scale, dtype=jnp.float32) -> jnp.ndarray:
+    from repro.kernels import kv_quant
+    return kv_quant.dequantize(q8, scale, dtype)
+
+
+def decode_attention_quant_ref(q, k_cache, v_cache, k_scale, v_scale,
+                               kpos, pos) -> jnp.ndarray:
+    """int8 decode oracle: caches (B,L,Hkv,D) int8 with per-(row, head)
+    scales (B,L,Hkv,1) f32; everything else as ``decode_attention_ref``."""
+    return decode_attention_ref(q, dequant_ref(k_cache, k_scale),
+                                dequant_ref(v_cache, v_scale), kpos, pos)
+
+
+def flash_attention_append_quant_ref(q, k, v, k_scale, v_scale, kpos, *,
+                                     pos0: int,
+                                     window: Optional[int] = None
+                                     ) -> jnp.ndarray:
+    """int8 append oracle: key stream (B,Sk,Hkv,D) int8 + scales
+    (B,Sk,Hkv,1) f32."""
+    return flash_attention_append_ref(q, dequant_ref(k, k_scale),
+                                      dequant_ref(v, v_scale), kpos,
+                                      pos0=pos0, window=window)
+
+
 def paged_gather_ref(pool, page_table) -> jnp.ndarray:
     """Gather a dense per-slot view from a shared page pool.
 
@@ -137,6 +170,55 @@ def flash_attention_append_paged_ref(q, k_pool, v_pool, page_table,
     kpos_chunk = jnp.broadcast_to(pos0 + jnp.arange(c), (b, c))
     kpos = jnp.concatenate([kpos_pre, kpos_chunk], axis=1)
     return flash_attention_append_ref(q, k, v, kpos, pos0=pos0)
+
+
+def decode_attention_paged_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                     page_table, pos,
+                                     *, length: Optional[int] = None
+                                     ) -> jnp.ndarray:
+    """Paged int8 decode oracle: pools (P,ps,Hkv,D) int8, scale pools
+    (P,ps,Hkv,1) f32 gathered through the same page table (scales ride
+    the pool), then the dense quant oracle."""
+    ks = paged_gather_ref(k_scale, page_table)
+    vs = paged_gather_ref(v_scale, page_table)
+    if length is not None:
+        ks, vs = ks[:, :length], vs[:, :length]
+    k = paged_gather_ref(k_pool, page_table)
+    v = paged_gather_ref(v_pool, page_table)
+    kpos = paged_kpos_ref(page_table, k_pool.shape[1])
+    if length is not None:
+        k, v, kpos = k[:, :length], v[:, :length], kpos[:, :length]
+    return decode_attention_quant_ref(q, k, v, ks, vs, kpos, pos)
+
+
+def flash_attention_append_paged_quant_ref(q, k_pool, v_pool, k_scale,
+                                           v_scale, page_table, k_chunk,
+                                           v_chunk, ks_chunk, vs_chunk,
+                                           *, pos0: int) -> jnp.ndarray:
+    """Paged int8 append oracle: int8 pools + scale pools hold the prefix
+    [0, pos0); the chunk rides alongside already quantized (the same
+    bytes its cache write lands), so prefill attention and later decode
+    reads see identical dequantized values."""
+    ps = k_pool.shape[1]
+    n_pre = -(-pos0 // ps)
+    b, c = q.shape[:2]
+    kpos_chunk = jnp.broadcast_to(pos0 + jnp.arange(c), (b, c))
+    if pos0 == 0:
+        return flash_attention_append_quant_ref(
+            q, k_chunk, v_chunk, ks_chunk, vs_chunk, kpos_chunk, pos0=0)
+    pt = page_table[:, :n_pre]
+    k_pre = paged_gather_ref(k_pool, pt)[:, :pos0]
+    v_pre = paged_gather_ref(v_pool, pt)[:, :pos0]
+    ks_pre = paged_gather_ref(k_scale, pt)[:, :pos0]
+    vs_pre = paged_gather_ref(v_scale, pt)[:, :pos0]
+    kpos_pre = paged_kpos_ref(pt, ps)[:, :pos0]
+    k = jnp.concatenate([k_pre, k_chunk], axis=1)
+    v = jnp.concatenate([v_pre, v_chunk], axis=1)
+    ks = jnp.concatenate([ks_pre, ks_chunk], axis=1)
+    vs = jnp.concatenate([vs_pre, vs_chunk], axis=1)
+    kpos = jnp.concatenate([kpos_pre, kpos_chunk], axis=1)
+    return flash_attention_append_quant_ref(q, k, v, ks, vs, kpos,
+                                            pos0=pos0)
 
 
 def rmsprop_update_ref(g, grad, *, lr: float, alpha: float = 0.99,

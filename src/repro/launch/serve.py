@@ -297,11 +297,13 @@ class ServeEngine:
     def __init__(self, cfg, params, *, n_slots: int, cache_len: int,
                  chunk: int = 128, sample: bool = True, seed: int = 0,
                  page_size: int = 128, n_pages: int = 0,
-                 prefix_cache: bool = True, paged: Optional[bool] = None):
+                 prefix_cache: bool = True, paged: Optional[bool] = None,
+                 kv_dtype="f32"):
         import jax
         import jax.numpy as jnp
 
         from repro.core import llm_a3c
+        from repro.kernels import kv_quant
         from repro.models import attention as attn_mod
         from repro.models import model as M
 
@@ -319,6 +321,22 @@ class ServeEngine:
         # state) and whole-page slots; ring layers stay contiguous inside
         # a paged cache either way.
         kinds = cfg.layer_kinds()
+
+        # KV-cache storage dtype (f32/bf16/int8).  int8 only applies to
+        # attention KV rows, so an arch with no attention layers has
+        # nothing to quantize — logged fallback to f32, not a crash (the
+        # dispatch arms themselves all consume quantized caches)
+        kvd = kv_quant.resolve_kv_dtype(kv_dtype)
+        if kv_quant.is_quantized(kvd) and \
+                not any(k in ("attn", "attn_local") for k in kinds):
+            logging.warning(
+                "--kv-dtype int8 requested but arch %s has no attention "
+                "layers (kinds=%s); recurrent state does not quantize — "
+                "falling back to f32 cache storage", cfg.name, kinds)
+            kvd = jnp.float32
+        self.kv_dtype = kvd
+        self.kv_dtype_name = {"float32": "f32", "bfloat16": "bf16",
+                              "int8": "int8"}[jnp.dtype(kvd).name]
         if paged is None:
             paged = (self.prefill_step is not None
                      and "attn" in kinds
@@ -340,7 +358,8 @@ class ServeEngine:
             self.prefix_cache = False
         self.cache = M.init_cache(cfg, n_slots, cache_len,
                                   dtype=jnp.float32,
-                                  paged=self.paged_layout)
+                                  paged=self.paged_layout,
+                                  kv_dtype=self.kv_dtype)
         self.sample_first = jax.jit(
             lambda lg, key: llm_a3c.sample_slot_tokens(lg, key,
                                                        sample=sample))
@@ -365,18 +384,19 @@ class ServeEngine:
         # group's pools wholesale since prefill updated them in place),
         # -3 = page table (pt — batch dim known from rank).
         pl = self.paged_layout
+        kvd = self.kv_dtype
         s1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, cache_len,
-                                                 paged=pl))
+                                                 paged=pl, kv_dtype=kvd))
         s2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, cache_len,
-                                                 paged=pl))
+                                                 paged=pl, kv_dtype=kvd))
         bdim = jax.tree.map(
             lambda a, b: next((d for d in range(a.ndim)
                                if a.shape[d] != b.shape[d]), -1), s1, s2)
 
         def kind_of(path, bd):
             name = str(getattr(path[-1], "key", ""))
-            if name in ("kp", "vp"):
-                return -2
+            if name in ("kp", "vp", "kps", "vps"):
+                return -2   # scale pools ride the page pool: same code
             if name == "pt":
                 return -3
             return bd
@@ -386,7 +406,8 @@ class ServeEngine:
         # invariant, so it never needs re-zeroing
         self._group_cache = M.init_cache(cfg, n_slots, cache_len,
                                          dtype=jnp.float32,
-                                         paged=self.paged_layout)
+                                         paged=self.paged_layout,
+                                         kv_dtype=self.kv_dtype)
         bdims = self._bdim
 
         def scatter(big, small, perm, mask):
@@ -541,7 +562,8 @@ class ServeEngine:
         """Recurrent caches: token-by-token loop on a single-row cache."""
         jnp = self.jnp
         cache = self.M.init_cache(self.cfg, 1, self.cache_len,
-                                  dtype=jnp.float32)
+                                  dtype=jnp.float32,
+                                  kv_dtype=self.kv_dtype)
         for i in range(len(req.prompt)):
             tok, _, cache = self.serve_step(
                 self.params, cache,
@@ -719,7 +741,8 @@ def _warmup(eng: ServeEngine, trace: List[Request]) -> float:
         # every read through fully-masked kpos — numerically safe garbage
         wc = eng.M.init_cache(eng.cfg, eng.n_slots, eng.cache_len,
                               dtype=eng.jnp.float32,
-                              paged=eng.paged_layout)
+                              paged=eng.paged_layout,
+                              kv_dtype=eng.kv_dtype)
         _chunked_prefill(eng.prefill_step, eng.params, wc, toks, plens,
                          grid)
     warm = Request(rid=-1, prompt=np.zeros(min(8, eng.cache_len - 1),
@@ -754,6 +777,7 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
         }
     return {
         "paged": eng.paged, **paged,
+        "kv_dtype": eng.kv_dtype_name,
         "mode": mode, "slots": eng.n_slots, "requests": len(done),
         "warmup_s": round(warmup_s, 3),
         "wall_s": round(wall, 3),
@@ -775,13 +799,14 @@ def run_engine(cfg, params, trace: List[Request], *, n_slots: int,
                cache_len: int, chunk: int, sample: bool, seed: int,
                page_size: int = 128, n_pages: int = 0,
                prefix_cache: bool = True,
-               paged: Optional[bool] = None) -> dict:
+               paged: Optional[bool] = None, kv_dtype="f32") -> dict:
     """Continuous batching: admit into freed slots, per-slot decode."""
     _validate_trace(trace, cache_len)
     eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
                       chunk=chunk, sample=sample, seed=seed,
                       page_size=page_size, n_pages=n_pages,
-                      prefix_cache=prefix_cache, paged=paged)
+                      prefix_cache=prefix_cache, paged=paged,
+                      kv_dtype=kv_dtype)
     warmup_s = _warmup(eng, trace)
 
     pending = sorted(trace, key=lambda r: r.arrival)
@@ -815,7 +840,7 @@ def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
                  cache_len: int, chunk: int, sample: bool, seed: int,
                  chunked_prefill: bool = True, page_size: int = 128,
                  n_pages: int = 0, prefix_cache: bool = True,
-                 paged: Optional[bool] = None) -> dict:
+                 paged: Optional[bool] = None, kv_dtype="f32") -> dict:
     """Wave-batched baseline: admit ``n_slots`` requests at once (waiting
     until the whole wave has arrived), then decode until the wave's
     *slowest* request finishes before admitting the next wave.
@@ -831,7 +856,8 @@ def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
     eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
                       chunk=chunk, sample=sample, seed=seed,
                       page_size=page_size, n_pages=n_pages,
-                      prefix_cache=prefix_cache, paged=paged)
+                      prefix_cache=prefix_cache, paged=paged,
+                      kv_dtype=kv_dtype)
     if not chunked_prefill:
         eng.prefill_step = None
     warmup_s = _warmup(eng, trace)
@@ -895,6 +921,12 @@ def main():
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix page reuse (isolates the "
                     "dedup win in benches; pages stay per-slot private)")
+    ap.add_argument("--kv-dtype", default="f32",
+                    choices=("f32", "bf16", "int8"),
+                    help="KV cache storage dtype: f32, bf16 or int8 "
+                    "(int8 stores per-(row, head) symmetric scales "
+                    "alongside and dequantizes inside the kernels; archs "
+                    "without attention layers log a fallback to f32)")
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-seed", type=int, default=0)
@@ -976,7 +1008,8 @@ def main():
                   cache_len=cache_len, chunk=args.chunk,
                   sample=not args.greedy, seed=args.seed,
                   page_size=args.page_size, n_pages=args.pages,
-                  prefix_cache=not args.no_prefix_cache)
+                  prefix_cache=not args.no_prefix_cache,
+                  kv_dtype=args.kv_dtype)
 
     rec.update({
         "arch": cfg.name,

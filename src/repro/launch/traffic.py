@@ -40,6 +40,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import kv_quant
 from repro.launch import specs as specs_mod
 from repro.models import attention
 from repro.models import model as M
@@ -50,38 +51,55 @@ def _tree_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
-def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
+def cache_bytes(cfg: ModelConfig, batch: int, seq: int,
+                kv_dtype=None) -> int:
+    """Exact cache bytes via eval_shape of the real ``init_cache``.  With
+    ``kv_dtype`` (name or dtype) the attention K/V leaves take that storage
+    type and — for int8 — the per-(row, head) f32 scale leaves are counted
+    too; recurrent state stays bf16 either way."""
+    kvd = None if kv_dtype is None else kv_quant.resolve_kv_dtype(kv_dtype)
     cache = jax.eval_shape(
-        lambda: M.init_cache(cfg, batch, seq, dtype=jnp.bfloat16))
+        lambda: M.init_cache(cfg, batch, seq, dtype=jnp.bfloat16,
+                             kv_dtype=kvd))
     return _tree_bytes(cache)
 
 
 def page_pool_bytes(cfg: ModelConfig, n_pages: int, page_size: int,
-                    dtype=jnp.bfloat16) -> int:
+                    dtype=jnp.bfloat16, kv_dtype=None) -> int:
     """Bytes of K+V page pool for ``n_pages`` pages across every
     global-attention layer (the only kind the paged layout covers —
-    windowed and recurrent layers keep contiguous per-slot state)."""
+    windowed and recurrent layers keep contiguous per-slot state).
+
+    ``kv_dtype`` overrides ``dtype`` as the pool storage type; int8 adds
+    the f32 scale pools (4 bytes per pool row per KV head, amortised over
+    head_dim elements — the reason int8 lands at ~(D+4)/4D of f32, not
+    exactly 1/4)."""
     n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
-    item = jnp.dtype(dtype).itemsize
-    return n_attn * 2 * n_pages * page_size * cfg.n_kv_heads \
-        * cfg.head_dim * item
+    kvd = jnp.dtype(dtype if kv_dtype is None
+                    else kv_quant.resolve_kv_dtype(kv_dtype))
+    rows = n_pages * page_size * cfg.n_kv_heads
+    total = 2 * rows * cfg.head_dim * kvd.itemsize
+    if kv_quant.is_quantized(kvd):
+        total += 2 * rows * 4            # f32 scale per (row, kv head)
+    return n_attn * total
 
 
 def paged_cache_bytes(cfg: ModelConfig, batch: int, seq: int, *,
-                      page_size: int, n_pages: int) -> int:
+                      page_size: int, n_pages: int, kv_dtype=None) -> int:
     """Exact byte count of the paged serve cache (shared K/V pools +
     int32 page tables + contiguous non-attn leaves), via eval_shape of
     the real ``init_cache`` so layout knowledge lives in one place."""
     paged = attention.PagedLayout(page_size=page_size, n_pages=n_pages)
+    kvd = None if kv_dtype is None else kv_quant.resolve_kv_dtype(kv_dtype)
     cache = jax.eval_shape(
         lambda: M.init_cache(cfg, batch, seq, dtype=jnp.bfloat16,
-                             paged=paged))
+                             paged=paged, kv_dtype=kvd))
     return _tree_bytes(cache)
 
 
 def paged_capacity(cfg: ModelConfig, *, n_slots: int, cache_len: int,
                    page_size: int, resident_tokens_per_req: int,
-                   shared_tokens: int = 0) -> dict:
+                   shared_tokens: int = 0, kv_dtype=None) -> dict:
     """Concurrency the paged layout sustains on the SAME HBM budget the
     contiguous layout spends on ``n_slots`` full-length slots.
 
@@ -91,13 +109,17 @@ def paged_capacity(cfg: ModelConfig, *, n_slots: int, cache_len: int,
     leading ``shared_tokens // page_size`` full blocks are deduplicated
     across all requests via the prefix index.  Per-slot overhead (int32
     page-table rows plus any contiguous non-attn layer state) is charged
-    exactly via ``paged_cache_bytes``."""
+    exactly via ``paged_cache_bytes``.
+
+    The budget is ALWAYS the bf16 contiguous reservation — ``kv_dtype``
+    changes only what the paged layout pays per page/slot, so int8 rows
+    are directly comparable to f32 rows on the same HBM budget."""
     budget = cache_bytes(cfg, n_slots, cache_len)
-    per_page = page_pool_bytes(cfg, 1, page_size)
+    per_page = page_pool_bytes(cfg, 1, page_size, kv_dtype=kv_dtype)
     # everything in a one-slot paged cache that is NOT pool: table + the
     # contiguous leaves of windowed/recurrent layers + index scalars
     per_slot = paged_cache_bytes(cfg, 1, cache_len, page_size=page_size,
-                                 n_pages=1) - per_page
+                                 n_pages=1, kv_dtype=kv_dtype) - per_page
     shared_pages = shared_tokens // page_size
     req_pages = -(-resident_tokens_per_req // page_size)
     unique = max(req_pages - shared_pages, 1)
@@ -105,7 +127,10 @@ def paged_capacity(cfg: ModelConfig, *, n_slots: int, cache_len: int,
                       // (unique * per_page + per_slot))
     dedup = (slots_paged * req_pages
              / max(shared_pages + slots_paged * unique, 1))
+    kvd = jnp.bfloat16 if kv_dtype is None \
+        else kv_quant.resolve_kv_dtype(kv_dtype)
     return {
+        "kv_dtype": kv_quant.dtype_name(kvd),
         "budget_bytes": budget,
         "page_bytes": per_page,
         "per_slot_overhead_bytes": per_slot,
@@ -116,6 +141,22 @@ def paged_capacity(cfg: ModelConfig, *, n_slots: int, cache_len: int,
         "slot_ratio": slots_paged / max(n_slots, 1),
         "dedup_ratio_model": dedup,
     }
+
+
+def decode_bytes_per_token(cfg: ModelConfig, batch: int, cache_len: int, *,
+                           kv_dtype=None, page_size: int | None = None,
+                           n_pages: int | None = None) -> int:
+    """Analytic HBM bytes one decode step moves: a full bf16 param read
+    plus the whole KV cache streamed once (the int8 win is this second
+    term — scale reads included).  Contiguous layout by default; pass
+    ``page_size``/``n_pages`` for the paged pool.  Benchmarks report this
+    next to measured tok/s so the roofline denominator is explicit."""
+    if page_size is not None:
+        cb = paged_cache_bytes(cfg, batch, cache_len, page_size=page_size,
+                               n_pages=n_pages or 1, kv_dtype=kv_dtype)
+    else:
+        cb = cache_bytes(cfg, batch, cache_len, kv_dtype=kv_dtype)
+    return 2 * cfg.param_count() + cb
 
 
 def decode_cp_combine_bytes(cfg: ModelConfig, batch: int,

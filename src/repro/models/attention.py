@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import ctx
-from repro.kernels import dispatch
+from repro.kernels import dispatch, kv_quant
 from repro.models import common as cm
 
 NEG_INF = -1e30
@@ -112,12 +112,24 @@ def attend_train(params: dict, x: jnp.ndarray, cos, sin, cfg,
 def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
                   dtype=jnp.bfloat16) -> dict:
     """Cache for one attention layer.  ``index`` is the next write slot; for
-    ring caches (sliding window) writes wrap modulo ``cache_len``."""
-    return {
+    ring caches (sliding window) writes wrap modulo ``cache_len``.
+
+    ``dtype=int8`` makes the cache quantized: ``k``/``v`` store int8 rows
+    and per-(row, head) f32 scales ride alongside as ``ks``/``vs``
+    (batch, cache_len, Hkv, 1) — rank-matched so sharding specs and
+    engine scatters treat them exactly like the payload.  Zero-init
+    scales dequantize to zeros; kpos masks unwritten rows anyway."""
+    cache = {
         "k": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
         "v": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
         "index": jnp.zeros((), jnp.int32),
     }
+    if kv_quant.is_quantized(dtype):
+        cache["ks"] = jnp.zeros((batch, cache_len, n_kv_heads, 1),
+                                jnp.float32)
+        cache["vs"] = jnp.zeros((batch, cache_len, n_kv_heads, 1),
+                                jnp.float32)
+    return cache
 
 
 class PagedLayout(NamedTuple):
@@ -142,12 +154,20 @@ def init_paged_kv_cache(batch: int, cache_len: int, n_kv_heads: int,
         raise ValueError(f"cache_len {cache_len} must be a multiple of "
                          f"page_size {page_size} (whole-page slots)")
     max_pages = cache_len // page_size
-    return {
+    cache = {
         "kp": jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
         "vp": jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
         "pt": jnp.full((batch, max_pages), -1, jnp.int32),
         "index": jnp.zeros((), jnp.int32),
     }
+    if kv_quant.is_quantized(dtype):
+        # scale pools ride the page pool: same leading (page, offset) dims,
+        # so page COW / refcount / sharding logic applies verbatim
+        cache["kps"] = jnp.zeros((n_pages, page_size, n_kv_heads, 1),
+                                 jnp.float32)
+        cache["vps"] = jnp.zeros((n_pages, page_size, n_kv_heads, 1),
+                                 jnp.float32)
+    return cache
 
 
 def _decode_cp_rule(cache_len: int) -> Optional[dict]:
@@ -162,7 +182,8 @@ def _decode_cp_rule(cache_len: int) -> Optional[dict]:
     return cp
 
 
-def _update_kv_cache_cp(cache: dict, k, v, slot, cp) -> tuple:
+def _update_kv_cache_cp(cache: dict, k, v, slot, cp, ks=None, vs=None
+                        ) -> tuple:
     """Write each row's new K/V on the owning sequence shard only.
 
     The cache's sequence dim is sharded over ``cp['seq_axes']``; a plain
@@ -172,6 +193,10 @@ def _update_kv_cache_cp(cache: dict, k, v, slot, cp) -> tuple:
     row (B,) (continuous batching) or a lockstep scalar.  (The attention
     over the updated cache then routes through ``dispatch.decode_attention``,
     which resolves the matching ``pallas_cp`` combine.)
+
+    Quantized caches pass the already-quantized rows plus their scales
+    (``ks``/``vs`` (B, 1, Hkv, 1)); the rank-matched scale leaves take the
+    exact same predicated write.  Returns (ck, cv) or (ck, cv, cks, cvs).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -186,8 +211,16 @@ def _update_kv_cache_cp(cache: dict, k, v, slot, cp) -> tuple:
     cache_len = cache["k"].shape[1]
     l_loc = cache_len // cp["n_shards"]
     slot = jnp.broadcast_to(jnp.asarray(slot), (b,))
+    if ks is None:
+        new_rows = (k, v)
+        leaves = (cache["k"], cache["v"])
+    else:
+        new_rows = (k, v, ks, vs)
+        leaves = (cache["k"], cache["v"], cache["ks"], cache["vs"])
+    n = len(leaves)
 
-    def write(slot_, k_, v_, ck, cv):
+    def write(slot_, *args):
+        new, old = args[:n], args[n:]
         # shard coordinate along the (possibly multi-axis) seq sharding
         idx = jnp.zeros((), jnp.int32)
         for a in seq_axes:
@@ -195,19 +228,18 @@ def _update_kv_cache_cp(cache: dict, k, v, slot, cp) -> tuple:
         local_slot = slot_ - idx * l_loc               # (B_loc,)
         in_range = (local_slot >= 0) & (local_slot < l_loc)
         ls = jnp.clip(local_slot, 0, l_loc - 1)
-        rows = jnp.arange(ck.shape[0])
+        rows = jnp.arange(old[0].shape[0])
         sel = in_range[:, None, None]                  # vs (B_loc, Hkv, D)
-        ck2 = ck.at[rows, ls].set(
-            jnp.where(sel, k_[:, 0].astype(ck.dtype), ck[rows, ls]))
-        cv2 = cv.at[rows, ls].set(
-            jnp.where(sel, v_[:, 0].astype(cv.dtype), cv[rows, ls]))
-        return ck2, cv2
+        return tuple(
+            od.at[rows, ls].set(
+                jnp.where(sel, nw[:, 0].astype(od.dtype), od[rows, ls]))
+            for nw, od in zip(new, old))
 
     return shard_map(write, mesh=mesh,
-                     in_specs=(P(spec.batch), spec.new_kv, spec.new_kv,
-                               spec.kv, spec.kv),
-                     out_specs=(spec.kv, spec.kv),
-                     check_rep=False)(slot, k, v, cache["k"], cache["v"])
+                     in_specs=(P(spec.batch),) + (spec.new_kv,) * n +
+                              (spec.kv,) * n,
+                     out_specs=(spec.kv,) * n,
+                     check_rep=False)(slot, *new_rows, *leaves)
 
 
 def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
@@ -249,6 +281,7 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         if window is not None:
             raise ValueError("paged KV caches do not support sliding "
                              "windows; keep ring layers contiguous")
+        quant = "kps" in cache
         ps = cache["kp"].shape[1]
         cache_len = cache["pt"].shape[1] * ps
         pt = cache["pt"]
@@ -260,34 +293,65 @@ def attend_decode(params: dict, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
             page = pt[:, pidx]                         # (B,) scalar col
         # unmapped rows write the page-0 garbage sink; kpos masks them
         page_w = jnp.maximum(page, 0)
+        if quant:
+            # quantize-on-write: each new row lands as int8 + its own
+            # per-(row, head) scale, so no existing page row is rescanned
+            k, k_sc = kv_quant.quantize(k)             # (B,1,Hkv,{D,1})
+            v, v_sc = kv_quant.quantize(v)
         kp = cache["kp"].at[page_w, off].set(k[:, 0].astype(cache["kp"].dtype))
         vp = cache["vp"].at[page_w, off].set(v[:, 0].astype(cache["vp"].dtype))
         new_cache = {"kp": kp, "vp": vp, "pt": pt,
                      "index": jnp.max(pos) + 1}
+        kps = vps = None
+        if quant:
+            kps = cache["kps"].at[page_w, off].set(k_sc[:, 0])
+            vps = cache["vps"].at[page_w, off].set(v_sc[:, 0])
+            new_cache["kps"], new_cache["vps"] = kps, vps
         o = dispatch.decode_attention_paged(q[:, 0], kp, vp, pt, pos,
                                             length=cache_len,
+                                            k_scale=kps, v_scale=vps,
                                             backend=backend)[:, None]
         return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
 
+    quant = "ks" in cache
+    if quant:
+        k, k_sc = kv_quant.quantize(k)                 # (B,1,Hkv,{D,1})
+        v, v_sc = kv_quant.quantize(v)
     cache_len = cache["k"].shape[1]
     # full cache: slot == pos (pos < cache_len); ring cache: wrap around.
     slot = pos % cache_len
     cp = _decode_cp_rule(cache_len)
+    cks = cvs = None
     if cp is not None:
-        ck, cv = _update_kv_cache_cp(cache, k, v, slot, cp)
+        if quant:
+            ck, cv, cks, cvs = _update_kv_cache_cp(cache, k, v, slot, cp,
+                                                   ks=k_sc, vs=v_sc)
+        else:
+            ck, cv = _update_kv_cache_cp(cache, k, v, slot, cp)
     elif per_slot:
         rows = jnp.arange(b)
         ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
         cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        if quant:
+            cks = cache["ks"].at[rows, slot].set(k_sc[:, 0])
+            cvs = cache["vs"].at[rows, slot].set(v_sc[:, 0])
     else:
         ck = jax.lax.dynamic_update_slice(
             cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
         cv = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if quant:
+            cks = jax.lax.dynamic_update_slice(
+                cache["ks"], k_sc, (0, slot, 0, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache["vs"], v_sc, (0, slot, 0, 0))
     new_cache = {"k": ck, "v": cv, "index": jnp.max(pos) + 1}
+    if quant:
+        new_cache["ks"], new_cache["vs"] = cks, cvs
 
     kpos = _cache_positions(cache_len, pos, window)
     o = dispatch.decode_attention(q[:, 0], ck, cv, kpos, pos,
+                                  k_scale=cks, v_scale=cvs,
                                   backend=backend)[:, None]
     return cm.linear(params["wo"], o.reshape(b, 1, n_h * hd)), new_cache
 
@@ -348,6 +412,7 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
         if window is not None:
             raise ValueError("paged KV caches do not support sliding "
                              "windows; keep ring layers contiguous")
+        quant = "kps" in cache
         ps = cache["kp"].shape[1]
         cache_len = cache["pt"].shape[1] * ps
         if pos0 + c > cache_len:
@@ -367,20 +432,43 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
         # the page-0 sink instead
         valid = (positions[None, :] < end[:, None]) & (pages > 0)
         page_w = jnp.where(valid, pages, 0)
+        k_sc = v_sc = None
+        if quant:
+            # quantize once; the same bytes land in the pool AND feed this
+            # chunk's attention, so prefill and later decode reads see
+            # identical dequantized values
+            k, k_sc = kv_quant.quantize(k)             # (B,C,Hkv,{D,1})
+            v, v_sc = kv_quant.quantize(v)
         kp = cache["kp"].at[page_w, offs[None, :]].set(
             k.astype(cache["kp"].dtype))
         vp = cache["vp"].at[page_w, offs[None, :]].set(
             v.astype(cache["vp"].dtype))
         new_cache = {"kp": kp, "vp": vp, "pt": pt,
                      "index": jnp.asarray(pos0 + c, jnp.int32)}
+        kps = vps = None
+        if quant:
+            kps = cache["kps"].at[page_w, offs[None, :]].set(k_sc)
+            vps = cache["vps"].at[page_w, offs[None, :]].set(v_sc)
+            new_cache["kps"], new_cache["vps"] = kps, vps
         # key stream: the PRE-write pool holds the prefix [0, pos0) —
         # the chunk's own K/V ride alongside as dense tensors
         o = dispatch.flash_attention_append_paged(
             q, cache["kp"], cache["vp"], pt, k, v, pos0=pos0,
+            k_scale=cache.get("kps"), v_scale=cache.get("vps"),
+            ks_chunk=k_sc, vs_chunk=v_sc,
             backend=backend)
         return cm.linear(params["wo"], o.reshape(b, c, n_h * hd)), new_cache
 
+    quant = "ks" in cache
+    k_sc = v_sc = None
+    if quant:
+        # quantize the chunk once: the cache write and this chunk's own
+        # key stream use the same int8 bytes + scales, so prefill
+        # attention matches what decode later reads back
+        k, k_sc = kv_quant.quantize(k)                 # (B,C,Hkv,{D,1})
+        v, v_sc = kv_quant.quantize(v)
     cache_len = cache["k"].shape[1]
+    cks = cvs = None
     if window is None:
         if pos0 + c > cache_len:
             # a full cache has no wrap semantics: writing past the end
@@ -394,6 +482,11 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
             cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
         cv = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
+        if quant:
+            cks = jax.lax.dynamic_update_slice(
+                cache["ks"], k_sc, (0, pos0, 0, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache["vs"], v_sc, (0, pos0, 0, 0))
     else:
         # ring cache: slot s must end up holding the LAST written position
         # p ≡ s (mod cache_len) with pos0 <= p < end[row].  Computed as a
@@ -416,27 +509,42 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
                                  sel[:, :, None, None], axis=1)
         ck = jnp.where(valid[:, :, None, None], gk, cache["k"])
         cv = jnp.where(valid[:, :, None, None], gv, cache["v"])
+        if quant:
+            gks = jnp.take_along_axis(k_sc, sel[:, :, None, None], axis=1)
+            gvs = jnp.take_along_axis(v_sc, sel[:, :, None, None], axis=1)
+            cks = jnp.where(valid[:, :, None, None], gks, cache["ks"])
+            cvs = jnp.where(valid[:, :, None, None], gvs, cache["vs"])
     # strong int32: a weak-typed scalar here would retrace the decode step
     # that consumes this cache
     new_cache = {"k": ck, "v": cv, "index": jnp.asarray(pos0 + c, jnp.int32)}
+    if quant:
+        new_cache["ks"], new_cache["vs"] = cks, cvs
 
     # key stream for the append call: the pre-chunk cache prefix (rows a
     # ring write above may have evicted are only positions no chunk query
     # can still see) plus the chunk's own K/V from this projection
+    ks_all = vs_all = None
     if pos0 == 0:
         k_all, v_all = k, v
+        ks_all, vs_all = k_sc, v_sc
         kpos_all = jnp.arange(c)
         linear = True
     elif window is None:
-        k_all = jnp.concatenate([cache["k"][:, :pos0].astype(q.dtype), k],
-                                axis=1)
-        v_all = jnp.concatenate([cache["v"][:, :pos0].astype(q.dtype), v],
-                                axis=1)
+        cast = (lambda x: x) if quant else (lambda x: x.astype(q.dtype))
+        k_all = jnp.concatenate([cast(cache["k"][:, :pos0]), k], axis=1)
+        v_all = jnp.concatenate([cast(cache["v"][:, :pos0]), v], axis=1)
+        if quant:
+            ks_all = jnp.concatenate([cache["ks"][:, :pos0], k_sc], axis=1)
+            vs_all = jnp.concatenate([cache["vs"][:, :pos0], v_sc], axis=1)
         kpos_all = jnp.arange(pos0 + c)
         linear = True
     else:
-        k_all = jnp.concatenate([cache["k"].astype(q.dtype), k], axis=1)
-        v_all = jnp.concatenate([cache["v"].astype(q.dtype), v], axis=1)
+        cast = (lambda x: x) if quant else (lambda x: x.astype(q.dtype))
+        k_all = jnp.concatenate([cast(cache["k"]), k], axis=1)
+        v_all = jnp.concatenate([cast(cache["v"]), v], axis=1)
+        if quant:
+            ks_all = jnp.concatenate([cache["ks"], k_sc], axis=1)
+            vs_all = jnp.concatenate([cache["vs"], v_sc], axis=1)
         kpos_pre = _cache_positions(cache_len, jnp.asarray(pos0 - 1),
                                     window)
         kpos_all = jnp.concatenate([kpos_pre, pos0 + jnp.arange(c)])
@@ -444,6 +552,7 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
     o = dispatch.flash_attention_append(q, k_all, v_all, kpos_all,
                                         pos0=pos0, window=window,
                                         kpos_linear=linear,
+                                        k_scale=ks_all, v_scale=vs_all,
                                         backend=backend)
     return cm.linear(params["wo"], o.reshape(b, c, n_h * hd)), new_cache
 

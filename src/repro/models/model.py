@@ -122,7 +122,11 @@ def _apply_block_train(cfg: ModelConfig, kind: str, p: Params, x, cos, sin,
 
 
 def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
-                 dtype, paged=None) -> Params:
+                 dtype, paged=None, kv_dtype=None) -> Params:
+    # kv_dtype overrides dtype for ATTENTION caches only — recurrent state
+    # below keeps `dtype` (int8 SSM/LSTM state would be numerically
+    # meaningless; only KV rows carry the quantization scheme)
+    kvd = dtype if kv_dtype is None else kv_dtype
     if kind == "attn":
         if paged is not None:
             # shared page pool + per-slot page table; ring layers below
@@ -131,12 +135,12 @@ def _block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
             return attn.init_paged_kv_cache(
                 batch, cache_len, cfg.n_kv_heads, cfg.hd,
                 page_size=paged.page_size, n_pages=paged.n_pages,
-                dtype=dtype)
+                dtype=kvd)
         return attn.init_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.hd,
-                                  dtype)
+                                  kvd)
     if kind == "attn_local":
         clen = min(cache_len, cfg.sliding_window or cache_len)
-        return attn.init_kv_cache(batch, clen, cfg.n_kv_heads, cfg.hd, dtype)
+        return attn.init_kv_cache(batch, clen, cfg.n_kv_heads, cfg.hd, kvd)
     if kind == "mamba2":
         return ssm_mod.init_mamba2_state(batch, cfg, dtype)
     if kind == "mlstm":
@@ -366,15 +370,18 @@ def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16, paged=None) -> Params:
+               dtype=jnp.bfloat16, paged=None, kv_dtype=None) -> Params:
     """``paged`` — an ``attention.PagedLayout`` switches every global
     (kind == "attn") layer to the page-pool layout; sliding-window and
-    recurrent layers keep their contiguous/recurrent state either way."""
+    recurrent layers keep their contiguous/recurrent state either way.
+
+    ``kv_dtype`` overrides ``dtype`` for attention KV caches only (int8
+    adds per-row scale leaves; recurrent state keeps ``dtype``)."""
     if cfg.is_encdec:
         from repro.models import encdec
         return encdec.init_cache(cfg, batch, cache_len, dtype)
     kinds = cfg.layer_kinds()
-    caches = [_block_cache(cfg, k, batch, cache_len, dtype, paged)
+    caches = [_block_cache(cfg, k, batch, cache_len, dtype, paged, kv_dtype)
               for k in kinds]
     cache: Dict[str, Any] = {}
     if _use_scan(cfg):
@@ -387,7 +394,8 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
     if cfg.shared_attn_every:
         n_apps = cfg.n_layers // cfg.shared_attn_every
         cache["shared"] = [
-            _block_cache(cfg, "attn", batch, cache_len, dtype)
+            _block_cache(cfg, "attn", batch, cache_len, dtype,
+                         kv_dtype=kv_dtype)
             for _ in range(n_apps)]
     return cache
 

@@ -101,6 +101,46 @@ def test_cache_shardings_paged_pool():
     assert tuple(flat1["pt"].spec) == ()
 
 
+def test_cache_shardings_quant_scale_leaves():
+    """int8 cache: the f32 scale leaves (ks/vs contiguous, kps/vps paged)
+    are rank-matched to their payload and must take the payload's spec on
+    every leading dim, trailing singleton unsharded — the property that
+    lets COW copies, admission scatters, and the engine's bdim scan treat
+    payload and scale identically."""
+    from repro.models import attention as attn
+    from repro.models import model as M
+
+    cfg = get_config("qwen2-72b")
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, 16, 4096, dtype=jnp.bfloat16,
+                             kv_dtype=jnp.int8))
+    flat = {str(path[-1].key): s for path, s in
+            jax.tree_util.tree_flatten_with_path(
+                sharding.cache_shardings(cfg, MESH, cache,
+                                         batch_size=256))[0]}
+    for pay, sc in (("k", "ks"), ("v", "vs")):
+        pspec, sspec = tuple(flat[pay].spec), tuple(flat[sc].spec)
+        assert sspec[:-1] == pspec[:-1], (pay, pspec, sspec)
+        assert sspec[-1] is None
+
+    layout = attn.PagedLayout(page_size=128, n_pages=256)
+    paged = jax.eval_shape(
+        lambda: M.init_cache(cfg, 16, 4096, dtype=jnp.bfloat16,
+                             paged=layout, kv_dtype=jnp.int8))
+    off = 1 if len(cfg.layer_kinds()) > 1 else 0
+    for bsz, page_axes in ((256, None), (1, ("data", "model"))):
+        flatp = {str(path[-1].key): s for path, s in
+                 jax.tree_util.tree_flatten_with_path(
+                     sharding.cache_shardings(cfg, MESH, paged,
+                                              batch_size=bsz))[0]}
+        for pay, sc in (("kp", "kps"), ("vp", "vps")):
+            pspec = tuple(flatp[pay].spec)
+            sspec = tuple(flatp[sc].spec)
+            assert sspec[:-1] == pspec[:-1], (bsz, pay, pspec, sspec)
+            assert sspec[-1] is None
+            assert pspec[off + 0] == page_axes  # CP pages follow payload
+
+
 def test_activation_rules_gqa_fallback():
     cfg = get_config("qwen2-72b")     # kv=8 < model=16
     rules = sharding.activation_rules(MESH, batch_size=256, cfg=cfg)
