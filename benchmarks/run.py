@@ -53,6 +53,18 @@ def main() -> None:
     }
     if args.quick:
         only = ["prefill", "serve"]
+        # one-line invariant status next to the perf rows: the cheap
+        # repro-audit families (AST lints + dispatch contracts), so a
+        # perf run that rode on a contract violation is visible in the
+        # same log (the full suite runs as its own CI job)
+        import os
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        try:
+            from tools.audit import quick_summary
+            print(quick_summary(), flush=True)
+        except Exception as e:       # never let the audit sink the bench
+            print(f"audit,error,{e!r}", flush=True)
     else:
         only = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

@@ -1,0 +1,18 @@
+"""Shared interpret-mode default for the Pallas kernel entry points.
+
+Every kernel resolves ``interpret=None`` from the *lowering target* —
+``ctx.current_platform()``, the dispatch mesh's device platform — never
+from ``jax.default_backend()`` (PR 2 policy): a CPU host lowering a TPU
+mesh program must compile the real kernels, and a GPU host must stay in
+interpret mode (these are TPU kernels).  ``tools/audit``'s
+``no-default-backend`` pass enforces that no kernel/serve module grows a
+``jax.default_backend()`` call back.
+"""
+from __future__ import annotations
+
+from repro.distributed import ctx
+
+
+def default_interpret() -> bool:
+    """True when the lowering target cannot run compiled Mosaic kernels."""
+    return ctx.current_platform() != "tpu"

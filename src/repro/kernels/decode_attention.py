@@ -35,6 +35,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels._interpret import default_interpret
 
 NEG = -1e30
 
@@ -119,11 +120,7 @@ def _call(q, k_cache, v_cache, kpos, pos, *, block_k: int, partials: bool,
     quant = k_scale is not None
     kpos, pos = _per_slot(kpos, pos, b)
     if interpret is None:
-        # resolve from the lowering target like the dispatch layer does for
-        # every kernel (PR 2 policy) — NOT jax.default_backend(), so a host
-        # process lowering a TPU mesh compiles the real kernel
-        from repro.distributed import ctx
-        interpret = ctx.current_platform() != "tpu"
+        interpret = default_interpret()
 
     qg = q.reshape(b, hkv, g, d)
     kern = functools.partial(_kernel, block_k=bk, n_k=n_k, scale=d ** -0.5,

@@ -1004,3 +1004,52 @@ def rmsprop_update(g, grad, *, lr, alpha: float = 0.99,
                                    alpha=alpha, eps=eps, block_rows=br)
     unpad = lambda x: x.reshape(-1)[:n].reshape(shape)
     return unpad(new_g), unpad(upd)
+
+
+# ---------------------------------------------------------------------------
+# op registry — the dispatch contract, machine-checked by tools/audit
+# ---------------------------------------------------------------------------
+
+class OpContract(NamedTuple):
+    """One dispatch op's invariants, in checkable form.
+
+    ``tools/audit``'s contract passes cross-check every row: the entry is
+    callable, the named jnp oracle (and quant oracle, when the op carries
+    an int8 arm) exists in ``ref``, the resolver's every return path emits
+    a decision row, delegating ops name a registered delegate, and quant
+    ops annotate their rows via ``_quant_note`` / inline int8 reasons.
+    New ops MUST be registered here — the auditor also checks the reverse
+    direction (any public entry with a ``backend`` parameter that is
+    missing from the registry fails the audit)."""
+    entry: Any                    # public dispatch callable
+    oracle: str                   # jnp oracle name in kernels/ref.py
+    quant_oracle: Optional[str]   # int8 oracle name; None = no quant arm
+    resolver: Optional[str]       # _resolve_* fn emitting decision rows,
+    #                               None for delegating/registry-free ops
+    delegate: Optional[str]       # op key this arm delegates to (paged
+    #                               indirection), else None
+
+
+KERNEL_OPS = {
+    "flash_attention": OpContract(flash_attention, "flash_attention_ref",
+                                  None, "_resolve_flash", None),
+    "flash_append": OpContract(flash_attention_append,
+                               "flash_attention_append_ref",
+                               "flash_attention_append_quant_ref",
+                               "_resolve_append", None),
+    "decode_attention": OpContract(decode_attention, "decode_attention_ref",
+                                   "decode_attention_quant_ref",
+                                   "_resolve_decode", None),
+    "decode_paged": OpContract(decode_attention_paged,
+                               "decode_attention_paged_ref",
+                               "decode_attention_paged_quant_ref",
+                               None, "decode_attention"),
+    "append_paged": OpContract(flash_attention_append_paged,
+                               "flash_attention_append_paged_ref",
+                               "flash_attention_append_paged_quant_ref",
+                               None, "flash_append"),
+    "rmsnorm": OpContract(rmsnorm, "rmsnorm_ref", None, "_resolve_rmsnorm",
+                          None),
+    "rmsprop_update": OpContract(rmsprop_update, "rmsprop_update_ref",
+                                 None, None, None),
+}

@@ -28,6 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels._interpret import default_interpret
 
 NEG = -1e30
 
@@ -143,7 +144,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)
     n_q, n_k = s // bq, s // bk
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = default_interpret()
 
     grid = (b, hq, n_q, n_k)
     kern = functools.partial(
@@ -289,7 +290,7 @@ def flash_attention_append(q, k, v, kpos, *, pos0: int,
     if kpos.ndim == 1:
         kpos = jnp.broadcast_to(kpos, (b, sk))
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = default_interpret()
 
     kern = functools.partial(
         _append_kernel, pos0=pos0, window=window, block_q=bq, block_k=bk,

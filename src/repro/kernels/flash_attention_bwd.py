@@ -41,6 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels._interpret import default_interpret
 from repro.kernels.flash_attention import NEG, tile_live, tile_mask
 
 
@@ -155,7 +156,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)
     n_q, n_k = s // bq, s // bk
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = default_interpret()
     scale = d ** -0.5
 
     qh = jnp.moveaxis(q, 1, 2)                      # (B,Hq,S,D)

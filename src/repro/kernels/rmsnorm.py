@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import default_interpret
+
 
 def _kernel(x_ref, scale_ref, o_ref, rstd_ref, *, eps: float, d_real: int):
     x = x_ref[...].astype(jnp.float32)          # (br, d)
@@ -48,7 +50,7 @@ def rmsnorm_fwd(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
     while rows % br:
         br //= 2
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = default_interpret()
     kern = functools.partial(_kernel, eps=eps, d_real=d)
     out_specs = [pl.BlockSpec((br, d), lambda i: (i, 0))]
     out_shape = [jax.ShapeDtypeStruct((rows, d), x.dtype)]
@@ -97,7 +99,7 @@ def rmsnorm_bwd(x, scale, rstd, dy, *, block_rows: int = 256,
     while rows % br:
         br //= 2
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = default_interpret()
     n_blocks = rows // br
     dx, dscale_part = pl.pallas_call(
         functools.partial(_bwd_kernel, d_real=d),

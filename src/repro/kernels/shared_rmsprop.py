@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import default_interpret
+
 
 def _kernel(g_ref, grad_ref, lr_ref, new_g_ref, upd_ref, *,
             alpha: float, eps: float):
@@ -38,7 +40,7 @@ def rmsprop_update_2d(g, grad, lr, *, alpha: float = 0.99, eps: float = 0.1,
     br = min(block_rows, rows)
     assert rows % br == 0
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = default_interpret()
     kern = functools.partial(_kernel, alpha=alpha, eps=eps)
     return pl.pallas_call(
         kern,

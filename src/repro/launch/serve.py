@@ -279,6 +279,78 @@ class PrefixIndex:
         self.entries.clear()
 
 
+class AllocatorModel:
+    """The engine's allocator discipline as a checkable transition system.
+
+    ``tools/audit``'s small-scope interleaving check drives REAL
+    ``PageAllocator`` instances through every op sequence up to a bounded
+    depth; this class is the single authority on which ops exist and what
+    each does, mirroring the engine's exact allocator interactions:
+
+      * ``alloc``      — admission maps a fresh page (``_map_prompt_pages``
+                         / decode table growth)
+      * ``incref(h)``  — a prefix-cache hit maps a held page into another
+                         slot's table read-only
+      * ``release(h)`` — a finished slot drops one table reference
+                         (``_free_slot_pages``)
+      * ``cow(h)``     — first divergent write to a still-shared page:
+                         allocate a private copy, drop the shared
+                         reference (``ServeEngine._cow``)
+
+    State is ``(allocator, holds)`` where ``holds`` is the tuple of
+    outstanding page-table references as ``(page, version-at-acquire)``
+    pairs.  The checker asserts, at every reachable state: refcounts equal
+    outstanding holds and never go negative, free pages are never held,
+    and any page recycled after an index entry was recorded carries a
+    bumped version (so stale prefix-index entries always fail
+    validation)."""
+
+    def __init__(self, n_pages: int = 4, allocator_cls=None):
+        self.n_pages = n_pages
+        self.allocator_cls = allocator_cls or PageAllocator
+
+    def initial(self):
+        return self.allocator_cls(self.n_pages), ()
+
+    def enabled_ops(self, alloc, holds):
+        """Op labels legal in this state (guards mirror engine call
+        sites, which only ever decref pages they hold)."""
+        ops = []
+        if alloc.free:
+            ops.append(("alloc",))
+        for i, (p, _) in enumerate(holds):
+            ops.append(("incref", i))
+            ops.append(("release", i))
+            if alloc.ref[p] > 1 and alloc.free:
+                ops.append(("cow", i))
+        return ops
+
+    def apply(self, alloc, holds, op):
+        """Apply ``op`` to copies of (alloc, holds); returns the new pair."""
+        import copy
+        alloc = copy.deepcopy(alloc)
+        holds = list(holds)
+        kind = op[0]
+        if kind == "alloc":
+            p = alloc.alloc()
+            holds.append((p, int(alloc.version[p])))
+        elif kind == "incref":
+            p, _ = holds[op[1]]
+            alloc.incref(p)
+            holds.append((p, int(alloc.version[p])))
+        elif kind == "release":
+            p, _ = holds.pop(op[1])
+            alloc.decref(p)
+        elif kind == "cow":
+            src, _ = holds[op[1]]
+            dst = alloc.alloc()                 # ServeEngine._cow order:
+            alloc.decref(src)                   # copy rows, then drop the
+            holds[op[1]] = (dst, int(alloc.version[dst]))  # shared ref
+        else:
+            raise ValueError(f"unknown op {op!r}")
+        return alloc, tuple(sorted(holds))
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------

@@ -223,8 +223,9 @@ def test_flash_bwd_skips_fully_masked_tiles():
 
 def test_ops_shim_is_gone_and_lint_passes():
     """kernels.ops served one deprecation cycle and is deleted; the tree
-    must not import it (enforced in CI by tools/check_no_ops_import.py,
-    invoked here so the lint is also a tier-1 test)."""
+    must not import it (enforced by the repro-audit ``no-ops-import``
+    pass — run through the ``python -m tools.audit`` runner here so the
+    lint is also a tier-1 test)."""
     import importlib
     import subprocess
     import sys
@@ -232,9 +233,9 @@ def test_ops_shim_is_gone_and_lint_passes():
         importlib.import_module("repro.kernels.ops")  # lint: allow-ops-ref
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     proc = subprocess.run(
-        [sys.executable, os.path.join(root, "tools",
-                                      "check_no_ops_import.py")],
-        capture_output=True, text=True)
+        [sys.executable, "-m", "tools.audit", "--strict",
+         "--only", "no-ops-import"],
+        cwd=root, capture_output=True, text=True, timeout=300)
     assert proc.returncode == 0, proc.stdout + proc.stderr
 
 

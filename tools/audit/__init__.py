@@ -1,0 +1,69 @@
+"""repro-audit: one runner over every static invariant the repo keeps.
+
+``python -m tools.audit`` runs four pass families (AST lints, dispatch
+contracts, Pallas kernel checks, allocator interleaving) and writes the
+machine-readable ``AUDIT.json`` next to the BENCH artifacts.  See
+``framework`` for the report schema and DESIGN.md §static-analysis for
+the invariants themselves.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from tools.audit.framework import (DEFAULT_VMEM_BUDGET, PassResult,
+                                   build_report, ensure_importable,
+                                   repo_root, summary_line, write_report)
+
+FAMILIES = ("ast", "contract", "kernel", "allocator")
+
+
+def run_audit(root: Optional[str] = None, *, strict: bool = False,
+              only: Optional[set] = None,
+              vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict:
+    """Run every registered pass (or the ``only`` subset, by pass name or
+    family name) and return the report dict."""
+    root = root or repo_root()
+    ensure_importable(root)
+    from tools.audit import alloc_model, ast_passes, contracts, kernel_check
+
+    def want(family: str, names) -> Optional[set]:
+        if only is None:
+            return None
+        if family in only:
+            return None             # whole family selected -> no filter
+        sel = {n for n in names if n in only}
+        return sel or set()         # empty set -> skip family
+
+    results: List[PassResult] = []
+
+    ast_names = [p.name for p in ast_passes.PASSES]
+    sel = want("ast", ast_names)
+    if sel is None or sel:
+        results += ast_passes.run_ast_passes(root, only=sel)
+
+    contract_names = ["registry-oracles", "resolver-decision-rows",
+                      "quant-note", "cache-leaf-sharding"]
+    sel = want("contract", contract_names)
+    if sel is None or sel:
+        results += contracts.run_contract_passes(root, only=sel)
+
+    sel = want("kernel", ["kernel-check"])
+    if sel is None or sel:
+        results += kernel_check.run_kernel_checks(root,
+                                                  vmem_budget=vmem_budget)
+
+    sel = want("allocator", ["alloc-interleaving"])
+    if sel is None or sel:
+        results += alloc_model.run_allocator_checks(root)
+
+    if only is not None and not results:
+        raise SystemExit(f"--only matched no registered pass: "
+                         f"{sorted(only)}")
+    return build_report(results, root, strict=strict)
+
+
+def quick_summary(root: Optional[str] = None) -> str:
+    """The one-liner ``benchmarks/run.py --quick`` prints: the cheap
+    families only (AST + contracts), no kernel abstract-eval."""
+    report = run_audit(root, only={"ast", "contract"})
+    return summary_line(report)

@@ -1,0 +1,59 @@
+"""CLI: ``python -m tools.audit [--strict] [--json PATH] [--only NAME]``.
+
+Exit codes: 0 = all passes clean; 1 = violations found (always, not just
+under --strict — --strict additionally fails the run on pass *errors*
+recorded as violations, and is what CI runs); 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.audit import DEFAULT_VMEM_BUDGET, run_audit
+from tools.audit.framework import repo_root, summary_line, write_report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.audit",
+        description="Static-analysis suite: AST lints, dispatch "
+                    "contracts, Pallas kernel checks, allocator "
+                    "interleaving.")
+    ap.add_argument("--strict", action="store_true",
+                    help="CI mode: nonzero exit on any violation")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write AUDIT.json here (default: "
+                         "<repo>/AUDIT.json)")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="NAME",
+                    help="run only this pass or family (repeatable); "
+                         "families: ast, contract, kernel, allocator")
+    ap.add_argument("--vmem-budget", type=int, default=DEFAULT_VMEM_BUDGET,
+                    help="per-grid-step VMEM budget in bytes for the "
+                         "kernel checker (default 16 MiB)")
+    ap.add_argument("--root", default=None, help="repo root override")
+    args = ap.parse_args(argv)
+
+    root = args.root or repo_root()
+    report = run_audit(root, strict=args.strict,
+                       only=set(args.only) if args.only else None,
+                       vmem_budget=args.vmem_budget)
+
+    for p in report["passes"]:
+        mark = "ok  " if p["status"] == "ok" else "FAIL"
+        print(f"  {mark} [{p['family']}] {p['name']}"
+              + (f"  ({len(p['violations'])} violation(s))"
+                 if p["violations"] else ""))
+        for v in p["violations"]:
+            loc = f"{v['path']}:{v['line']}" if v["line"] else v["path"]
+            print(f"       {loc}: {v['message']}")
+    print(summary_line(report))
+
+    out = args.json or f"{root}/AUDIT.json"
+    write_report(report, out)
+    print(f"report: {out}")
+    return 1 if report["summary"]["violations"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,196 @@
+"""Small-scope exhaustive interleaving check of the serve engine's
+``PageAllocator`` (family ``allocator``).
+
+Drives REAL ``PageAllocator`` instances (via ``launch.serve``'s
+``AllocatorModel`` export) through every interleaving of
+alloc / incref / release / COW-fork up to a bounded depth — the
+small-scope hypothesis: refcount/version bugs that exist at all show up
+within a handful of operations on a handful of pages.  Invariants
+checked on every reached state:
+
+  * refcounts never negative, and exactly equal to the live hold count;
+  * the free list never contains a held page (or duplicates), and page 0
+    (the garbage sink) is never handed out;
+  * a page's version never changes while a reference is live (so an
+    index entry recorded at acquire time stays valid exactly as long as
+    the page does);
+  * every recycle (refcount returning to 0) bumps the version by exactly
+    one — the property that makes stale ``PrefixIndex`` entries fail
+    validation instead of aliasing a reissued page.
+
+Coverage is part of the contract: the run must actually reach a COW fork
+and a recycled-page reuse, and reports the reached state count in
+``AUDIT.json`` (``allocator_model`` block) so CI can assert the scope
+didn't silently collapse.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from tools.audit.framework import PassResult, Violation, ensure_importable
+
+DEPTH = 6
+N_PAGES = 4
+
+
+def _canon(alloc, holds):
+    return (tuple(alloc.free), tuple(int(r) for r in alloc.ref),
+            tuple(int(v) for v in alloc.version), holds)
+
+
+def _invariants(alloc, holds, loc: str) -> List[Violation]:
+    v: List[Violation] = []
+
+    def V(msg):
+        v.append(Violation("alloc-interleaving", loc, 0, msg))
+    counts = {}
+    for p, _ in holds:
+        counts[p] = counts.get(p, 0) + 1
+    for p in range(alloc.n_pages):
+        r = int(alloc.ref[p])
+        if r < 0:
+            V(f"page {p}: negative refcount {r}")
+        if p == 0 and (r != 0 or 0 in counts):
+            V("page 0 (garbage sink) was handed out")
+        if p >= 1 and r != counts.get(p, 0):
+            V(f"page {p}: refcount {r} != live hold count "
+              f"{counts.get(p, 0)}")
+    if len(set(alloc.free)) != len(alloc.free):
+        V(f"free list has duplicates: {alloc.free}")
+    held = set(counts)
+    dup = held & set(alloc.free)
+    if dup:
+        V(f"pages {sorted(dup)} simultaneously held and on the free list")
+    if 0 in alloc.free:
+        V("page 0 (garbage sink) is on the free list")
+    for p, ver in holds:
+        cur = int(alloc.version[p])
+        if cur != ver:
+            V(f"page {p}: version moved {ver} -> {cur} while a reference "
+              "is live (use-after-recycle without version bump)")
+    return v
+
+
+def explore(model, depth: int = DEPTH) -> "tuple[List[Violation], dict]":
+    """BFS every op interleaving to ``depth``, checking invariants on
+    each transition.  ``model`` is ``launch.serve.AllocatorModel`` (or a
+    fixture with an intentionally broken allocator_cls)."""
+    violations: List[Violation] = []
+    alloc0, holds0 = model.initial()
+    loc = f"allocator:{type(alloc0).__name__}"
+    violations.extend(_invariants(alloc0, holds0, loc))
+    frontier = [(alloc0, holds0)]
+    seen = {_canon(alloc0, holds0)}
+    stats = {"depth": depth, "n_pages": model.n_pages,
+             "states_explored": 1, "ops_applied": 0,
+             "cow_forks": 0, "recycle_reuse": 0}
+    for _ in range(depth):
+        nxt = []
+        for alloc, holds in frontier:
+            for op in model.enabled_ops(alloc, holds):
+                will_pop = alloc.free[-1] if op[0] in ("alloc", "cow") \
+                    and alloc.free else None
+                recycled = will_pop is not None and \
+                    int(alloc.version[will_pop]) > 0
+                recycle_before = None
+                if op[0] == "release":
+                    p_rel = holds[op[1]][0]
+                    recycle_before = (p_rel, int(alloc.ref[p_rel]),
+                                      int(alloc.version[p_rel]))
+                try:
+                    a2, h2 = model.apply(alloc, holds, op)
+                except Exception as e:
+                    violations.append(Violation(
+                        "alloc-interleaving", loc, 0,
+                        f"op {op!r} raised {e!r} though enabled"))
+                    continue
+                stats["ops_applied"] += 1
+                if op[0] == "cow":
+                    stats["cow_forks"] += 1
+                if recycled:
+                    stats["recycle_reuse"] += 1
+                errs = _invariants(a2, h2, loc)
+                if recycle_before is not None:
+                    p_rel, r_before, v_before = recycle_before
+                    if r_before == 1:          # this release recycles
+                        v_after = int(a2.version[p_rel])
+                        if v_after != v_before + 1:
+                            errs.append(Violation(
+                                "alloc-interleaving", loc, 0,
+                                f"recycling page {p_rel} moved version "
+                                f"{v_before} -> {v_after}, expected "
+                                f"{v_before + 1} — stale index entries "
+                                "would alias the reissued page"))
+                        if p_rel not in a2.free:
+                            errs.append(Violation(
+                                "alloc-interleaving", loc, 0,
+                                f"page {p_rel} recycled but not returned "
+                                "to the free list (leak)"))
+                if errs:
+                    trimmed = errs[:4]
+                    for e in trimmed:
+                        e.message += f" [after op {op!r}]"
+                    violations.extend(trimmed)
+                    continue                     # don't explore past a bug
+                key = _canon(a2, h2)
+                if key not in seen:
+                    seen.add(key)
+                    nxt.append((a2, h2))
+        frontier = nxt
+        stats["states_explored"] = len(seen)
+    return violations, stats
+
+
+def replay_trace(allocator, trace) -> List[Violation]:
+    """Apply a raw op trace (``("alloc",) | ("incref", p) |
+    ("decref", p)``) to a live allocator, checking invariant basics after
+    every op — the harness the known-bad underflow fixture runs under."""
+    v: List[Violation] = []
+    loc = f"allocator:{type(allocator).__name__}"
+    for i, op in enumerate(trace):
+        try:
+            if op[0] == "alloc":
+                p = allocator.alloc()
+                if p == 0:
+                    v.append(Violation("alloc-interleaving", loc, 0,
+                                       f"step {i}: alloc handed out the "
+                                       "reserved sink page 0"))
+            elif op[0] == "incref":
+                allocator.incref(op[1])
+            elif op[0] == "decref":
+                allocator.decref(op[1])
+            else:
+                raise ValueError(f"unknown op {op!r}")
+        except (RuntimeError, ValueError) as e:
+            v.append(Violation("alloc-interleaving", loc, 0,
+                               f"step {i}: op {op!r} raised {e!r}"))
+            return v
+        neg = [int(p) for p in range(allocator.n_pages)
+               if allocator.ref[p] < 0]
+        if neg:
+            v.append(Violation(
+                "alloc-interleaving", loc, 0,
+                f"step {i}: op {op!r} drove refcount(s) negative on "
+                f"page(s) {neg} — decref without a matching reference"))
+            return v
+    return v
+
+
+def run_allocator_checks(root: str, *, depth: int = DEPTH,
+                         n_pages: int = N_PAGES) -> List[PassResult]:
+    ensure_importable(root)
+    from repro.launch.serve import AllocatorModel
+    violations, stats = explore(AllocatorModel(n_pages=n_pages),
+                                depth=depth)
+    if not stats["cow_forks"]:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            "interleaving never reached a COW fork — scope too small to "
+            "mean anything"))
+    if not stats["recycle_reuse"]:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            "interleaving never re-issued a recycled page — the "
+            "version-bump path is unexercised"))
+    return [PassResult("alloc-interleaving", "allocator", violations,
+                       stats)]

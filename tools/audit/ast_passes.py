@@ -1,0 +1,293 @@
+"""AST lint passes (family ``ast``) — the pluggable generalization of the
+old ``tools/check_no_ops_import.py`` script.
+
+Each pass is a class with a ``name``, a ``scope`` (repo subdirs it walks)
+and a ``check_file(rel, tree, lines)`` hook returning violations; a pass
+may also implement ``finalize(root)`` for whole-tree checks (e.g. "the
+deleted shim file must not exist").  Register new passes in ``PASSES``.
+
+An inline ``# lint: allow-<pass-name>`` (or the legacy
+``lint: allow-ops-ref``) comment on the offending line suppresses that
+line — used by tests that assert an import *fails*.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import List, Optional
+
+from tools.audit.framework import PassResult, Violation, iter_py_files
+
+KERNEL_MODULES = frozenset({"flash_attention", "flash_attention_bwd",
+                            "decode_attention", "rmsnorm",
+                            "shared_rmsprop"})
+_STEP_NAME = re.compile(r"(^|_)step(_|$)")
+
+
+def _allowed(lines: List[str], lineno: int, name: str) -> bool:
+    if not 1 <= lineno <= len(lines):
+        return False
+    line = lines[lineno - 1]
+    return f"lint: allow-{name}" in line or "lint: allow-ops-ref" in line
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.key' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class AstPass:
+    name = ""
+    description = ""
+    scope = ("src",)
+
+    def check_file(self, rel: str, tree: ast.AST,
+                   lines: List[str]) -> List[Violation]:
+        raise NotImplementedError
+
+    def finalize(self, root: str) -> List[Violation]:
+        return []
+
+    def _v(self, rel: str, line: int, msg: str) -> Violation:
+        return Violation(self.name, rel, line, msg)
+
+
+# built by concatenation so this module's own AST never holds the literal
+# the pass hunts for (the linter must pass its own lint)
+_OPS = "repro.kernels" + ".ops"
+
+
+class NoOpsImportPass(AstPass):
+    """The kernels ops shim served one deprecation cycle (PR 5) and is
+    deleted (PR 6); nothing may import it or re-grow the shim file."""
+    name = "no-ops-import"
+    description = "no imports of the deleted kernels.ops shim"
+    scope = ("src", "tests", "benchmarks", "tools", "examples")
+
+    def check_file(self, rel, tree, lines):
+        out = []
+        in_kernels = os.path.basename(os.path.dirname(rel)) == "kernels"
+
+        def flag(node, what):
+            if not _allowed(lines, node.lineno, self.name):
+                out.append(self._v(rel, node.lineno,
+                                   f"kernels.ops is deleted ({what}); use "
+                                   "repro.kernels.dispatch"))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == _OPS or a.name.startswith(_OPS + "."):
+                        flag(node, f"import {a.name}")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                names = {a.name for a in node.names}
+                if mod == _OPS:
+                    flag(node, f"from {mod} import ...")
+                elif mod in ("repro.kernels", "kernels") and "ops" in names:
+                    flag(node, f"from {mod} import ops")
+                elif node.level >= 1 and mod == "kernels" and "ops" in names:
+                    flag(node, "from .kernels import ops")
+                elif node.level >= 1 and not mod and "ops" in names \
+                        and in_kernels:
+                    flag(node, "from . import ops")
+            elif isinstance(node, ast.Constant) and node.value == _OPS:
+                flag(node, "string reference")
+        return out
+
+    def finalize(self, root):
+        shim = os.path.join(root, "src", "repro", "kernels", "ops.py")
+        if os.path.exists(shim):
+            return [self._v("src/repro/kernels/ops.py", 0,
+                            "deleted shim file has grown back")]
+        return []
+
+
+class KernelImportContainmentPass(AstPass):
+    """Pallas kernel implementation modules are reachable only through
+    ``kernels/dispatch.py`` — model/launch/core code importing a kernel
+    directly bypasses backend resolution, alignment checks, and the
+    decision log."""
+    name = "kernel-import-containment"
+    description = "no Pallas kernel module imported outside kernels/"
+    scope = ("src",)
+
+    def check_file(self, rel, tree, lines):
+        norm = rel.replace(os.sep, "/")
+        if "/repro/kernels/" in norm:
+            return []                    # intra-package imports are fine
+        out = []
+
+        def flag(node, mod):
+            if not _allowed(lines, node.lineno, self.name):
+                out.append(self._v(
+                    rel, node.lineno,
+                    f"kernel module '{mod}' imported outside "
+                    "kernels/dispatch.py; route through "
+                    "repro.kernels.dispatch"))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    parts = a.name.split(".")
+                    if "kernels" in parts and parts[-1] in KERNEL_MODULES:
+                        flag(node, parts[-1])
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                parts = mod.split(".")
+                if parts[-1] in KERNEL_MODULES and "kernels" in parts:
+                    flag(node, parts[-1])
+                elif parts[-1] == "kernels":
+                    for a in node.names:
+                        if a.name in KERNEL_MODULES:
+                            flag(node, a.name)
+        return out
+
+
+class NoDefaultBackendPass(AstPass):
+    """Kernel and serve paths must resolve the platform from the lowering
+    target (``ctx.current_platform()``), never from
+    ``jax.default_backend()`` — a CPU host lowering a TPU mesh program
+    would otherwise pick interpret-mode kernels for the TPU (PR 2
+    policy; ``repro.distributed.ctx`` is the single authority and is
+    exempt)."""
+    name = "no-default-backend"
+    description = "no jax.default_backend() in kernel/serve paths"
+    scope = ("src",)
+    _paths = ("repro/kernels/", "repro/launch/")
+    _exempt = ()
+
+    def check_file(self, rel, tree, lines):
+        norm = rel.replace(os.sep, "/")
+        if not any(p in norm for p in self._paths):
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                dotted = _dotted(node.func)
+                if dotted and dotted.endswith("default_backend") and \
+                        not _allowed(lines, node.lineno, self.name):
+                    out.append(self._v(
+                        rel, node.lineno,
+                        "jax.default_backend() in a kernel/serve path; "
+                        "use ctx.current_platform() (or "
+                        "kernels._interpret.default_interpret) so the "
+                        "lowering TARGET decides"))
+        return out
+
+
+class StepKeyPass(AstPass):
+    """PRNG keys must be threaded into step functions, not rebuilt inside
+    them: ``jax.random.key(seed)`` re-created per step yields correlated
+    streams (the PR 4 serve-sampling bug class).  Flags any
+    ``jax.random.key`` / ``jax.random.PRNGKey`` call lexically inside a
+    function whose name contains a ``step`` segment (``decode_step``,
+    ``make_serve_step``'s inner fns, ...)."""
+    name = "no-step-key-rebuild"
+    description = "no jax.random.key() rebuilt inside step functions"
+    scope = ("src",)
+    _key_fns = ("random.key", "random.PRNGKey")
+
+    def check_file(self, rel, tree, lines):
+        out = []
+        pass_ = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[str] = []
+
+            def _in_step(self):
+                return any(_STEP_NAME.search(n) for n in self.stack)
+
+            def visit_FunctionDef(self, node):
+                self.stack.append(node.name)
+                self.generic_visit(node)
+                self.stack.pop()
+            visit_AsyncFunctionDef = visit_FunctionDef
+
+            def visit_Call(self, node):
+                dotted = _dotted(node.func) or ""
+                if self._in_step() and \
+                        any(dotted.endswith(k) for k in pass_._key_fns) \
+                        and not _allowed(lines, node.lineno, pass_.name):
+                    out.append(pass_._v(
+                        rel, node.lineno,
+                        f"{dotted}(...) rebuilt inside step function "
+                        f"'{self.stack[-1]}': thread the key in and "
+                        "fold_in per step instead (correlated-streams "
+                        "bug class)"))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        return out
+
+
+class FallbackReasonPass(AstPass):
+    """Every dispatch decision row must carry a non-empty reason string —
+    a bare jnp fallback with no logged reason is undiagnosable from the
+    dry-run/serve dispatch summaries."""
+    name = "fallback-reason"
+    description = "every _decide() call passes a non-empty reason"
+    scope = ("src",)
+
+    def check_file(self, rel, tree, lines):
+        norm = rel.replace(os.sep, "/")
+        if "repro/kernels/" not in norm:
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func) or ""
+            if dotted.split(".")[-1] != "_decide":
+                continue
+            reason = node.args[2] if len(node.args) >= 3 else None
+            if reason is None:
+                reason = next((kw.value for kw in node.keywords
+                               if kw.arg == "reason"), None)
+            if reason is None:
+                out.append(self._v(rel, node.lineno,
+                                   "_decide() without a reason argument"))
+            elif isinstance(reason, ast.Constant) and \
+                    isinstance(reason.value, str) and not \
+                    reason.value.strip():
+                out.append(self._v(rel, node.lineno,
+                                   "_decide() with an empty reason "
+                                   "string"))
+        return out
+
+
+PASSES = (NoOpsImportPass(), KernelImportContainmentPass(),
+          NoDefaultBackendPass(), StepKeyPass(), FallbackReasonPass())
+
+
+def run_pass(p: AstPass, root: str, files=None) -> PassResult:
+    """Run one AST pass over its scope (or an explicit file list — the
+    fixture tests point passes at ``tools/audit/fixtures``)."""
+    paths = files if files is not None else iter_py_files(root, p.scope)
+    violations, parsed = [], 0
+    for path in paths:
+        rel = os.path.relpath(path, root)
+        try:
+            src = open(path, encoding="utf-8", errors="replace").read()
+            tree = ast.parse(src, filename=path)
+        except SyntaxError as e:
+            violations.append(Violation(p.name, rel, e.lineno or 0,
+                                        f"syntax error: {e.msg}"))
+            continue
+        parsed += 1
+        violations.extend(p.check_file(rel, tree, src.splitlines()))
+    if files is None:
+        violations.extend(p.finalize(root))
+    return PassResult(p.name, "ast", violations, {"files": parsed})
+
+
+def run_ast_passes(root: str, only=None) -> List[PassResult]:
+    return [run_pass(p, root) for p in PASSES
+            if only is None or p.name in only]

@@ -1,0 +1,295 @@
+"""Dispatch-contract auditor (family ``contract``).
+
+Imports ``repro.kernels.dispatch`` / ``repro.kernels.ref`` and statically
+cross-checks the registries against each other and against the sharding
+rules — the invariants here are exactly the ones a new kernel arm is most
+likely to miss:
+
+  * registry-oracles      every registered op's entry / ref-oracle /
+                          quant-oracle / resolver / delegate actually
+                          exist, and every public dispatch entry with a
+                          ``backend=`` parameter is registered.
+  * resolver-decision-rows  every return path of every resolver (and of
+                          the delegating paged entries) emits a decision
+                          row — no arm can be picked silently.
+  * quant-note            every op with a quant oracle amends its
+                          decision row for the int8 case.
+  * cache-leaf-sharding   every cache leaf produced by
+                          ``models.attention`` (f32/int8 x contiguous/
+                          paged, incl. the ks|vs|kps|vps scale leaves)
+                          matches an explicit rule in
+                          ``sharding.cache_shardings``, and scale leaves
+                          are rank-matched to their payloads so both hit
+                          the SAME rule.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import os
+import re
+from typing import List
+
+from tools.audit.framework import PassResult, Violation, ensure_importable
+
+
+def _contains_decide(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = n.func
+            name = f.attr if isinstance(f, ast.Attribute) else \
+                getattr(f, "id", None)
+            if name == "_decide":
+                return True
+    return False
+
+
+def _scan_returns(stmts, decided: bool, missing: List[int]) -> None:
+    """Flag every ``return`` not preceded (in its own or an enclosing
+    block) by a ``_decide`` call and not containing one itself.  A
+    ``_decide`` inside a nested branch does NOT mark the code after the
+    branch as decided — the branch may not execute."""
+    for st in stmts:
+        if isinstance(st, ast.Return):
+            if not decided and not (st.value is not None
+                                    and _contains_decide(st.value)):
+                missing.append(st.lineno)
+        elif isinstance(st, (ast.Expr, ast.Assign, ast.AugAssign,
+                             ast.AnnAssign)):
+            if _contains_decide(st):
+                decided = True
+        elif isinstance(st, (ast.If, ast.For, ast.While)):
+            _scan_returns(st.body, decided, missing)
+            _scan_returns(st.orelse, decided, missing)
+        elif isinstance(st, ast.Try):
+            _scan_returns(st.body, decided, missing)
+            for h in st.handlers:
+                _scan_returns(h.body, decided, missing)
+            _scan_returns(st.orelse, decided, missing)
+            _scan_returns(st.finalbody, decided, missing)
+        elif isinstance(st, ast.With):
+            _scan_returns(st.body, decided, missing)
+
+
+def _refs_name(fn_node: ast.AST, name: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == name
+               for n in ast.walk(fn_node))
+
+
+def _has_int8_marker(fn_node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Constant) and isinstance(n.value, str)
+               and "int8" in n.value for n in ast.walk(fn_node))
+
+
+def _function_defs(tree: ast.Module) -> dict:
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def check_registry_oracles(root: str) -> PassResult:
+    ensure_importable(root)
+    from repro.kernels import dispatch, ref
+    v: List[Violation] = []
+    loc = "src/repro/kernels/dispatch.py"
+
+    def V(msg):
+        v.append(Violation("registry-oracles", loc, 0, msg))
+
+    ops = dispatch.KERNEL_OPS
+    for name, c in ops.items():
+        if not callable(c.entry):
+            V(f"op '{name}': entry is not callable")
+        if not callable(getattr(ref, c.oracle, None)):
+            V(f"op '{name}': oracle '{c.oracle}' missing from ref.py")
+        if c.quant_oracle is not None and \
+                not callable(getattr(ref, c.quant_oracle, None)):
+            V(f"op '{name}': quant oracle '{c.quant_oracle}' missing "
+              "from ref.py")
+        if c.resolver is not None and \
+                not callable(getattr(dispatch, c.resolver, None)):
+            V(f"op '{name}': resolver '{c.resolver}' missing from "
+              "dispatch.py")
+        if c.delegate is not None and c.delegate not in ops:
+            V(f"op '{name}': delegate '{c.delegate}' is not a registered "
+              "op")
+        if c.resolver is None and c.delegate is None and \
+                name not in ("rmsprop_update",):
+            V(f"op '{name}': neither resolver nor delegate — how is its "
+              "backend picked?")
+
+    # reverse direction: every public dispatch entry taking backend= must
+    # be registered, else it escapes all contract/kernel checks
+    registered = {c.entry.__name__ for c in ops.values()}
+    for fname, fn in vars(dispatch).items():
+        if fname.startswith("_") or not inspect.isfunction(fn):
+            continue
+        if fn.__module__ != dispatch.__name__:
+            continue
+        try:
+            params = inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            continue
+        if "backend" in params and fname not in registered:
+            V(f"public entry '{fname}' takes backend= but is not in "
+              "KERNEL_OPS — unauditable arm")
+    return PassResult("registry-oracles", "contract", v,
+                      {"ops": len(ops), "entries_scanned": len(registered)})
+
+
+def check_decision_rows(root: str, dispatch_src: str = None) -> PassResult:
+    """AST check: every return path of every resolver and every delegating
+    entry emits a decision row (``dispatch_src`` overrides the file for
+    fixture tests)."""
+    ensure_importable(root)
+    from repro.kernels import dispatch
+    path = dispatch_src or os.path.join(root, "src", "repro", "kernels",
+                                        "dispatch.py")
+    rel = os.path.relpath(path, root)
+    tree = ast.parse(open(path, encoding="utf-8").read(), filename=path)
+    defs = _function_defs(tree)
+    targets = []
+    for name, c in dispatch.KERNEL_OPS.items():
+        if c.resolver is not None:
+            targets.append(c.resolver)
+        if c.delegate is not None:
+            targets.append(c.entry.__name__)
+    v: List[Violation] = []
+    checked = 0
+    for t in sorted(set(targets)):
+        node = defs.get(t)
+        if node is None:
+            v.append(Violation("resolver-decision-rows", rel, 0,
+                               f"'{t}' referenced by KERNEL_OPS but not "
+                               "defined at module top level"))
+            continue
+        checked += 1
+        missing: List[int] = []
+        _scan_returns(node.body, False, missing)
+        for ln in missing:
+            v.append(Violation(
+                "resolver-decision-rows", rel, ln,
+                f"return path in '{t}' without a _decide() decision row "
+                "— this arm would be picked silently"))
+    return PassResult("resolver-decision-rows", "contract", v,
+                      {"functions_checked": checked})
+
+
+def check_quant_note(root: str, dispatch_src: str = None) -> PassResult:
+    """Every op with a quant oracle must amend its decision row for the
+    int8 case: its entry references ``_quant_note`` (contiguous arms) or
+    carries an explicit int8 reason amendment (delegating paged arms)."""
+    ensure_importable(root)
+    from repro.kernels import dispatch
+    path = dispatch_src or os.path.join(root, "src", "repro", "kernels",
+                                        "dispatch.py")
+    rel = os.path.relpath(path, root)
+    tree = ast.parse(open(path, encoding="utf-8").read(), filename=path)
+    defs = _function_defs(tree)
+    v: List[Violation] = []
+    checked = 0
+    for name, c in dispatch.KERNEL_OPS.items():
+        if c.quant_oracle is None:
+            continue
+        node = defs.get(c.entry.__name__)
+        if node is None:
+            continue        # registry-oracles already flags this
+        checked += 1
+        if not (_refs_name(node, "_quant_note") or _has_int8_marker(node)):
+            v.append(Violation(
+                "quant-note", rel, node.lineno,
+                f"quantized op '{name}' ({c.entry.__name__}) never amends "
+                "its decision row for int8 (_quant_note or an int8 reason "
+                "string)"))
+    return PassResult("quant-note", "contract", v,
+                      {"quant_ops_checked": checked})
+
+
+def _sharding_patterns(root: str) -> List[str]:
+    """The ``re.search(<pattern>, ps)`` constants inside
+    ``cache_shardings`` — the explicit leaf rules."""
+    path = os.path.join(root, "src", "repro", "distributed", "sharding.py")
+    tree = ast.parse(open(path, encoding="utf-8").read(), filename=path)
+    fn = _function_defs(tree).get("cache_shardings")
+    pats = []
+    if fn is not None:
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Call) and \
+                    isinstance(n.func, ast.Attribute) and \
+                    n.func.attr == "search" and n.args and \
+                    isinstance(n.args[0], ast.Constant) and \
+                    isinstance(n.args[0].value, str):
+                pats.append(n.args[0].value)
+    return pats
+
+
+def check_cache_leaf_sharding(root: str) -> PassResult:
+    ensure_importable(root)
+    import jax
+    import jax.numpy as jnp
+    from repro.models import attention
+
+    rel = "src/repro/distributed/sharding.py"
+    v: List[Violation] = []
+    pats = _sharding_patterns(root)
+    if not pats:
+        v.append(Violation("cache-leaf-sharding", rel, 0,
+                           "no re.search pattern constants found in "
+                           "cache_shardings — rules are not auditable"))
+        return PassResult("cache-leaf-sharding", "contract", v,
+                          {"patterns": 0})
+
+    def trees():
+        for dtype, tag in ((jnp.bfloat16, "bf16"), (jnp.int8, "int8")):
+            yield tag + "/contiguous", jax.eval_shape(
+                lambda: attention.init_kv_cache(2, 1024, 2, 64, dtype))
+            yield tag + "/paged", jax.eval_shape(
+                lambda: attention.init_paged_kv_cache(
+                    2, 1024, 2, 64, page_size=128, n_pages=24,
+                    dtype=dtype))
+
+    scale_to_payload = {"ks": "k", "vs": "v", "kps": "kp", "vps": "vp"}
+    leaves_checked = 0
+    for tag, tree in trees():
+        for leaf_name, leaf in tree.items():
+            leaves_checked += 1
+            ps = "/" + leaf_name       # path string as _path_str renders it
+            if leaf.ndim == 0 or ps.endswith("index"):
+                continue               # scalar/index rule (non-regex arm)
+            hits = [p for p in pats if re.search(p, ps)]
+            if not hits:
+                v.append(Violation(
+                    "cache-leaf-sharding", rel, 0,
+                    f"cache leaf '{leaf_name}' ({tag}, shape "
+                    f"{tuple(leaf.shape)}) matches no explicit rule in "
+                    "cache_shardings — it would fall to the SSM/state "
+                    "heuristic"))
+            payload = scale_to_payload.get(leaf_name)
+            if payload is not None:
+                pl_leaf = tree[payload]
+                if leaf.ndim != pl_leaf.ndim:
+                    v.append(Violation(
+                        "cache-leaf-sharding", rel, 0,
+                        f"scale leaf '{leaf_name}' rank {leaf.ndim} != "
+                        f"payload '{payload}' rank {pl_leaf.ndim} — "
+                        "layout treatments no longer apply verbatim"))
+                pl_hits = [p for p in pats if re.search(p, "/" + payload)]
+                if hits and pl_hits and hits != pl_hits:
+                    v.append(Violation(
+                        "cache-leaf-sharding", rel, 0,
+                        f"scale leaf '{leaf_name}' matches {hits} but "
+                        f"payload '{payload}' matches {pl_hits} — the "
+                        "pair must hit the same rule"))
+    return PassResult("cache-leaf-sharding", "contract", v,
+                      {"patterns": len(pats),
+                       "leaves_checked": leaves_checked})
+
+
+def run_contract_passes(root: str, only=None) -> List[PassResult]:
+    checks = {
+        "registry-oracles": check_registry_oracles,
+        "resolver-decision-rows": check_decision_rows,
+        "quant-note": check_quant_note,
+        "cache-leaf-sharding": check_cache_leaf_sharding,
+    }
+    return [fn(root) for name, fn in checks.items()
+            if only is None or name in only]

@@ -1,0 +1,39 @@
+"""Known-bad page allocator for the interleaving check: recycling a page
+does NOT bump its version (stale prefix-index entries would alias the
+reissued page) and refcounts may go negative.  Plus the raw underflow
+trace the replay harness must catch on the REAL allocator's op
+vocabulary."""
+import numpy as np
+
+
+class NoVersionBumpAllocator:
+    """Same surface as launch.serve.PageAllocator, minus the safety."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.free = list(range(n_pages - 1, 0, -1))
+        self.ref = np.zeros(n_pages, np.int32)
+        self.version = np.zeros(n_pages, np.int64)
+
+    def alloc(self) -> int:
+        if not self.free:
+            raise RuntimeError("page pool exhausted")
+        p = self.free.pop()
+        self.ref[p] = 1
+        return p
+
+    def incref(self, p: int) -> None:
+        self.ref[p] += 1
+
+    def decref(self, p: int) -> None:
+        self.ref[p] -= 1
+        if self.ref[p] <= 0:
+            # BUG 1: no version bump — a recycled page is
+            # indistinguishable from the page an old index entry named
+            # BUG 2: <= 0 masks refcount underflow instead of failing
+            self.free.append(p)
+
+
+# alloc on a fresh 4-page pool hands out page 3 (LIFO); the second decref
+# has no matching reference and must be reported as underflow
+UNDERFLOW_TRACE = (("alloc",), ("decref", 3), ("decref", 3))

@@ -1,0 +1,4 @@
+"""Known-bad: kernel modules imported directly, bypassing dispatch."""
+from repro.kernels import flash_attention          # noqa: F401
+from repro.kernels.decode_attention import decode_attention_fwd  # noqa: F401
+import repro.kernels.rmsnorm                       # noqa: F401

@@ -1,0 +1,6 @@
+"""Known-bad: every spelling of the deleted kernels.ops shim import."""
+import repro.kernels.ops                     # noqa: F401
+from repro.kernels import ops                # noqa: F401
+from repro.kernels.ops import flash_attention  # noqa: F401
+
+ENTRY = "repro.kernels.ops"

@@ -1,0 +1,14 @@
+"""Known-bad: decision rows without a reason — a bare jnp fallback that
+cannot be diagnosed from the dispatch summary."""
+
+
+def _decide(op, backend, reason=None):
+    return (op, backend, reason)
+
+
+def resolve(aligned):
+    if not aligned:
+        _decide("flash_attention", "jnp", "")     # flagged: empty reason
+        return "jnp"
+    _decide("flash_attention", "pallas")          # flagged: no reason arg
+    return "pallas"

@@ -1,0 +1,7 @@
+"""Known-bad: interpret-mode keyed off the HOST platform.  A CPU host
+lowering a TPU mesh program would pick interpreted kernels for the TPU."""
+import jax
+
+
+def pick_interpret():
+    return jax.default_backend() == "cpu"    # flagged: host, not target

@@ -1,0 +1,20 @@
+"""Known-bad: PRNG keys rebuilt inside step functions (correlated
+streams across steps — the serve-sampling bug class)."""
+import jax
+
+
+def decode_step(logits, seed):
+    key = jax.random.key(seed)               # flagged: rebuilt per step
+    return jax.random.categorical(key, logits)
+
+
+def make_serve_step(seed):
+    def step_fn(logits):
+        key = jax.random.PRNGKey(0)          # flagged: inner step fn
+        return jax.random.categorical(key, logits)
+    return step_fn
+
+
+def warmup(seed):
+    # NOT flagged: not a step function — keys may be built at setup time
+    return jax.random.key(seed)

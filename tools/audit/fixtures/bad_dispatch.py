@@ -1,0 +1,17 @@
+"""Known-bad dispatch source for the resolver-decision-rows check: the
+resolver below has a return path that picks an arm WITHOUT emitting a
+decision row — exactly the silent-fallback bug the contract forbids.
+``contracts.check_decision_rows`` is pointed at this file via its
+``dispatch_src`` override."""
+
+
+def _decide(op, backend, reason):
+    return (op, backend, reason)
+
+
+def _resolve_flash(b, s, hq, hkv, backend):
+    if backend == "jnp":
+        return _decide("flash_attention", "jnp", "explicit backend"), None
+    if s % 128:
+        return None, None        # flagged: silent jnp fallback, no row
+    return _decide("flash_attention", "pallas", "aligned"), "spec"

@@ -1,0 +1,152 @@
+"""repro-audit plumbing: pass/violation types, file walking, the report.
+
+A *pass* is one machine-checked invariant (or a tight family of them).
+Every pass returns a :class:`PassResult`; the runner aggregates them into
+the machine-readable ``AUDIT.json`` report that CI uploads next to the
+``BENCH_*.json`` artifacts, so the perf trajectory and the invariant
+trajectory live side by side.
+
+Pass families (see DESIGN.md §static-analysis):
+
+  * ``ast``       — pluggable AST lints over the tree (``ast_passes.py``)
+  * ``contract``  — dispatch/ref/sharding registry cross-checks
+                    (``contracts.py``)
+  * ``kernel``    — grid/BlockSpec abstract-eval checks over every
+                    registered Pallas kernel (``kernel_check.py``)
+  * ``allocator`` — small-scope exhaustive interleaving check of the
+                    serve engine's ``PageAllocator`` (``alloc_model.py``)
+
+Adding a pass: implement it in the matching module, give it a unique
+``name``, and register it in that module's ``PASSES`` tuple (AST passes)
+or its ``run_*`` entry point — the runner discovers passes through those
+module-level registries only, so a pass that is not registered does not
+run (and ``tools.audit --only <name>`` will say so).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+DEFAULT_VMEM_BUDGET = 16 * 2 ** 20      # one TPU core's VMEM, bytes
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "results", ".venv",
+             "fixtures"}                # fixtures are known-bad on purpose
+
+
+@dataclasses.dataclass
+class Violation:
+    pass_name: str
+    path: str          # repo-relative file, or a logical location
+    line: int
+    message: str
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.pass_name}] {self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class PassResult:
+    name: str
+    family: str                       # "ast"|"contract"|"kernel"|"allocator"
+    violations: List[Violation]
+    stats: Dict[str, object]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def as_dict(self) -> dict:
+        return {"name": self.name, "family": self.family,
+                "status": "ok" if self.ok else "fail",
+                "violations": [v.as_dict() for v in self.violations],
+                "stats": self.stats}
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def ensure_importable(root: str) -> None:
+    """Make ``repro`` (src layout) importable for the contract/kernel
+    passes without requiring the caller to have exported PYTHONPATH."""
+    src = os.path.join(root, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def iter_py_files(root: str, subdirs) -> List[str]:
+    """All .py files under ``root/<subdir>`` for each subdir, skipping
+    caches and the known-bad fixtures."""
+    out = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(d for d in dirnames if d not in SKIP_DIRS)
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def provenance(root: str) -> dict:
+    info: dict = {}
+    try:
+        info["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10).stdout.strip()
+    except Exception:
+        info["git_sha"] = None
+    try:
+        import jax
+        info["jax_version"] = jax.__version__
+    except Exception:
+        info["jax_version"] = None
+    return info
+
+
+def build_report(results: List[PassResult], root: str, *,
+                 strict: bool) -> dict:
+    n_viol = sum(len(r.violations) for r in results)
+    report = {
+        "tool": "repro-audit",
+        "strict": strict,
+        "provenance": provenance(root),
+        "passes": [r.as_dict() for r in results],
+        "summary": {
+            "passes_total": len(results),
+            "passes_ok": sum(r.ok for r in results),
+            "passes_failed": sum(not r.ok for r in results),
+            "violations": n_viol,
+        },
+    }
+    alloc = next((r for r in results if r.family == "allocator"), None)
+    if alloc is not None:
+        # surfaced at top level so CI / tests can assert the state-count
+        # coverage of the interleaving check without digging
+        report["allocator_model"] = dict(alloc.stats)
+    return report
+
+
+def write_report(report: dict, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+
+def summary_line(report: dict) -> str:
+    """One-line pass/fail summary (``benchmarks/run.py --quick`` prints
+    this next to the perf rows)."""
+    s = report["summary"]
+    status = "ok" if s["passes_failed"] == 0 else "FAIL"
+    return (f"audit,{status},passes={s['passes_ok']}/{s['passes_total']},"
+            f"violations={s['violations']}")
