@@ -76,6 +76,30 @@ def test_cli_runner_strict_exit_code(tmp_path):
     assert report["allocator_model"]["cow_forks"] > 0
 
 
+def test_subset_run_never_clobbers_root_artifact(tmp_path):
+    """A ``--only`` subset run without ``--json`` must not overwrite the
+    committed <repo>/AUDIT.json — a 1-pass report in the full-suite slot
+    misrepresents coverage (the artifact CI uploads and consumers diff)."""
+    root_artifact = os.path.join(ROOT, "AUDIT.json")
+    before = open(root_artifact, "rb").read()
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.audit", "--strict",
+         "--only", "no-ops-import"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "report:" not in proc.stdout       # no report file claimed
+    assert open(root_artifact, "rb").read() == before
+    # an explicit --json still writes the subset report where asked
+    out = tmp_path / "subset.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.audit", "--strict",
+         "--only", "no-ops-import", "--json", str(out)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(out.read_text())["summary"]["passes_total"] == 1
+
+
 # ---------------------------------------------------------------------------
 # AST passes vs fixtures
 # ---------------------------------------------------------------------------

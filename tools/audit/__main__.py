@@ -23,7 +23,9 @@ def main(argv=None) -> int:
                     help="CI mode: nonzero exit on any violation")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write AUDIT.json here (default: "
-                         "<repo>/AUDIT.json)")
+                         "<repo>/AUDIT.json for full runs; subset runs "
+                         "via --only write no report unless --json is "
+                         "given)")
     ap.add_argument("--only", action="append", default=None,
                     metavar="NAME",
                     help="run only this pass or family (repeatable); "
@@ -49,9 +51,14 @@ def main(argv=None) -> int:
             print(f"       {loc}: {v['message']}")
     print(summary_line(report))
 
-    out = args.json or f"{root}/AUDIT.json"
-    write_report(report, out)
-    print(f"report: {out}")
+    # Only a FULL run may claim the default <repo>/AUDIT.json slot: a
+    # --only subset silently overwriting the committed artifact would
+    # misrepresent 1-pass coverage as the whole suite.
+    out = args.json if args.json else (
+        None if args.only else f"{root}/AUDIT.json")
+    if out:
+        write_report(report, out)
+        print(f"report: {out}")
     return 1 if report["summary"]["violations"] else 0
 
 
