@@ -298,6 +298,132 @@ def bench_kv_dtypes(cfg, params, *, n_slots: int, n_requests: int,
     return rows, record
 
 
+def overload_trace(vocab: int, *, page_size: int, n_requests: int,
+                   seed: int) -> list:
+    """Shared-prefix trace engineered for page pressure: every prompt
+    opens with one full shared page, tails differ (rids 1,2 are exact
+    duplicates, so their shared partial page COW-forks at first decode
+    write), and every generation runs long enough to cross into a third
+    page — decode-time growth is guaranteed, so an undersized pool must
+    preempt."""
+    from repro.launch import serve as serve_mod
+
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, page_size).astype(np.int32)
+    dup_tail = rng.integers(0, vocab, 11).astype(np.int32)
+    trace = []
+    for rid in range(n_requests):
+        tail = dup_tail if rid in (1, 2) else rng.integers(
+            0, vocab, 8 + (rid % 4) * 7).astype(np.int32)
+        prompt = np.concatenate([shared, tail])
+        # crosses pos 2*page_size mid-decode: prompt < 1.5 pages and
+        # max_new == page_size lands the tail firmly in page 3
+        trace.append(serve_mod.Request(
+            rid=rid, prompt=prompt, max_new=page_size - (rid % 3) * 4,
+            arrival=0.0))
+    return trace
+
+
+def bench_overload(cfg, params, *, n_slots: int = 4, n_requests: int = 6,
+                   seed: int = 0) -> tuple:
+    """The robustness acceptance gate: the same greedy shared-prefix
+    trace on (a) an ample pool, (b) a pool at 50% of the slots'
+    worst-case demand under optimistic admission — must complete every
+    request through preempt-and-requeue with bit-identical tokens, (c)
+    the same tight pool under reserve admission — pure backpressure,
+    zero preemptions, and (d) the ample pool under a seeded FaultPlan
+    (injected alloc failures, forced preemptions, virtual-clock latency)
+    — still bit-identical.  Raises AssertionError on any miss, so the CI
+    chaos leg fails on crash or token mismatch.  Returns (rows, record)
+    for the BENCH_serve.json ``overload`` section."""
+    from repro.launch import serve as serve_mod
+    from repro.launch import traffic
+
+    ps, cache_len, chunk = 64, 192, 64
+    max_pages = cache_len // ps                       # 3 per slot
+    tight = 1 + (n_slots * max_pages) // 2            # 6 usable = 50%
+    legs = {
+        "ample": dict(n_pages=0, admission="reserve"),
+        "tight_optimistic": dict(n_pages=tight, admission="optimistic"),
+        "tight_reserve": dict(n_pages=tight, admission="reserve"),
+        "faulted": dict(n_pages=0, admission="optimistic",
+                        fault_plan=serve_mod.FaultPlan.random(
+                            seed + 1, n_steps=160, n_alloc_calls=48,
+                            alloc_fail_p=0.15, preempt_p=0.04,
+                            latency_p=0.1, max_latency=0.005,
+                            hold_pages=2),
+                        clock=lambda: 0.0),
+    }
+    recs, toks = {}, {}
+    for leg, kw in legs.items():
+        trace = overload_trace(cfg.vocab_size, page_size=ps,
+                               n_requests=n_requests, seed=seed)
+        recs[leg] = serve_mod.run_engine(
+            cfg, params, trace, n_slots=n_slots, cache_len=cache_len,
+            chunk=chunk, sample=False, seed=seed, page_size=ps, **kw)
+        toks[leg] = {r.rid: list(r.tokens) for r in trace}
+        rec = recs[leg]
+        rb = rec["robustness"]
+        assert rec["requests"] == n_requests, \
+            f"{leg}: only {rec['requests']}/{n_requests} completed " \
+            f"(sheds={rb['sheds']})"
+        assert sum(len(t) for t in toks[leg].values()) == \
+            sum(r.max_new for r in trace), f"{leg}: token count drifted"
+    for leg in ("tight_optimistic", "tight_reserve", "faulted"):
+        assert toks[leg] == toks["ample"], \
+            f"{leg}: greedy tokens diverged from the ample-pool run"
+    rb = recs["tight_optimistic"]["robustness"]
+    assert rb["preemptions"] >= 1 and rb["requeues"] >= 1, \
+        f"tight pool never preempted (counters: {rb})"
+    assert recs["tight_optimistic"]["pool_high_water"] <= tight - 1
+    assert recs["tight_reserve"]["robustness"]["preemptions"] == 0, \
+        "reserve admission must make decode exhaustion impossible"
+    fb = recs["faulted"]["robustness"]
+    assert fb["injected_alloc_failures"] >= 1 \
+        or fb["forced_preemptions"] >= 1, \
+        f"fault plan injected nothing (counters: {fb})"
+
+    cap = traffic.reservation_capacity(
+        n_pages=tight, page_size=ps,
+        prompt_tokens=ps + 22, max_new=ps, shared_tokens=ps)
+    rows = []
+    for leg in legs:
+        rec, rb = recs[leg], recs[leg]["robustness"]
+        rows.append({
+            "name": f"serve_overload_{leg}",
+            "us_per_call": rec["wall_s"] * 1e6,
+            "derived": f"tok_s={rec['tokens_per_s']} "
+                       f"pages={rec['n_pages']} "
+                       f"high_water={rec['pool_high_water']} "
+                       f"preempt={rb['preemptions']} "
+                       f"requeue={rb['requeues']} "
+                       f"shed={rb['sheds']} "
+                       f"inject={rb['injected_alloc_failures']}"
+                       f"+{rb['forced_preemptions']}f "
+                       f"tokens_ok={toks[leg] == toks['ample']}"})
+    rows.append({
+        "name": "reservation_capacity_model", "us_per_call": 0.0,
+        "derived": f"usable={cap['usable_pages']} worst="
+                   f"{cap['worst_case_pages_per_req']}/req "
+                   f"slots reserve={cap['slots_reserve']} "
+                   f"optimistic={cap['slots_optimistic']} "
+                   f"(overcommit={cap['overcommit_ratio']:.2f}x)"})
+    record = {
+        "n_requests": n_requests,
+        "pool_pages": {"ample": recs["ample"]["n_pages"],
+                       "tight": tight},
+        "all_completed": True,
+        "tokens_identical_vs_ample": True,
+        "capacity_model": cap,
+        "legs": {leg: {
+            "tokens_per_s": recs[leg]["tokens_per_s"],
+            "pool_high_water": recs[leg]["pool_high_water"],
+            "robustness": recs[leg]["robustness"],
+        } for leg in legs},
+    }
+    return rows, record
+
+
 def run(*, arch: str = "stablelm-1.6b", prompt_len: int = 128,
         chunk: int = 128, n_slots: int = 4, n_requests: int = 24,
         seed: int = 0) -> list:
@@ -321,12 +447,29 @@ def run(*, arch: str = "stablelm-1.6b", prompt_len: int = 128,
     kv_rows, kv_record = bench_kv_dtypes(cfg, params, n_slots=n_slots,
                                          n_requests=8, seed=seed)
     rows += kv_rows
+    ov_rows, ov_record = bench_overload(cfg, params, n_slots=n_slots,
+                                        seed=seed)
+    rows += ov_rows
     record["kv_dtype"] = kv_record
+    record["overload"] = ov_record
     record["provenance"] = common.provenance()
     common.save_rows("serve_engine", rows)
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=1)
         f.write("\n")
+    return rows
+
+
+def run_chaos(*, arch: str = "stablelm-1.6b", seed: int = 0) -> list:
+    """CI chaos smoke: just the overload/fault legs (every assertion in
+    ``bench_overload`` is live, so a crash, shed, or token divergence
+    fails the job).  Does NOT rewrite BENCH_serve.json."""
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.key(seed))
+    rows, _ = bench_overload(cfg, params, seed=seed)
     return rows
 
 

@@ -19,6 +19,10 @@ def main() -> None:
                     help="CI perf-trajectory leg: the prefill and serve "
                     "benches, writing the root-level BENCH_prefill.json "
                     "and BENCH_serve.json artifacts")
+    ap.add_argument("--chaos", action="store_true",
+                    help="CI chaos-smoke leg: the serve overload bench "
+                    "only (undersized page pool + fault injection); any "
+                    "shed, crash, or greedy-token divergence raises")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     args = ap.parse_args()
@@ -50,8 +54,11 @@ def main() -> None:
         "replay": lambda: bench_replay_ablation.run(frames=40_000 * mult),
         "stability": lambda: bench_stability.run(frames=40_000 * mult),
         "roofline": lambda: bench_roofline.run(),
+        "chaos": lambda: bench_serve.run_chaos(),
     }
-    if args.quick:
+    if args.chaos:
+        only = ["chaos"]
+    elif args.quick:
         only = ["prefill", "serve"]
         # one-line invariant status next to the perf rows: the cheap
         # repro-audit families (AST lints + dispatch contracts), so a

@@ -32,6 +32,7 @@ context-parallel serving layout on the local devices (seq-sharded KV cache
 from __future__ import annotations
 
 import argparse
+import collections
 import contextlib
 import dataclasses
 import json
@@ -52,11 +53,36 @@ class Request:
     prompt: np.ndarray            # (P,) int32
     max_new: int
     arrival: float                # seconds after engine start
+    # robustness knobs (None = unbounded):
+    deadline_ttft: Optional[float] = None    # max wait for the FIRST token,
+    #                                          measured from the current
+    #                                          (retry-adjusted) arrival
+    deadline_total: Optional[float] = None   # max end-to-end, from the
+    #                                          ORIGINAL arrival
+    max_retries: int = 0                     # re-enqueues after an
+    #                                          admission shed (client-retry
+    #                                          semantics: the TTFT clock
+    #                                          restarts at each retry)
     # filled by the engine:
     tokens: list = dataclasses.field(default_factory=list)
     t_admit: float = -1.0
     t_first: float = -1.0
     t_done: float = -1.0
+    eff_arrival: float = -1.0     # current arrival (updated by retries)
+    preemptions: int = 0
+    retry_count: int = 0
+    shed_reason: Optional[str] = None
+
+
+def _eff_prompt(req: Request) -> np.ndarray:
+    """The prompt a (re-)admission must prefill: a preempted request's
+    generated-so-far tokens fold into the re-prefill prompt, so greedy
+    decoding resumes with exactly the logits the uncontended run saw at
+    that position (token-identity under preemption)."""
+    if req.tokens:
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.tokens, np.int32)])
+    return np.asarray(req.prompt, np.int32)
 
 
 def gen_trace(n_requests: int, *, vocab: int, prompt_range, gen_range,
@@ -88,11 +114,18 @@ def _percentiles(xs) -> dict:
             for p, q in (("p50", 50), ("p90", 90), ("p99", 99))}
 
 
-def _validate_trace(trace: List[Request], cache_len: int) -> None:
+def _validate_trace(trace: List[Request], cache_len: int, *,
+                    page_size: Optional[int] = None,
+                    usable_pages: Optional[int] = None) -> None:
     """A full KV cache has no wrap semantics: ``slot = pos % cache_len``
     silently clobbers row 0 onward if decode runs past the end, while kpos
     keeps attributing the old positions — so reject traces that could
-    reach it (decode writes up to position prompt + max_new - 2)."""
+    reach it (decode writes up to position prompt + max_new - 2).
+
+    Paged engines additionally reject any request whose worst-case page
+    demand exceeds the pool: such a request can never be served even
+    alone, so preempt-and-requeue would thrash forever — fail clearly at
+    startup instead of mid-run."""
     for r in trace:
         if len(r.prompt) < 1:
             raise ValueError(f"request {r.rid}: empty prompt")
@@ -102,6 +135,93 @@ def _validate_trace(trace: List[Request], cache_len: int) -> None:
                 f"{r.max_new} overruns cache_len {cache_len}; raise "
                 "--cache-len (a full cache would wrap and clobber "
                 "prompt rows silently)")
+        if page_size:
+            need = -(-min(len(r.prompt) + r.max_new, cache_len)
+                     // page_size)
+            if need > usable_pages:
+                raise ValueError(
+                    f"request {r.rid}: worst-case page demand {need} "
+                    f"(ceil((prompt {len(r.prompt)} + max_new {r.max_new})"
+                    f" / page_size {page_size})) exceeds the pool's "
+                    f"{usable_pages} usable pages — it can never be "
+                    "served even alone; raise --pages or shorten the "
+                    "request")
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, replayable overload scenario for the serve engine.
+
+    Every field indexes deterministic engine counters — the global
+    ``try_alloc`` call number and the decode step number — so the same
+    plan against the same trace replays the same faults bit-for-bit:
+
+      * ``fail_alloc_at``  — global ``try_alloc`` call indices that return
+                             None regardless of pool state (the allocator
+                             itself is untouched, so reservations survive
+                             an injected failure)
+      * ``preempt_at``     — decode step indices that force-preempt the
+                             victim-policy choice before the step runs
+                             (repeated indices preempt several slots)
+      * ``latency_at``     — (step, seconds) artificial per-step latency,
+                             applied to the engine's virtual clock — with
+                             ``clock=lambda: 0.0`` time is FULLY virtual
+                             and deadline behavior is deterministic
+      * ``hold_pages``     — pages seized from the pool at engine init
+                             (standing pressure; released only by reset)
+    """
+
+    fail_alloc_at: frozenset = frozenset()
+    preempt_at: tuple = ()
+    latency_at: tuple = ()
+    hold_pages: int = 0
+
+    def alloc_fails(self, call: int) -> bool:
+        return call in self.fail_alloc_at
+
+    def forced_preempts(self, step: int) -> int:
+        return sum(1 for s in self.preempt_at if s == step)
+
+    def step_latency(self, step: int) -> float:
+        return sum(lat for s, lat in self.latency_at if s == step)
+
+    @classmethod
+    def random(cls, seed: int, *, n_steps: int = 64,
+               n_alloc_calls: int = 64, alloc_fail_p: float = 0.1,
+               preempt_p: float = 0.05, latency_p: float = 0.1,
+               max_latency: float = 0.01,
+               hold_pages: int = 0) -> "FaultPlan":
+        rng = np.random.default_rng(seed)
+        return cls(
+            fail_alloc_at=frozenset(
+                int(i) for i in range(n_alloc_calls)
+                if rng.random() < alloc_fail_p),
+            preempt_at=tuple(int(s) for s in range(n_steps)
+                             if rng.random() < preempt_p),
+            latency_at=tuple(
+                (int(s), float(round(rng.uniform(0.0, max_latency), 6)))
+                for s in range(n_steps) if rng.random() < latency_p),
+            hold_pages=hold_pages)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "fail_alloc_at": sorted(self.fail_alloc_at),
+            "preempt_at": list(self.preempt_at),
+            "latency_at": [list(x) for x in self.latency_at],
+            "hold_pages": self.hold_pages})
+
+    @classmethod
+    def from_json(cls, s: str) -> "FaultPlan":
+        d = json.loads(s)
+        return cls(fail_alloc_at=frozenset(d.get("fail_alloc_at", ())),
+                   preempt_at=tuple(d.get("preempt_at", ())),
+                   latency_at=tuple((int(a), float(b))
+                                    for a, b in d.get("latency_at", ())),
+                   hold_pages=int(d.get("hold_pages", 0)))
 
 
 # ---------------------------------------------------------------------------
@@ -129,19 +249,21 @@ def _chunk_grid(pmax: int, chunk: int, cache_len: int) -> List[tuple]:
     return grid
 
 
-def _pad_group(reqs: List[Request], n_rows: int, chunk: int,
+def _pad_group(prompts: List[np.ndarray], n_rows: int, chunk: int,
                cache_len: int):
-    """Right-pad a request group onto the shared chunk grid.  Returns
-    (toks (n_rows, padded) int32, plens, grid); rows beyond len(reqs) are
-    dummies with plen 0."""
-    pmax = max((len(r.prompt) for r in reqs), default=1)
+    """Right-pad a group of prompt arrays onto the shared chunk grid.
+    Returns (toks (n_rows, padded) int32, plens, grid); rows beyond
+    len(prompts) are dummies with plen 0.  (Takes raw token arrays, not
+    Requests: a requeued request prefills its EFFECTIVE prompt — original
+    plus generated-so-far — via ``_eff_prompt``.)"""
+    pmax = max((len(p) for p in prompts), default=1)
     grid = _chunk_grid(pmax, chunk, cache_len)
     padded = grid[-1][0] + grid[-1][1]
     toks = np.zeros((n_rows, padded), np.int32)
     plens = [0] * n_rows
-    for i, r in enumerate(reqs):
-        toks[i, :len(r.prompt)] = r.prompt
-        plens[i] = len(r.prompt)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+        plens[i] = len(p)
     return toks, plens, grid
 
 
@@ -196,7 +318,15 @@ class PageAllocator:
     Pages are refcounted — prefix sharing maps one physical page into many
     slots' tables read-only — and ``version`` bumps every time a page's
     refcount returns to zero, so prefix-index entries naming a
-    freed-and-reissued page fail validation instead of aliasing."""
+    freed-and-reissued page fail validation instead of aliasing.
+
+    Exhaustion is a scheduling event, not a crash: ``try_alloc`` returns
+    None when the pool can't serve the request and the engine recovers
+    (admission backpressure, preempt-and-requeue).  ``reserve``/
+    ``unreserve`` track admission-time worst-case demand: reserved units
+    are held back from UNRESERVED allocations (``free - reserved`` is the
+    optimistic headroom), so a reserved allocation can never fail — the
+    invariant ``reserved <= len(free)`` is what admission control buys."""
 
     def __init__(self, n_pages: int):
         if n_pages < 2:
@@ -205,13 +335,54 @@ class PageAllocator:
         self.free = list(range(n_pages - 1, 0, -1))      # LIFO, 0 reserved
         self.ref = np.zeros(n_pages, np.int32)
         self.version = np.zeros(n_pages, np.int64)
+        self.reserved = 0        # admission units not yet materialized
+        self.high_water = 0      # max used_pages ever (report counter)
 
-    def alloc(self) -> int:
-        if not self.free:
-            raise RuntimeError("page pool exhausted; raise --pages")
+    def try_alloc(self, *, reserved: bool = False) -> Optional[int]:
+        """Allocate a page or return None (recoverable exhaustion).
+
+        ``reserved=True`` consumes one outstanding reservation unit —
+        admission already set the page aside, so this cannot fail while
+        the reservation invariant holds.  Unreserved allocation fails as
+        soon as the free list is down to the reserved units (they belong
+        to admitted requests' worst-case tails, not to optimists)."""
+        if reserved:
+            if self.reserved <= 0:
+                raise RuntimeError(
+                    "reserved alloc without an outstanding reservation "
+                    "(engine reservation accounting is out of sync)")
+            if not self.free:       # invariant breach — recoverable anyway
+                return None
+            self.reserved -= 1
+        elif len(self.free) <= self.reserved:
+            return None
         p = self.free.pop()
         self.ref[p] = 1
+        if self.used_pages > self.high_water:
+            self.high_water = self.used_pages
         return p
+
+    def alloc(self) -> int:
+        p = self.try_alloc()
+        if p is None:
+            raise RuntimeError("page pool exhausted; raise --pages")
+        return p
+
+    def reserve(self, n: int) -> bool:
+        """Set aside ``n`` pages of future demand; False (and no change)
+        if the unreserved pool can't cover them — admission backpressure."""
+        if n < 0:
+            raise ValueError(f"reserve({n})")
+        if len(self.free) - self.reserved < n:
+            return False
+        self.reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        if n > self.reserved:
+            raise RuntimeError(
+                f"unreserve({n}) exceeds outstanding {self.reserved}")
+        self.reserved -= n
 
     def incref(self, p: int) -> None:
         self.ref[p] += 1
@@ -225,6 +396,10 @@ class PageAllocator:
     @property
     def used_pages(self) -> int:
         return (self.n_pages - 1) - len(self.free)
+
+    @property
+    def free_unreserved(self) -> int:
+        return len(self.free) - self.reserved
 
 
 class PrefixIndex:
@@ -287,23 +462,36 @@ class AllocatorModel:
     depth; this class is the single authority on which ops exist and what
     each does, mirroring the engine's exact allocator interactions:
 
-      * ``alloc``      — admission maps a fresh page (``_map_prompt_pages``
-                         / decode table growth)
+      * ``alloc``      — unreserved allocation (optimistic admission,
+                         decode growth past a consumed reservation, COW):
+                         guarded by ``free > reserved`` — the protection
+                         that keeps admitted requests' reservations honored
+      * ``reserve``    — admission sets one page of worst-case demand
+                         aside (``PageAllocator.reserve``)
+      * ``alloc_r``    — a reserved allocation consuming one unit
+                         (``try_alloc(reserved=True)``; cannot fail while
+                         the reservation invariant holds)
+      * ``unreserve``  — a finishing / unwinding / preempted slot releases
+                         an unmaterialized unit
       * ``incref(h)``  — a prefix-cache hit maps a held page into another
                          slot's table read-only
       * ``release(h)`` — a finished slot drops one table reference
                          (``_free_slot_pages``)
       * ``cow(h)``     — first divergent write to a still-shared page:
                          allocate a private copy, drop the shared
-                         reference (``ServeEngine._cow``)
+                         reference (``ServeEngine._cow_into``)
+      * ``preempt(h)`` — preempt-and-requeue: atomically drop hold ``h``
+                         AND every outstanding reservation unit (the
+                         victim's tail demand), the decode-time exhaustion
+                         recovery path
 
     State is ``(allocator, holds)`` where ``holds`` is the tuple of
     outstanding page-table references as ``(page, version-at-acquire)``
     pairs.  The checker asserts, at every reachable state: refcounts equal
     outstanding holds and never go negative, free pages are never held,
-    and any page recycled after an index entry was recorded carries a
-    bumped version (so stale prefix-index entries always fail
-    validation)."""
+    ``0 <= reserved <= len(free)`` (reserved allocs can never fail), and
+    any page recycled after an index entry was recorded carries a bumped
+    version (so stale prefix-index entries always fail validation)."""
 
     def __init__(self, n_pages: int = 4, allocator_cls=None):
         self.n_pages = n_pages
@@ -316,12 +504,21 @@ class AllocatorModel:
         """Op labels legal in this state (guards mirror engine call
         sites, which only ever decref pages they hold)."""
         ops = []
-        if alloc.free:
+        reserved = int(getattr(alloc, "reserved", 0))
+        if len(alloc.free) > reserved:
             ops.append(("alloc",))
+        # reserve is always attemptable — the ALLOCATOR's capacity check
+        # is the contract under test (a refused reserve is backpressure,
+        # i.e. a no-op state)
+        ops.append(("reserve",))
+        if reserved > 0:
+            ops.append(("alloc_r",))
+            ops.append(("unreserve",))
         for i, (p, _) in enumerate(holds):
             ops.append(("incref", i))
             ops.append(("release", i))
-            if alloc.ref[p] > 1 and alloc.free:
+            ops.append(("preempt", i))
+            if alloc.ref[p] > 1 and len(alloc.free) > reserved:
                 ops.append(("cow", i))
         return ops
 
@@ -332,8 +529,20 @@ class AllocatorModel:
         holds = list(holds)
         kind = op[0]
         if kind == "alloc":
-            p = alloc.alloc()
+            p = alloc.try_alloc()
+            if p is None:
+                raise RuntimeError("enabled unreserved alloc failed")
             holds.append((p, int(alloc.version[p])))
+        elif kind == "reserve":
+            alloc.reserve(1)    # False = backpressure (state unchanged)
+        elif kind == "alloc_r":
+            p = alloc.try_alloc(reserved=True)
+            if p is None:
+                raise RuntimeError("reserved alloc failed — the "
+                                   "reservation invariant is broken")
+            holds.append((p, int(alloc.version[p])))
+        elif kind == "unreserve":
+            alloc.unreserve(1)
         elif kind == "incref":
             p, _ = holds[op[1]]
             alloc.incref(p)
@@ -343,9 +552,17 @@ class AllocatorModel:
             alloc.decref(p)
         elif kind == "cow":
             src, _ = holds[op[1]]
-            dst = alloc.alloc()                 # ServeEngine._cow order:
-            alloc.decref(src)                   # copy rows, then drop the
-            holds[op[1]] = (dst, int(alloc.version[dst]))  # shared ref
+            dst = alloc.try_alloc()             # ServeEngine._cow_into
+            if dst is None:                     # order: copy rows, then
+                raise RuntimeError("enabled cow failed")  # drop the
+            alloc.decref(src)                   # shared ref
+            holds[op[1]] = (dst, int(alloc.version[dst]))
+        elif kind == "preempt":
+            p, _ = holds.pop(op[1])
+            alloc.decref(p)
+            reserved = int(getattr(alloc, "reserved", 0))
+            if reserved:
+                alloc.unreserve(reserved)
         else:
             raise ValueError(f"unknown op {op!r}")
         return alloc, tuple(sorted(holds))
@@ -370,7 +587,9 @@ class ServeEngine:
                  chunk: int = 128, sample: bool = True, seed: int = 0,
                  page_size: int = 128, n_pages: int = 0,
                  prefix_cache: bool = True, paged: Optional[bool] = None,
-                 kv_dtype="f32"):
+                 kv_dtype="f32", admission: str = "reserve",
+                 fault_plan: Optional[FaultPlan] = None, clock=None,
+                 retry_backoff: float = 0.05):
         import jax
         import jax.numpy as jnp
 
@@ -382,6 +601,18 @@ class ServeEngine:
         self.cfg, self.params = cfg, params
         self.n_slots, self.cache_len, self.chunk = n_slots, cache_len, chunk
         self.sample = sample
+        if admission not in ("reserve", "optimistic"):
+            raise ValueError(f"admission policy {admission!r} (want "
+                             "'reserve' or 'optimistic')")
+        self.admission = admission
+        self.fault_plan = fault_plan
+        # time authority: a custom clock makes time (and thus deadlines)
+        # fully virtual — FaultPlan latencies advance it deterministically
+        self.clock = clock if clock is not None else time.perf_counter
+        self.virtual_time = clock is not None
+        self.retry_backoff = retry_backoff
+        self._t0: Optional[float] = None
+        self._virtual = 0.0
         self.jnp, self.jax, self.M = jnp, jax, M
         self.serve_step = jax.jit(llm_a3c.make_serve_step(cfg,
                                                           sample=sample))
@@ -448,6 +679,20 @@ class ServeEngine:
         self.page_occupancy: List[float] = []
         self.pages_requested = self.pages_alloced = 0
         self.cow_events = self.prefill_chunks_skipped = 0
+        # robustness state: arrival queue (backpressure holds requests
+        # here instead of admitting them into doomed slots), per-slot
+        # outstanding reservation units, terminal sheds, counters
+        self.queue: collections.deque = collections.deque()
+        self.shed_requests: List[Request] = []
+        self.resv_of = np.zeros(n_slots, np.int32)
+        self.preemptions = self.requeues = 0
+        self.sheds_admission = self.sheds_decode = self.retries = 0
+        self.admission_alloc_failures = 0
+        self.injected_alloc_failures = self.forced_preemptions = 0
+        self.queue_depths: List[int] = []
+        self._alloc_calls = 0
+        self._fault_held: List[int] = []
+        self._apply_fault_pressure()
         # batch-dim index per cache leaf (-1 for per-layer scalars like
         # "index", which have no batch dim): found once by diffing two
         # eval_shape batch sizes, so the admission scatter needs no shape
@@ -542,6 +787,199 @@ class ServeEngine:
 
         self._copy_page = jax.jit(copy_page)
 
+    # -- clock / fault plumbing --------------------------------------------
+
+    def _apply_fault_pressure(self) -> None:
+        """Seize ``FaultPlan.hold_pages`` from the pool at init/reset —
+        standing pressure that shrinks the usable pool (never below one
+        allocatable page)."""
+        if self.paged and self.fault_plan and self.fault_plan.hold_pages:
+            n = min(self.fault_plan.hold_pages, len(self.alloc.free) - 1)
+            self._fault_held = [self.alloc.alloc() for _ in range(n)]
+        else:
+            self._fault_held = []
+
+    @property
+    def usable_pages(self) -> int:
+        """Pages a request can actually get: pool minus sink minus any
+        fault-plan standing pressure."""
+        return self.n_pages - 1 - len(self._fault_held)
+
+    def start_clock(self) -> None:
+        self._t0 = self.clock()
+        self._virtual = 0.0
+
+    def now(self) -> float:
+        """Seconds since ``start_clock`` plus injected virtual latency.
+        Before the clock starts (direct ``admit``/``decode_step_all``
+        driving in tests) time sits at the accumulated virtual offset."""
+        if self._t0 is None:
+            return self._virtual
+        return self.clock() - self._t0 + self._virtual
+
+    def advance(self, dt: float) -> None:
+        """Wait ``dt`` seconds: a wall sleep on the real clock, a virtual
+        jump under a test/fault clock (keeps idle waits deterministic)."""
+        if dt <= 0:
+            return
+        if self.virtual_time:
+            self._virtual += dt
+        else:
+            time.sleep(dt)
+
+    def _try_alloc(self, *, reserved: bool = False) -> Optional[int]:
+        """All engine page allocations funnel through here: numbers the
+        global call sequence so a ``FaultPlan`` can fail chosen calls
+        deterministically.  An injected failure never touches the
+        allocator — reservations survive it and the caller recovers the
+        same way it recovers real exhaustion."""
+        i = self._alloc_calls
+        self._alloc_calls += 1
+        if self.fault_plan is not None and self.fault_plan.alloc_fails(i):
+            self.injected_alloc_failures += 1
+            return None
+        return self.alloc.try_alloc(reserved=reserved)
+
+    # -- scheduling: backpressure, deadlines, preemption --------------------
+
+    def _need_pages(self, req: Request) -> int:
+        """Pages to reserve at admission.  ``reserve`` policy: worst case,
+        ceil((prompt + max_new)/page_size) clamped to the cache — decode
+        can never exhaust.  ``optimistic``: just the effective prompt's
+        pages — generation growth is overcommitted and recovered by
+        preempt-and-requeue."""
+        if not self.paged:
+            return 0
+        plen = len(req.prompt) + len(req.tokens)
+        total = plen if self.admission == "optimistic" \
+            else len(req.prompt) + req.max_new
+        return -(-min(total, self.cache_len) // self.page_size)
+
+    def enqueue(self, req: Request) -> None:
+        if req.eff_arrival < 0:
+            req.eff_arrival = req.arrival
+        self.queue.append(req)
+
+    def _shed_admission(self, req: Request, now: float) -> None:
+        """TTFT deadline missed while queued: shed.  With retries left the
+        request re-enqueues with exponential backoff (client-retry
+        semantics — its TTFT clock restarts at the new effective
+        arrival); otherwise it drops terminally."""
+        self.sheds_admission += 1
+        if req.retry_count < req.max_retries:
+            req.retry_count += 1
+            self.retries += 1
+            req.eff_arrival = now + \
+                self.retry_backoff * (2 ** (req.retry_count - 1))
+            self.queue.append(req)
+        else:
+            req.shed_reason = "ttft-deadline"
+            req.t_done = now
+            self.shed_requests.append(req)
+
+    def schedule_admissions(self, now: float) -> List[tuple]:
+        """Pick queued requests for free slots, FIFO.  This is where
+        backpressure lives: a paged admission must first ``reserve`` its
+        page demand, and a head that doesn't fit blocks the line (no
+        starvation — pool drain admits it first).  Retry-backoff entries
+        whose effective arrival hasn't come are skipped, not blocking.
+        TTFT-deadline misses shed here, before burning a prefill."""
+        self.queue_depths.append(len(self.queue))
+        pairs: List[tuple] = []
+        free_slots = [j for j in range(self.n_slots)
+                      if self.req_of[j] is None]
+        i = 0
+        while i < len(self.queue) and free_slots:
+            req = self.queue[i]
+            if req.eff_arrival > now:
+                i += 1          # backoff pending; later entries may be due
+                continue
+            if req.deadline_ttft is not None and req.t_first < 0 \
+                    and now - req.eff_arrival > req.deadline_ttft:
+                del self.queue[i]
+                self._shed_admission(req, now)
+                continue
+            need = self._need_pages(req)
+            if self.paged and not self.alloc.reserve(need):
+                break           # head-of-line waits for pool drain
+            j = free_slots.pop(0)
+            self.resv_of[j] = need
+            del self.queue[i]
+            pairs.append((req, j))
+        return pairs
+
+    def _release_reservation(self, j: int) -> None:
+        if self.paged and self.resv_of[j]:
+            self.alloc.unreserve(int(self.resv_of[j]))
+            self.resv_of[j] = 0
+
+    def _slot_alloc(self, j: int) -> Optional[int]:
+        """Allocate one page for slot ``j``, consuming its admission
+        reservation while any remains (reserved allocs cannot fail short
+        of an injected fault, which leaves the unit intact); past the
+        reservation it falls through to optimistic unreserved allocation."""
+        if self.resv_of[j] > 0:
+            p = self._try_alloc(reserved=True)
+            if p is not None:
+                self.resv_of[j] -= 1
+            return p
+        return self._try_alloc()
+
+    def _choose_victim(self) -> Optional[int]:
+        """Preemption victim: least decode progress first (cheapest
+        re-prefill on restore), then most private pages (frees the most),
+        then the youngest request — the oldest, furthest-along request is
+        always protected, which is the forward-progress argument."""
+        best, best_key = None, None
+        for v in range(self.n_slots):
+            req = self.req_of[v]
+            if req is None:
+                continue
+            private = sum(1 for p in self.pt_host[v]
+                          if p >= 0 and self.alloc.ref[int(p)] == 1) \
+                if self.paged else 0
+            k = (len(req.tokens), -private, -req.rid)
+            if best_key is None or k < best_key:
+                best, best_key = v, k
+        return best
+
+    def _preempt(self, v: int) -> None:
+        """Evict slot ``v`` and requeue its request at the queue FRONT.
+        Private pages free (decref); shared prefix pages keep their other
+        references and stay in the ``PrefixIndex``, so restore re-maps
+        them and chunk skipping makes the re-prefill cheap.  Generated
+        tokens stay on the request — ``_eff_prompt`` folds them into the
+        re-prefill, preserving greedy token-identity."""
+        req = self.req_of[v]
+        if self.paged:
+            self._free_slot_pages(v)
+        self.req_of[v] = None
+        self.active[v] = False
+        self.pos[v] = 0
+        self.tok[v] = 0
+        req.preemptions += 1
+        self.preemptions += 1
+        self.requeues += 1
+        self.queue.appendleft(req)
+
+    def _alloc_with_preemption(self, j: int) -> Optional[int]:
+        """Decode-time page grab for slot ``j``: on exhaustion, preempt
+        victims until the allocation succeeds or ``j`` preempts itself
+        (returns None; the caller skips the now-empty slot).  Terminates:
+        every failed attempt evicts one active slot, and ``j`` is always
+        a candidate."""
+        while True:
+            p = self._slot_alloc(j)
+            if p is not None:
+                return p
+            v = self._choose_victim()
+            if v is None:       # unreachable: j itself is active
+                raise RuntimeError(
+                    "page pool exhausted with no preemptible slot")
+            self._preempt(v)
+            if v == j:
+                return None
+
     # -- admission ----------------------------------------------------------
 
     def _write_rows(self, group_cache, row_to_slot):
@@ -556,59 +994,78 @@ class ServeEngine:
                                    self.jnp.asarray(perm),
                                    self.jnp.asarray(mask))
 
-    def _map_prompt_pages(self, pairs: List[tuple]) -> List[int]:
-        """Build each admitted request's page-table row: map matching
+    def _map_prompt_pages(self, req: Request, j: int) -> Optional[int]:
+        """Build one admitted request's page-table row: map matching
         cached prefix pages read-only (incref), allocate fresh pages for
         the rest, and register the prompt's blocks so LATER admissions —
         including requests in this same group — can share them.  Returns
-        per-request shared coverage in tokens (drives chunk skipping).
+        the shared coverage in tokens (drives chunk skipping), or None if
+        the pool ran out mid-row — in which case every page already
+        placed (incref'd prefix hits and fresh allocs alike) is unwound,
+        so refcounts and ``used_pages`` return exactly to their
+        pre-admission values (a partial row used to leak here).
+
+        Prefix-hit increfs consume the slot's reservation units too: a
+        shared page the request maps IS part of its materialized demand.
 
         Same-group sharing is safe because every non-skipped chunk's
         writes into a shared page replay the identical token values at the
         identical positions; first divergent DECODE writes fork the page
         via copy-on-write in ``decode_step_all``."""
-        shared_lens = []
-        for req, j in pairs:
-            plen = len(req.prompt)
-            n_p = -(-plen // self.page_size)
-            self.pages_requested += n_p
-            row = np.full(self.max_pages, -1, np.int32)
-            matched = self.prefix_index.lookup(req.prompt, self.alloc) \
-                if self.prefix_cache else []
-            cov = 0
-            for idx, (page, ntok) in enumerate(matched):
-                self.alloc.incref(page)
-                row[idx] = page
-                cov += ntok
-            for idx in range(len(matched), n_p):
-                row[idx] = self.alloc.alloc()
-                self.pages_alloced += 1
-            if self.prefix_cache:
-                self.prefix_index.register(req.prompt, row[:n_p],
-                                           self.alloc)
-            self.pt_host[j] = row
-            shared_lens.append(cov)
-        return shared_lens
+        prompt = _eff_prompt(req)
+        plen = len(prompt)
+        n_p = -(-plen // self.page_size)
+        self.pages_requested += n_p
+        row = np.full(self.max_pages, -1, np.int32)
+        matched = self.prefix_index.lookup(prompt, self.alloc) \
+            if self.prefix_cache else []
+        placed: List[int] = []
+        cov = 0
+        for idx, (page, ntok) in enumerate(matched):
+            self.alloc.incref(page)
+            if self.resv_of[j] > 0:
+                self.alloc.unreserve(1)
+                self.resv_of[j] -= 1
+            row[idx] = page
+            placed.append(page)
+            cov += ntok
+        for idx in range(len(matched), n_p):
+            p = self._slot_alloc(j)
+            if p is None:
+                # unwind the partial row: the admission must be all or
+                # nothing, else these pages leak unreferenced-but-held
+                for q in placed:
+                    self.alloc.decref(int(q))
+                self._release_reservation(j)
+                self.pages_requested -= n_p
+                return None
+            row[idx] = p
+            placed.append(p)
+            self.pages_alloced += 1
+        if self.prefix_cache:
+            self.prefix_index.register(prompt, row[:n_p], self.alloc)
+        self.pt_host[j] = row
+        return cov
 
-    def _prefill_group(self, pairs: List[tuple], key):
+    def _prefill_group(self, pairs: List[tuple], key, shared=None):
         """Chunked flash prefill for up to ``n_slots`` requests in ONE
-        batched call chain (prompts right-padded to a shared chunk grid,
-        rows beyond len(reqs) are dummies) — admission costs the same
-        kernel launches as a full lockstep wave, shape-stable across
-        group sizes.  Returns (first_tokens (n_slots,), cache).
+        batched call chain (effective prompts right-padded to a shared
+        chunk grid, rows beyond len(pairs) are dummies) — admission costs
+        the same kernel launches as a full lockstep wave, shape-stable
+        across group sizes.  Returns (first_tokens (n_slots,), cache).
 
-        Paged layout: page tables are mapped (with prefix reuse) before
-        the chunk chain, and any chunk every row's shared coverage already
-        spans — and that holds no row's last prompt token — is skipped
-        outright: its KV already sits in the shared pages."""
+        Paged layout: page tables were mapped (with prefix reuse) by
+        ``admit`` before this call; ``shared`` carries each row's prefix
+        coverage, and any chunk every row's coverage already spans — and
+        that holds no row's last prompt token — is skipped outright: its
+        KV already sits in the shared pages."""
         jnp = self.jnp
-        reqs = [r for r, _ in pairs]
-        toks, plens, grid = _pad_group(reqs, self.n_slots, self.chunk,
+        prompts = [_eff_prompt(r) for r, _ in pairs]
+        toks, plens, grid = _pad_group(prompts, self.n_slots, self.chunk,
                                        self.cache_len)
         skip: set = set()
         in_cache = self._group_cache
         if self.paged:
-            shared = self._map_prompt_pages(pairs)
             pt_rows = np.full((self.n_slots, self.max_pages), -1, np.int32)
             for i, (_, j) in enumerate(pairs):
                 pt_rows[i] = self.pt_host[j]
@@ -620,7 +1077,7 @@ class ServeEngine:
                 # chunk, so skipping is global-attention-only
                 for p0, c in grid:
                     if all(pl <= p0 or (sh >= p0 + c and pl - 1 >= p0 + c)
-                           for pl, sh in zip(plens[:len(reqs)], shared)):
+                           for pl, sh in zip(plens[:len(pairs)], shared)):
                         skip.add(p0)
                 self.prefill_chunks_skipped += len(skip)
         last, cache = _chunked_prefill(self.prefill_step, self.params,
@@ -636,10 +1093,11 @@ class ServeEngine:
         cache = self.M.init_cache(self.cfg, 1, self.cache_len,
                                   dtype=jnp.float32,
                                   kv_dtype=self.kv_dtype)
-        for i in range(len(req.prompt)):
+        prompt = _eff_prompt(req)
+        for i in range(len(prompt)):
             tok, _, cache = self.serve_step(
                 self.params, cache,
-                {"tokens": jnp.asarray(req.prompt[None, i:i + 1])},
+                {"tokens": jnp.asarray(prompt[None, i:i + 1])},
                 jnp.asarray(i, jnp.int32),
                 self.jax.random.fold_in(key, i))
         return int(tok[0]), cache
@@ -648,13 +1106,35 @@ class ServeEngine:
         """Admit ``pairs`` of (request, free slot) — one batched prefill
         for KV-cache archs, a per-request loop otherwise.  Returns the
         requests already satisfied by their prefill token (max_new == 1),
-        which never occupy a slot."""
+        which never occupy a slot.
+
+        Paged page-table mapping happens first; a request whose mapping
+        hits pool exhaustion is unwound (no leak) and requeued at the
+        queue front — it drops out of this admission group instead of
+        crashing it."""
         if not pairs:
             return []
+        shared = None
+        if self.paged:
+            kept, shared = [], []
+            for req, j in pairs:
+                cov = self._map_prompt_pages(req, j)
+                if cov is None:
+                    self.admission_alloc_failures += 1
+                    self.requeues += 1
+                    req.eff_arrival = min(req.eff_arrival, now) \
+                        if req.eff_arrival >= 0 else now
+                    self.queue.appendleft(req)
+                else:
+                    kept.append((req, j))
+                    shared.append(cov)
+            pairs = kept
+            if not pairs:
+                return []
         key = self.jax.random.fold_in(
             self.base_key, np.uint32(2 ** 31 + pairs[0][0].rid))
         if self.prefill_step is not None:
-            first, cache = self._prefill_group(pairs, key)
+            first, cache = self._prefill_group(pairs, key, shared)
             self._write_rows(cache, [(i, j) for i, (_, j)
                                      in enumerate(pairs)])
             firsts = [int(first[i]) for i in range(len(pairs))]
@@ -669,18 +1149,20 @@ class ServeEngine:
         finished = []
         freed = False
         for (req, j), f in zip(pairs, firsts):
-            self.prefill_tokens += len(req.prompt)
+            plen_eff = len(req.prompt) + len(req.tokens)
+            self.prefill_tokens += plen_eff
             req.t_admit = now
-            req.t_first = time.perf_counter()
+            if req.t_first < 0:     # TTFT is first-ever token, so a
+                req.t_first = now   # preempted restore keeps the original
             req.tokens.append(f)
             if len(req.tokens) >= req.max_new:
-                req.t_done = req.t_first
+                req.t_done = now
                 finished.append(req)    # slot stays free
                 if self.paged:
                     self._free_slot_pages(j)
                     freed = True
                 continue
-            self.pos[j] = len(req.prompt)
+            self.pos[j] = plen_eff
             self.tok[j] = f
             self.active[j] = True
             self.req_of[j] = req
@@ -695,16 +1177,18 @@ class ServeEngine:
             if p >= 0:
                 self.alloc.decref(int(p))
         self.pt_host[j] = -1
+        # a finishing/preempted slot also drops its unmaterialized
+        # worst-case tail — that headroom goes back to the queue
+        self._release_reservation(j)
 
     def _push_pt(self) -> None:
         self.cache = self._set_pt(self.cache,
                                   self.jnp.asarray(self.pt_host))
 
-    def _cow(self, src: int) -> int:
-        """Fork a shared page before the first divergent write: allocate a
-        private copy, copy the pool rows in every layer, drop our
-        reference to the shared original."""
-        dst = self.alloc.alloc()
+    def _cow_into(self, src: int, dst: int) -> int:
+        """Fork a shared page before the first divergent write: copy the
+        pool rows in every layer into the already-allocated private copy,
+        drop our reference to the shared original."""
         jnp = self.jnp
         self.cache = self._copy_page(self.cache,
                                      jnp.asarray(src, jnp.int32),
@@ -715,8 +1199,31 @@ class ServeEngine:
         return dst
 
     def decode_step_all(self):
-        """One per-slot decode step over the whole slot table."""
+        """One per-slot decode step over the whole slot table.
+
+        Paged growth and COW forks go through ``_alloc_with_preemption``:
+        pool exhaustion evicts a victim (requeued, not lost) instead of
+        raising.  Total-deadline misses shed mid-decode.  FaultPlan hooks
+        run first: injected latency advances the virtual clock, forced
+        preemptions evict the victim-policy choice."""
         jnp = self.jnp
+        step = self.step_count
+        now = self.now()
+        if self.fault_plan is not None:
+            lat = self.fault_plan.step_latency(step)
+            if lat:
+                self._virtual += lat
+                now = self.now()
+            forced = False
+            for _ in range(self.fault_plan.forced_preempts(step)):
+                v = self._choose_victim()
+                if v is None:
+                    break
+                self._preempt(v)
+                self.forced_preemptions += 1
+                forced = True
+            if forced and self.paged:
+                self._push_pt()
         if self.paged:
             # the step writes row pos[j] of each active slot: grow the
             # table a page at a time, and fork (COW) any still-shared page
@@ -728,12 +1235,26 @@ class ServeEngine:
                 idx = int(self.pos[j]) // self.page_size
                 page = int(self.pt_host[j, idx])
                 if page < 0:
-                    self.pt_host[j, idx] = self.alloc.alloc()
+                    p = self._alloc_with_preemption(j)
+                    if p is None:
+                        dirty = True        # j preempted itself
+                        continue
+                    self.pt_host[j, idx] = p
                     self.pages_requested += 1
                     self.pages_alloced += 1
                     dirty = True
                 elif self.alloc.ref[page] > 1:
-                    self.pt_host[j, idx] = self._cow(page)
+                    p = self._alloc_with_preemption(j)
+                    if p is None:
+                        dirty = True
+                        continue
+                    # re-read: a preemption inside the alloc may have
+                    # dropped other references and un-shared the page
+                    page = int(self.pt_host[j, idx])
+                    if page >= 0 and self.alloc.ref[page] > 1:
+                        self.pt_host[j, idx] = self._cow_into(page, p)
+                    else:
+                        self.alloc.decref(p)    # fork no longer needed
                     dirty = True
             if dirty:
                 self._push_pt()
@@ -745,6 +1266,7 @@ class ServeEngine:
         self.step_count += 1
         tok = np.asarray(tok)
         finished = []
+        freed_any = False
         for j in range(self.n_slots):
             req = self.req_of[j]
             if req is None:
@@ -754,7 +1276,7 @@ class ServeEngine:
             self.pos[j] += 1
             self.tok[j] = int(tok[j])
             if len(req.tokens) >= req.max_new:
-                req.t_done = time.perf_counter()
+                req.t_done = now
                 self.active[j] = False
                 self.req_of[j] = None
                 self.pos[j] = 0
@@ -765,8 +1287,24 @@ class ServeEngine:
                     # let the idle slot's pos-0 write land in a page the
                     # allocator may hand to someone else
                     self._free_slot_pages(j)
+                    freed_any = True
+            elif req.deadline_total is not None \
+                    and now - req.arrival > req.deadline_total:
+                # mid-decode shed: past its total deadline the tokens are
+                # worthless to the client — free the slot for the queue
+                req.t_done = now
+                req.shed_reason = "total-deadline"
+                self.sheds_decode += 1
+                self.shed_requests.append(req)
+                self.active[j] = False
+                self.req_of[j] = None
+                self.pos[j] = 0
+                self.tok[j] = 0
+                if self.paged:
+                    self._free_slot_pages(j)
+                    freed_any = True
         if self.paged:
-            if finished:
+            if freed_any:
                 self._push_pt()
             self.page_occupancy.append(
                 self.alloc.used_pages / max(self.n_pages - 1, 1))
@@ -795,19 +1333,49 @@ class ServeEngine:
         self.page_occupancy = []
         self.pages_requested = self.pages_alloced = 0
         self.cow_events = self.prefill_chunks_skipped = 0
+        # robustness state: clear queue/sheds/counters, restart the fault
+        # injector's deterministic counters, re-seize standing pressure on
+        # the fresh allocator
+        self.queue.clear()
+        self.shed_requests = []
+        self.resv_of[:] = 0
+        self.preemptions = self.requeues = 0
+        self.sheds_admission = self.sheds_decode = self.retries = 0
+        self.admission_alloc_failures = 0
+        self.injected_alloc_failures = self.forced_preemptions = 0
+        self.queue_depths = []
+        self._alloc_calls = 0
+        self._t0 = None
+        self._virtual = 0.0
+        self._apply_fault_pressure()
 
 
 def _warmup(eng: ServeEngine, trace: List[Request]) -> float:
     """Compile everything the run can hit, outside the timed region: every
     prefill chunk offset the trace can reach (admission prefills are
     always batch = n_slots, so these are exactly the run's shapes), the
-    first-token sampler, and one decode step."""
+    first-token sampler, and one decode step.
+
+    Fault injection is suspended for the warmup pass (its deterministic
+    call counters restart at reset anyway) so the warm request always
+    completes its compile coverage."""
     t0 = time.perf_counter()
+    plan, eng.fault_plan = eng.fault_plan, None
     if eng.prefill_step is not None:
         pmax = max((len(r.prompt) for r in trace), default=1)
+        if eng.paged and (plan is not None
+                          or eng.admission == "optimistic"
+                          or eng.usable_pages <
+                          eng.n_slots * eng.max_pages):
+            # preemption is possible: a requeued request's re-prefill
+            # folds generated tokens in, so chunk grids can reach
+            # prompt + max_new - 1 — compile those offsets too
+            pmax = min(eng.cache_len,
+                       max((len(r.prompt) + r.max_new - 1 for r in trace),
+                           default=1))
         toks, plens, grid = _pad_group(
-            [Request(rid=-1, prompt=np.zeros(pmax, np.int32), max_new=1,
-                     arrival=0.0)], eng.n_slots, eng.chunk, eng.cache_len)
+            [np.zeros(pmax, np.int32)], eng.n_slots, eng.chunk,
+            eng.cache_len)
         # paged warmup cache compiles the real (pool + table) shapes; its
         # all-unmapped tables route every write to the page-0 sink and
         # every read through fully-masked kpos — numerically safe garbage
@@ -822,14 +1390,15 @@ def _warmup(eng: ServeEngine, trace: List[Request]) -> float:
                    max_new=2, arrival=0.0)
     eng.admit([(warm, 0)], 0.0)
     eng.decode_step_all()
+    eng.fault_plan = plan      # before reset: it re-seizes hold_pages
     eng.reset()
     return time.perf_counter() - t0
 
 
 def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
-            warmup_s: float, t_start: float) -> dict:
-    lat = [r.t_done - (t_start + r.arrival) for r in done]
-    ttft = [r.t_first - (t_start + r.arrival) for r in done]
+            warmup_s: float) -> dict:
+    lat = [r.t_done - r.arrival for r in done]
+    ttft = [r.t_first - r.arrival for r in done]
     total_new = sum(len(r.tokens) for r in done)
     first_req = min(done, key=lambda r: r.rid) if done else None
     paged = {}
@@ -837,6 +1406,7 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
         paged = {
             "page_size": eng.page_size,
             "n_pages": eng.n_pages,
+            "usable_pages": eng.usable_pages,
             "page_occupancy": round(float(np.mean(eng.page_occupancy)), 3)
             if eng.page_occupancy else 0.0,
             "pages_requested": eng.pages_requested,
@@ -846,7 +1416,23 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
             "cow_events": eng.cow_events,
             "prefill_chunks_skipped": eng.prefill_chunks_skipped,
             "prefix_cache": eng.prefix_cache,
+            "pool_high_water": int(eng.alloc.high_water),
         }
+    robustness = {
+        "admission_policy": eng.admission,
+        "preemptions": eng.preemptions,
+        "requeues": eng.requeues,
+        "sheds": eng.sheds_admission + eng.sheds_decode,
+        "sheds_admission": eng.sheds_admission,
+        "sheds_decode": eng.sheds_decode,
+        "shed_requests": len(eng.shed_requests),
+        "retries": eng.retries,
+        "admission_alloc_failures": eng.admission_alloc_failures,
+        "queue_depth": _percentiles(eng.queue_depths),
+        "fault_plan": eng.fault_plan is not None,
+        "injected_alloc_failures": eng.injected_alloc_failures,
+        "forced_preemptions": eng.forced_preemptions,
+    }
     return {
         "paged": eng.paged, **paged,
         "kv_dtype": eng.kv_dtype_name,
@@ -861,51 +1447,68 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
         "occupancy": round(float(np.mean(eng.occupancy)), 3)
         if eng.occupancy else 0.0,
         "chunked_prefill": eng.prefill_step is not None,
+        "robustness": robustness,
         # the FIRST REQUEST's first generated tokens, not the first decode
         # step across the batch
         "sample_tokens": first_req.tokens[:4] if first_req else [],
     }
 
 
+def _drain(eng: ServeEngine, pending: List[Request], qi: int,
+           done: List[Request]) -> int:
+    """The shared serve loop: feed arrivals into the engine queue, let the
+    scheduler admit (backpressure, deadlines, retries), decode; when the
+    engine idles, jump to the next event (arrival or retry-backoff
+    expiry) instead of spinning.  Runs until ``pending[qi:]``, the queue
+    and the slot table are all empty; returns the advanced ``qi``."""
+    while qi < len(pending) or eng.queue \
+            or any(r is not None for r in eng.req_of):
+        now = eng.now()
+        while qi < len(pending) and pending[qi].arrival <= now:
+            eng.enqueue(pending[qi])
+            qi += 1
+        done.extend(eng.admit(eng.schedule_admissions(now), now))
+        if not any(r is not None for r in eng.req_of):
+            nxt = [r.eff_arrival for r in eng.queue]
+            if qi < len(pending):
+                nxt.append(pending[qi].arrival)
+            if not nxt:
+                break
+            eng.advance(min(nxt) - eng.now())
+            continue
+        done.extend(eng.decode_step_all())
+    return qi
+
+
 def run_engine(cfg, params, trace: List[Request], *, n_slots: int,
                cache_len: int, chunk: int, sample: bool, seed: int,
                page_size: int = 128, n_pages: int = 0,
                prefix_cache: bool = True,
-               paged: Optional[bool] = None, kv_dtype="f32") -> dict:
-    """Continuous batching: admit into freed slots, per-slot decode."""
-    _validate_trace(trace, cache_len)
+               paged: Optional[bool] = None, kv_dtype="f32",
+               admission: str = "reserve",
+               fault_plan: Optional[FaultPlan] = None, clock=None,
+               retry_backoff: float = 0.05) -> dict:
+    """Continuous batching: arrivals feed the engine queue, the scheduler
+    admits under reservation backpressure into freed slots, per-slot
+    decode (with preempt-and-requeue on pool exhaustion)."""
     eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
                       chunk=chunk, sample=sample, seed=seed,
                       page_size=page_size, n_pages=n_pages,
                       prefix_cache=prefix_cache, paged=paged,
-                      kv_dtype=kv_dtype)
+                      kv_dtype=kv_dtype, admission=admission,
+                      fault_plan=fault_plan, clock=clock,
+                      retry_backoff=retry_backoff)
+    _validate_trace(trace, cache_len,
+                    page_size=eng.page_size if eng.paged else None,
+                    usable_pages=eng.usable_pages if eng.paged else None)
     warmup_s = _warmup(eng, trace)
 
     pending = sorted(trace, key=lambda r: r.arrival)
     done: List[Request] = []
-    qi = 0
-    t_start = time.perf_counter()
-    while qi < len(pending) or any(r is not None for r in eng.req_of):
-        now = time.perf_counter() - t_start
-        # admit arrived requests into free slots, oldest first — one
-        # batched prefill for the whole admission group
-        pairs = []
-        for j in range(n_slots):
-            if qi >= len(pending) or eng.req_of[j] is not None:
-                continue
-            if pending[qi].arrival <= now:
-                pairs.append((pending[qi], j))
-                qi += 1
-        done.extend(eng.admit(pairs, now))
-        if not any(r is not None for r in eng.req_of):
-            # idle: jump to the next arrival instead of spinning
-            if qi < len(pending):
-                time.sleep(max(0.0, pending[qi].arrival -
-                               (time.perf_counter() - t_start)))
-            continue
-        done.extend(eng.decode_step_all())
-    wall = time.perf_counter() - t_start
-    return _report("engine", eng, done, wall, warmup_s, t_start)
+    eng.start_clock()
+    _drain(eng, pending, 0, done)
+    wall = eng.now()
+    return _report("engine", eng, done, wall, warmup_s)
 
 
 def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
@@ -922,7 +1525,6 @@ def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
     kind — so the benchmark difference between the two runners is purely
     the batching discipline: freed slots idle until the wave drains
     instead of taking the next arrival."""
-    _validate_trace(trace, cache_len)
     if not chunked_prefill and paged is None:
         paged = False   # the token-loop prefill writes contiguous caches
     eng = ServeEngine(cfg, params, n_slots=n_slots, cache_len=cache_len,
@@ -932,26 +1534,34 @@ def run_lockstep(cfg, params, trace: List[Request], *, n_slots: int,
                       kv_dtype=kv_dtype)
     if not chunked_prefill:
         eng.prefill_step = None
+    _validate_trace(trace, cache_len,
+                    page_size=eng.page_size if eng.paged else None,
+                    usable_pages=eng.usable_pages if eng.paged else None)
     warmup_s = _warmup(eng, trace)
 
     pending = sorted(trace, key=lambda r: r.arrival)
     waves = [pending[i:i + n_slots]
              for i in range(0, len(pending), n_slots)]
     done: List[Request] = []
-    t_start = time.perf_counter()
+    eng.start_clock()
     for wave in waves:
-        now = time.perf_counter() - t_start
+        now = eng.now()
         wait = max(r.arrival for r in wave) - now
         if wait > 0:       # whole wave must have arrived (lockstep admit)
-            time.sleep(wait)
-            now = time.perf_counter() - t_start
+            eng.advance(wait)
+            now = eng.now()
         done.extend(eng.admit(list(zip(wave, range(len(wave)))), now))
         # finished slots keep burning their decode step until the whole
         # wave drains — the cost the continuous engine removes
         while any(r is not None for r in eng.req_of):
             done.extend(eng.decode_step_all())
-    wall = time.perf_counter() - t_start
-    return _report("lockstep", eng, done, wall, warmup_s, t_start)
+        # an undersized pool can have preempted wave members into the
+        # queue — drain them before the next wave so lockstep stays a
+        # complete baseline
+        if eng.queue:
+            _drain(eng, [], 0, done)
+    wall = eng.now()
+    return _report("lockstep", eng, done, wall, warmup_s)
 
 
 # ---------------------------------------------------------------------------
@@ -999,6 +1609,28 @@ def main():
                     "(int8 stores per-(row, head) symmetric scales "
                     "alongside and dequantizes inside the kernels; archs "
                     "without attention layers log a fallback to f32)")
+    ap.add_argument("--admission", choices=("reserve", "optimistic"),
+                    default="reserve",
+                    help="paged admission policy: 'reserve' holds back "
+                    "worst-case ceil((prompt+max_new)/page_size) pages at "
+                    "admission (decode can never exhaust); 'optimistic' "
+                    "reserves only the prompt's pages and overcommits — "
+                    "decode-time exhaustion preempts-and-requeues")
+    ap.add_argument("--deadline-ttft", type=float, default=0.0,
+                    help="per-request TTFT deadline in seconds (0 = none):"
+                    " requests still queued past it are shed (with "
+                    "--max-retries backoff re-enqueues)")
+    ap.add_argument("--deadline-total", type=float, default=0.0,
+                    help="per-request end-to-end deadline in seconds "
+                    "(0 = none): decode past it sheds mid-flight")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="re-enqueues (exponential backoff) granted to a "
+                    "request shed at admission before it drops")
+    ap.add_argument("--fault-plan", default="",
+                    help="fault-injection plan: a JSON string or a path "
+                    "to one (FaultPlan schema: fail_alloc_at, preempt_at, "
+                    "latency_at, hold_pages) — deterministic overload "
+                    "replay")
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-seed", type=int, default=0)
@@ -1057,6 +1689,17 @@ def main():
                       gen_range=args.gen_range,
                       arrival_rate=args.arrival_rate,
                       seed=args.trace_seed)
+    for r in trace:
+        r.deadline_ttft = args.deadline_ttft or None
+        r.deadline_total = args.deadline_total or None
+        r.max_retries = args.max_retries
+    fault_plan = None
+    if args.fault_plan:
+        s = args.fault_plan
+        if not s.lstrip().startswith("{"):
+            with open(s) as f:
+                s = f.read()
+        fault_plan = FaultPlan.from_json(s)
 
     decode_layout = "replicated"
     combine_bytes = 0
@@ -1075,13 +1718,18 @@ def main():
                 cfg, args.slots, n_shards)
         dispatch.clear_decision_log()
 
-        run = run_engine if args.mode == "engine" else run_lockstep
-        rec = run(cfg, params, trace, n_slots=args.slots,
-                  cache_len=cache_len, chunk=args.chunk,
-                  sample=not args.greedy, seed=args.seed,
-                  page_size=args.page_size, n_pages=args.pages,
+        kw = dict(n_slots=args.slots, cache_len=cache_len,
+                  chunk=args.chunk, sample=not args.greedy,
+                  seed=args.seed, page_size=args.page_size,
+                  n_pages=args.pages,
                   prefix_cache=not args.no_prefix_cache,
                   kv_dtype=args.kv_dtype)
+        if args.mode == "engine":
+            rec = run_engine(cfg, params, trace,
+                             admission=args.admission,
+                             fault_plan=fault_plan, **kw)
+        else:
+            rec = run_lockstep(cfg, params, trace, **kw)
 
     rec.update({
         "arch": cfg.name,

@@ -143,6 +143,41 @@ def paged_capacity(cfg: ModelConfig, *, n_slots: int, cache_len: int,
     }
 
 
+def reservation_capacity(*, n_pages: int, page_size: int,
+                         prompt_tokens: int, max_new: int,
+                         shared_tokens: int = 0) -> dict:
+    """Admission-control capacity of a page pool under the serve engine's
+    two policies (ISSUE: reservation/overcommit math).
+
+    ``reserve`` holds back the worst case — ceil((prompt + max_new) /
+    page_size) pages per live request — so decode can NEVER exhaust the
+    pool: concurrency is what fits whole worst-case reservations.
+    ``optimistic`` reserves only the prompt's pages and overcommits the
+    generated tail; decode-time exhaustion is recovered by
+    preempt-and-requeue, buying ``overcommit_ratio`` more admitted
+    concurrency in exchange for preemption risk.  ``shared_tokens``
+    leading prompt tokens are prefix-deduplicated full blocks: they cost
+    the pool once, not per request (the first admission pays them —
+    capacity here counts steady-state extra requests)."""
+    usable = n_pages - 1                       # page 0 is the sink
+    shared_pages = min(shared_tokens, prompt_tokens) // page_size
+    worst = -(-(prompt_tokens + max_new) // page_size)
+    opt = -(-prompt_tokens // page_size)
+    worst_u = max(worst - shared_pages, 1)
+    opt_u = max(opt - shared_pages, 1)
+    slots_reserve = max((usable - shared_pages) // worst_u, 0)
+    slots_opt = max((usable - shared_pages) // opt_u, 0)
+    return {
+        "usable_pages": usable,
+        "shared_pages": shared_pages,
+        "worst_case_pages_per_req": worst,
+        "optimistic_pages_per_req": opt,
+        "slots_reserve": slots_reserve,
+        "slots_optimistic": slots_opt,
+        "overcommit_ratio": slots_opt / max(slots_reserve, 1),
+    }
+
+
 def decode_bytes_per_token(cfg: ModelConfig, batch: int, cache_len: int, *,
                            kv_dtype=None, page_size: int | None = None,
                            n_pages: int | None = None) -> int:

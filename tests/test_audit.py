@@ -47,9 +47,10 @@ def test_strict_audit_clean_on_tree(tmp_path):
     # the interleaving check actually explored state space and reached
     # both the COW-fork and recycled-page-reuse paths
     am = report["allocator_model"]
-    assert am["states_explored"] > 50
+    assert am["states_explored"] >= alloc_model.STATE_FLOOR
     assert am["cow_forks"] > 0
     assert am["recycle_reuse"] > 0
+    assert am["reserved_allocs"] > 0 and am["preempts"] > 0
     # the kernel checker exercised multi-block grids
     kstats = next(p["stats"] for p in report["passes"]
                   if p["name"] == "kernel-check")
@@ -228,12 +229,34 @@ def test_alloc_replay_flags_refcount_underflow():
         [x.format() for x in v]
 
 
+def test_alloc_model_flags_phantom_reservation():
+    """An allocator whose ``reserve`` never checks capacity breaks the
+    "reserved allocs cannot fail" contract — the explorer must reach an
+    overbooked state and flag it (and nothing else: this fixture's
+    version/refcount discipline is correct)."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.launch.serve import AllocatorModel
+    bad = _load_fixture("bad_alloc.py")
+    violations, stats = alloc_model.explore(
+        AllocatorModel(n_pages=4,
+                       allocator_cls=bad.PhantomReserveAllocator))
+    assert any("reserved" in v.message and "exceeds free" in v.message
+               for v in violations), [v.format() for v in violations]
+    assert not any("version" in v.message for v in violations)
+
+
 def test_alloc_model_real_allocator_is_clean():
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro.launch.serve import AllocatorModel
     violations, stats = alloc_model.explore(AllocatorModel(n_pages=4))
     assert not violations, [v.format() for v in violations]
     assert stats["cow_forks"] > 0 and stats["recycle_reuse"] > 0
+    # the robustness ops are part of the modeled vocabulary, and the
+    # state count clears the anti-shrink floor the strict run enforces
+    assert stats["reserve_ops"] > 0
+    assert stats["reserved_allocs"] > 0
+    assert stats["preempts"] > 0
+    assert stats["states_explored"] >= alloc_model.STATE_FLOOR
 
 
 # ---------------------------------------------------------------------------

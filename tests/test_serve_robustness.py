@@ -1,0 +1,371 @@
+"""Overload-safe serving: reservation accounting, admission
+backpressure, preempt-and-requeue, deadlines, and the deterministic
+fault-injection harness.
+
+The contract under test: page-pool exhaustion is a recoverable
+scheduling event, never a crash — and recovery is INVISIBLE in the
+output.  A preempted-and-resumed request must emit exactly the greedy
+tokens of an uncontended run (generated-so-far tokens fold into the
+re-prefill prompt), injected allocation failures must leave the
+allocator's books balanced, and deadline sheds must free every page the
+victim held.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import serve as serve_mod
+from repro.launch import traffic
+from repro.models import model as M
+
+PS = 64        # small pages keep pool pressure cheap to reach
+
+
+def _cfg():
+    return get_config("stablelm-1.6b").reduced()
+
+
+def _copy_trace(trace):
+    return [serve_mod.Request(
+        rid=r.rid, prompt=np.asarray(r.prompt).copy(), max_new=r.max_new,
+        arrival=r.arrival, deadline_ttft=r.deadline_ttft,
+        deadline_total=r.deadline_total, max_retries=r.max_retries)
+        for r in trace]
+
+
+def _pressure_trace(vocab, *, n=4, seed=0):
+    """Shared one-page prefix, distinct tails (rids 1,2 duplicate —
+    their shared partial page COW-forks at first decode write), and
+    generations long enough to cross into a third page."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, PS).astype(np.int32)
+    dup_tail = rng.integers(0, vocab, 9).astype(np.int32)
+    out = []
+    for rid in range(n):
+        tail = dup_tail if rid in (1, 2) else rng.integers(
+            0, vocab, 5 + (rid % 3) * 6).astype(np.int32)
+        # uniform max_new keeps co-admitted slots in flight together, so
+        # the later page-boundary crossing finds the pool already drained
+        out.append(serve_mod.Request(
+            rid=rid, prompt=np.concatenate([shared, tail]),
+            max_new=PS, arrival=0.0))
+    return out
+
+
+def _drive_robust(eng, trace, max_iters=5000):
+    """The engine's own scheduling loop, inlined: enqueue everything,
+    then alternate schedule/admit/decode, advancing the (virtual) clock
+    only when idle with pending backoff entries."""
+    eng.start_clock()
+    for r in trace:
+        eng.enqueue(r)
+    expect = len(eng.queue) + sum(r is not None for r in eng.req_of)
+    done = []
+    for _ in range(max_iters):
+        if len(done) + len(eng.shed_requests) >= expect:
+            return done
+        now = eng.now()
+        done.extend(eng.admit(eng.schedule_admissions(now), now))
+        if any(r is not None for r in eng.req_of):
+            done.extend(eng.decode_step_all())
+        elif eng.queue:
+            nxt = min(r.eff_arrival for r in eng.queue)
+            eng.advance(max(nxt - eng.now(), 1e-3))
+        else:
+            break
+    raise AssertionError(
+        f"engine wedged: {len(done)} done, {len(eng.shed_requests)} "
+        f"shed, queue={len(eng.queue)} of {expect}")
+
+
+def _assert_books_balanced(eng):
+    """Post-drain allocator invariants: every page back on the free
+    list exactly once, no refs, no reservations, sink untouched."""
+    al = eng.alloc
+    assert al.reserved == 0
+    assert int(eng.resv_of.sum()) == 0
+    assert al.used_pages == 0, f"leaked {al.used_pages} pages"
+    assert len(set(al.free)) == len(al.free) == al.n_pages - 1
+    assert 0 not in al.free
+    assert all(int(r) >= 0 for r in al.ref)
+    assert all(int(al.ref[p]) == 0 for p in range(1, al.n_pages))
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator: try_alloc + reservation accounting
+# ---------------------------------------------------------------------------
+
+def test_allocator_reservation_accounting():
+    al = serve_mod.PageAllocator(5)          # 4 usable
+    assert not al.reserve(5)                 # over capacity: refused...
+    assert al.reserved == 0                  # ...with no side effect
+    assert al.reserve(3)
+    assert al.free_unreserved == 1
+    p1 = al.try_alloc()                      # optimistic headroom: 1 page
+    assert p1 is not None
+    assert al.try_alloc() is None            # free == reserved: held back
+    p2 = al.try_alloc(reserved=True)         # reserved units still flow
+    assert p2 is not None and al.reserved == 2
+    assert not al.reserve(1)                 # free 2 - reserved 2 == 0
+    al.unreserve(2)
+    with pytest.raises(RuntimeError, match="exceeds outstanding"):
+        al.unreserve(1)
+    with pytest.raises(RuntimeError, match="out of sync"):
+        al.try_alloc(reserved=True)          # no reservation to consume
+    assert al.high_water == 2
+    while al.try_alloc() is not None:
+        pass
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        al.alloc()                           # legacy surface still raises
+    assert al.high_water == 4
+    al.decref(p1)
+    assert al.high_water == 4                # high-water never recedes
+    assert p1 in al.free
+
+
+# ---------------------------------------------------------------------------
+# S2: trace validation rejects can-never-fit requests
+# ---------------------------------------------------------------------------
+
+def test_validate_trace_worst_case_page_demand():
+    big = serve_mod.Request(rid=0, prompt=np.zeros(100, np.int32),
+                            max_new=92, arrival=0.0)
+    # ceil(192 / 64) -> 3 pages: the largest that fits 3 usable
+    serve_mod._validate_trace([big], 192, page_size=PS, usable_pages=3)
+    with pytest.raises(ValueError, match="can never be served"):
+        serve_mod._validate_trace([big], 192, page_size=PS,
+                                  usable_pages=2)
+    # unpaged engines skip the page check entirely
+    serve_mod._validate_trace([big], 192)
+
+
+def test_reservation_capacity_model():
+    cap = traffic.reservation_capacity(n_pages=7, page_size=PS,
+                                       prompt_tokens=PS + 22, max_new=PS,
+                                       shared_tokens=PS)
+    assert cap["usable_pages"] == 6
+    assert cap["shared_pages"] == 1
+    assert cap["worst_case_pages_per_req"] == 3
+    assert cap["optimistic_pages_per_req"] == 2
+    # shared page costs the pool once: 1 + 2k <= 6 -> 2 ... 1 + k <= 6 -> 5
+    assert cap["slots_reserve"] == 2
+    assert cap["slots_optimistic"] == 5
+    assert cap["overcommit_ratio"] == pytest.approx(2.5)
+
+
+# ---------------------------------------------------------------------------
+# S1: mid-admission allocation failure unwinds cleanly
+# ---------------------------------------------------------------------------
+
+def test_admission_unwind_restores_refcounts():
+    """A 2-page prompt whose SECOND page allocation fails (injected at
+    global call index 1) must unwind the first: refcounts back to the
+    pre-admission state, reservation released, request requeued — and a
+    clean retry then produces the uncontended tokens."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.key(0))
+    kw = dict(n_slots=2, cache_len=128, chunk=64, sample=False, seed=0,
+              page_size=PS)
+    trace = [serve_mod.Request(rid=0,
+                               prompt=np.arange(70, dtype=np.int32) % 97,
+                               max_new=6, arrival=0.0)]
+    plan = serve_mod.FaultPlan(fail_alloc_at=frozenset({1}))
+    eng = serve_mod.ServeEngine(cfg, params, fault_plan=plan,
+                                clock=lambda: 0.0, **kw)
+    assert eng.paged
+    eng.enqueue(trace[0])
+    pairs = eng.schedule_admissions(0.0)
+    assert len(pairs) == 1 and eng.alloc.reserved == 2
+    done = eng.admit(pairs, 0.0)
+    assert done == [] and eng.injected_alloc_failures == 1
+    assert eng.admission_alloc_failures == 1 and eng.requeues == 1
+    assert list(eng.queue) == [trace[0]]          # requeued, not lost
+    assert eng.alloc.used_pages == 0              # partial row unwound
+    assert eng.alloc.reserved == 0                # reservation released
+    assert (eng.pt_host == -1).all()
+    assert eng.pages_requested == 0               # dedup stats unwound too
+    done = _drive_robust(eng, [])                 # already enqueued
+    assert [r.rid for r in done] == [0]
+    _assert_books_balanced(eng)
+
+    clean = _copy_trace(trace)
+    eng2 = serve_mod.ServeEngine(cfg, params, clock=lambda: 0.0, **kw)
+    _drive_robust(eng2, clean)
+    assert list(trace[0].tokens) == list(clean[0].tokens)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: preempt-and-requeue under page pressure, token identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_preemption_token_identity():
+    """Optimistic admission on an undersized pool: decode growth
+    exhausts the pool, slots preempt and requeue, and every request
+    still emits the exact greedy tokens of an ample-pool run.  Reserve
+    admission on the same pool never needs preemption at all."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.key(0))
+    trace = _pressure_trace(cfg.vocab_size, n=4)
+    kw = dict(n_slots=2, cache_len=3 * PS, chunk=PS, sample=False,
+              seed=0, page_size=PS, clock=lambda: 0.0)
+
+    ample = _copy_trace(trace)
+    eng = serve_mod.ServeEngine(cfg, params, **kw)       # 7 pages
+    _drive_robust(eng, ample)
+    assert eng.preemptions == 0
+    want = {r.rid: list(r.tokens) for r in ample}
+    assert all(len(t) for t in want.values())
+
+    tight = _copy_trace(trace)
+    eng = serve_mod.ServeEngine(cfg, params, n_pages=5,
+                                admission="optimistic", **kw)
+    _drive_robust(eng, tight)
+    assert eng.preemptions >= 1 and eng.requeues >= 1
+    assert any(r.preemptions > 0 for r in tight)
+    assert {r.rid: list(r.tokens) for r in tight} == want
+    assert not eng.shed_requests
+    assert eng.alloc.high_water <= 4
+    _assert_books_balanced(eng)
+
+    resv = _copy_trace(trace)
+    eng = serve_mod.ServeEngine(cfg, params, n_pages=5,
+                                admission="reserve", **kw)
+    _drive_robust(eng, resv)
+    assert eng.preemptions == 0          # worst case reserved up front
+    assert {r.rid: list(r.tokens) for r in resv} == want
+    _assert_books_balanced(eng)
+
+
+# ---------------------------------------------------------------------------
+# S3: every exhaustion edge under an injected FaultPlan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fault_injection_preserves_tokens_and_books():
+    """A dense random FaultPlan (injected try_alloc failures across
+    admission mapping, decode growth and COW forks, forced preemptions,
+    virtual latency, standing pool pressure) may slow the run down but
+    must not change its output: all requests complete, greedy tokens
+    match the fault-free run, and the allocator's books balance."""
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.key(0))
+    trace = _pressure_trace(cfg.vocab_size, n=4, seed=1)
+    kw = dict(n_slots=2, cache_len=3 * PS, chunk=PS, sample=False,
+              seed=0, page_size=PS, clock=lambda: 0.0)
+
+    clean = _copy_trace(trace)
+    eng = serve_mod.ServeEngine(cfg, params, **kw)    # reserve policy
+    _drive_robust(eng, clean)
+    want = {r.rid: list(r.tokens) for r in clean}
+
+    # explicit indices so every edge fires deterministically: calls 1/3
+    # hit admission mapping (fresh alloc + prefix-miss retry), later
+    # ones land in decode growth and COW forks; steps 6/40 force
+    # preemptions mid-decode; steps 3/10 inject virtual latency
+    plan = serve_mod.FaultPlan(
+        fail_alloc_at=frozenset({1, 3, 8, 15, 22, 30}),
+        preempt_at=(6, 40), latency_at=((3, 0.2), (10, 0.1)),
+        hold_pages=1)
+    faulted = _copy_trace(trace)
+    eng = serve_mod.ServeEngine(cfg, params, fault_plan=plan,
+                                admission="optimistic", **kw)
+    assert eng.usable_pages == eng.n_pages - 2       # standing pressure
+    _drive_robust(eng, faulted)
+    assert eng.injected_alloc_failures >= 1          # plan actually bit
+    assert eng.forced_preemptions >= 1
+    assert eng.now() > 0.0                           # latency injected
+    assert not eng.shed_requests
+    assert {r.rid: list(r.tokens) for r in faulted} == want
+    al = eng.alloc
+    assert al.reserved == 0 and al.used_pages == len(eng._fault_held)
+    assert not set(al.free) & set(eng._fault_held)
+    eng.reset()
+    assert al is not eng.alloc and eng.alloc.reserved == 0
+
+
+# ---------------------------------------------------------------------------
+# deadlines: TTFT shed + bounded retry, total-deadline mid-flight shed
+# ---------------------------------------------------------------------------
+
+def test_ttft_deadline_shed_and_retry():
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = serve_mod.ServeEngine(cfg, params, n_slots=1, cache_len=128,
+                                chunk=64, sample=False, seed=0,
+                                page_size=PS, clock=lambda: 0.0,
+                                retry_backoff=0.05)
+    lag = serve_mod.Request(rid=1, prompt=np.zeros(8, np.int32),
+                            max_new=4, arrival=0.0, deadline_ttft=0.5,
+                            max_retries=1)
+    eng.enqueue(lag)
+    # scheduled late (e.g. slots were busy): TTFT already blown -> shed,
+    # retried with exponential backoff, TTFT clock restarted
+    assert eng.schedule_admissions(2.0) == []
+    assert eng.retries == 1 and lag.retry_count == 1
+    assert lag.eff_arrival == pytest.approx(2.05)
+    assert list(eng.queue) == [lag]
+    # backoff pending: skipped without blocking the line
+    assert eng.schedule_admissions(2.01) == []
+    assert not eng.shed_requests
+    # second miss: retries exhausted -> terminal shed
+    assert eng.schedule_admissions(5.0) == []
+    assert eng.shed_requests == [lag]
+    assert lag.shed_reason == "ttft-deadline"
+    assert eng.sheds_admission == 2 and not eng.queue
+    # queue-depth samples feed the report percentiles
+    assert len(eng.queue_depths) == 3
+    # a request scheduled in time admits normally under the same deadline
+    ok = serve_mod.Request(rid=2, prompt=np.zeros(8, np.int32),
+                           max_new=2, arrival=5.0, deadline_ttft=0.5)
+    eng.enqueue(ok)
+    pairs = eng.schedule_admissions(5.1)
+    assert [r.rid for r, _ in pairs] == [2]
+
+
+def test_total_deadline_sheds_mid_flight():
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = serve_mod.ServeEngine(cfg, params, n_slots=1, cache_len=128,
+                                chunk=64, sample=False, seed=0,
+                                page_size=PS, clock=lambda: 0.0)
+    eng.start_clock()
+    req = serve_mod.Request(rid=0, prompt=np.zeros(8, np.int32),
+                            max_new=50, arrival=0.0, deadline_total=0.5)
+    eng.enqueue(req)
+    assert eng.admit(eng.schedule_admissions(0.0), 0.0) == []
+    eng.decode_step_all()
+    n_before = len(req.tokens)
+    assert n_before >= 1 and req.shed_reason is None
+    eng.advance(1.0)                      # virtual: deadline now blown
+    # the step in flight still lands its token, then the slot sheds
+    assert eng.decode_step_all() == []    # shed, not finished
+    assert req.shed_reason == "total-deadline"
+    assert eng.sheds_decode == 1 and eng.shed_requests == [req]
+    assert len(req.tokens) == n_before + 1
+    assert req.t_done == pytest.approx(1.0)
+    assert eng.req_of[0] is None
+    _assert_books_balanced(eng)           # victim's pages all came back
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism + serialization
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_semantics_and_roundtrip():
+    plan = serve_mod.FaultPlan(fail_alloc_at=frozenset({2, 7}),
+                               preempt_at=(5, 5, 9),
+                               latency_at=((3, 0.5), (3, 0.25), (4, 0.1)),
+                               hold_pages=2)
+    assert plan.alloc_fails(2) and not plan.alloc_fails(3)
+    assert plan.forced_preempts(5) == 2 and plan.forced_preempts(6) == 0
+    assert plan.step_latency(3) == pytest.approx(0.75)
+    assert plan.step_latency(99) == 0.0
+    back = serve_mod.FaultPlan.from_json(plan.to_json())
+    assert back == plan
+    json.loads(plan.to_json())            # valid JSON, CLI-pasteable
+    assert serve_mod.FaultPlan.random(3) == serve_mod.FaultPlan.random(3)
+    assert serve_mod.FaultPlan.random(3) != serve_mod.FaultPlan.random(4)

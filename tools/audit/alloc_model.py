@@ -3,14 +3,18 @@
 
 Drives REAL ``PageAllocator`` instances (via ``launch.serve``'s
 ``AllocatorModel`` export) through every interleaving of
-alloc / incref / release / COW-fork up to a bounded depth — the
-small-scope hypothesis: refcount/version bugs that exist at all show up
-within a handful of operations on a handful of pages.  Invariants
-checked on every reached state:
+alloc / reserve / reserved-alloc / unreserve / incref / release /
+COW-fork / preempt up to a bounded depth — the small-scope hypothesis:
+refcount/version/reservation bugs that exist at all show up within a
+handful of operations on a handful of pages.  Invariants checked on
+every reached state:
 
   * refcounts never negative, and exactly equal to the live hold count;
   * the free list never contains a held page (or duplicates), and page 0
     (the garbage sink) is never handed out;
+  * ``0 <= reserved <= len(free)`` — the admission-reservation invariant
+    that makes reserved allocations infallible (an overbooked reserve
+    would let decode fail on pages admission already promised);
   * a page's version never changes while a reference is live (so an
     index entry recorded at acquire time stays valid exactly as long as
     the page does);
@@ -18,10 +22,12 @@ checked on every reached state:
     one — the property that makes stale ``PrefixIndex`` entries fail
     validation instead of aliasing a reissued page.
 
-Coverage is part of the contract: the run must actually reach a COW fork
-and a recycled-page reuse, and reports the reached state count in
-``AUDIT.json`` (``allocator_model`` block) so CI can assert the scope
-didn't silently collapse.
+Coverage is part of the contract: the run must actually reach a COW
+fork, a recycled-page reuse, a reserved allocation and a preemption, and
+the reached state count must clear ``STATE_FLOOR`` — a silently-shrunk
+op vocabulary (or collapsed state space) fails ``--strict`` instead of
+vacuously passing.  Counters land in ``AUDIT.json``
+(``allocator_model`` block).
 """
 from __future__ import annotations
 
@@ -31,11 +37,17 @@ from tools.audit.framework import PassResult, Violation, ensure_importable
 
 DEPTH = 6
 N_PAGES = 4
+# the full op vocabulary reaches 217 states at DEPTH=6/N_PAGES=4 (the
+# pre-reservation model reached 145): the floor sits between the two, so
+# dropping the reserve/preempt families trips it while honest refactors
+# keep slack
+STATE_FLOOR = 180
 
 
 def _canon(alloc, holds):
     return (tuple(alloc.free), tuple(int(r) for r in alloc.ref),
-            tuple(int(v) for v in alloc.version), holds)
+            tuple(int(v) for v in alloc.version),
+            int(getattr(alloc, "reserved", 0)), holds)
 
 
 def _invariants(alloc, holds, loc: str) -> List[Violation]:
@@ -63,6 +75,12 @@ def _invariants(alloc, holds, loc: str) -> List[Violation]:
         V(f"pages {sorted(dup)} simultaneously held and on the free list")
     if 0 in alloc.free:
         V("page 0 (garbage sink) is on the free list")
+    reserved = int(getattr(alloc, "reserved", 0))
+    if reserved < 0:
+        V(f"negative reservation count {reserved}")
+    if reserved > len(alloc.free):
+        V(f"reserved {reserved} exceeds free {len(alloc.free)} — a "
+          "reserved allocation admission already promised could fail")
     for p, ver in holds:
         cur = int(alloc.version[p])
         if cur != ver:
@@ -83,12 +101,14 @@ def explore(model, depth: int = DEPTH) -> "tuple[List[Violation], dict]":
     seen = {_canon(alloc0, holds0)}
     stats = {"depth": depth, "n_pages": model.n_pages,
              "states_explored": 1, "ops_applied": 0,
-             "cow_forks": 0, "recycle_reuse": 0}
+             "cow_forks": 0, "recycle_reuse": 0,
+             "reserve_ops": 0, "reserved_allocs": 0, "preempts": 0}
     for _ in range(depth):
         nxt = []
         for alloc, holds in frontier:
             for op in model.enabled_ops(alloc, holds):
-                will_pop = alloc.free[-1] if op[0] in ("alloc", "cow") \
+                will_pop = alloc.free[-1] \
+                    if op[0] in ("alloc", "alloc_r", "cow") \
                     and alloc.free else None
                 recycled = will_pop is not None and \
                     int(alloc.version[will_pop]) > 0
@@ -107,6 +127,12 @@ def explore(model, depth: int = DEPTH) -> "tuple[List[Violation], dict]":
                 stats["ops_applied"] += 1
                 if op[0] == "cow":
                     stats["cow_forks"] += 1
+                elif op[0] == "reserve":
+                    stats["reserve_ops"] += 1
+                elif op[0] == "alloc_r":
+                    stats["reserved_allocs"] += 1
+                elif op[0] == "preempt":
+                    stats["preempts"] += 1
                 if recycled:
                     stats["recycle_reuse"] += 1
                 errs = _invariants(a2, h2, loc)
@@ -192,5 +218,22 @@ def run_allocator_checks(root: str, *, depth: int = DEPTH,
             "alloc-interleaving", "tools/audit/alloc_model.py", 0,
             "interleaving never re-issued a recycled page — the "
             "version-bump path is unexercised"))
+    if not stats["reserved_allocs"]:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            "interleaving never consumed a reservation — the admission "
+            "backpressure path (reserve -> alloc_r) is unexercised"))
+    if not stats["preempts"]:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            "interleaving never preempted a hold — the decode-exhaustion "
+            "recovery path is unexercised"))
+    if depth >= DEPTH and n_pages >= N_PAGES \
+            and stats["states_explored"] < STATE_FLOOR:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            f"state space collapsed: {stats['states_explored']} states "
+            f"< floor {STATE_FLOOR} — the model's op vocabulary shrank "
+            "(preempt/reserve/release must all stay modeled)"))
     return [PassResult("alloc-interleaving", "allocator", violations,
                        stats)]

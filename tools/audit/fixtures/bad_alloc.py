@@ -1,8 +1,10 @@
-"""Known-bad page allocator for the interleaving check: recycling a page
-does NOT bump its version (stale prefix-index entries would alias the
-reissued page) and refcounts may go negative.  Plus the raw underflow
-trace the replay harness must catch on the REAL allocator's op
-vocabulary."""
+"""Known-bad page allocators for the interleaving check: one whose
+recycling does NOT bump versions (stale prefix-index entries would alias
+the reissued page) with refcounts that may go negative, and one whose
+``reserve`` never checks capacity (overbooked reservations let a
+reserved allocation — which admission promised cannot fail — fail at
+decode time).  Plus the raw underflow trace the replay harness must
+catch on the REAL allocator's op vocabulary."""
 import numpy as np
 
 
@@ -14,13 +16,33 @@ class NoVersionBumpAllocator:
         self.free = list(range(n_pages - 1, 0, -1))
         self.ref = np.zeros(n_pages, np.int32)
         self.version = np.zeros(n_pages, np.int64)
+        self.reserved = 0
 
-    def alloc(self) -> int:
-        if not self.free:
-            raise RuntimeError("page pool exhausted")
+    def try_alloc(self, *, reserved: bool = False):
+        if reserved:
+            if not self.free:
+                return None
+            self.reserved -= 1
+        elif len(self.free) <= self.reserved:
+            return None
         p = self.free.pop()
         self.ref[p] = 1
         return p
+
+    def alloc(self) -> int:
+        p = self.try_alloc()
+        if p is None:
+            raise RuntimeError("page pool exhausted")
+        return p
+
+    def reserve(self, n: int) -> bool:
+        if len(self.free) - self.reserved < n:
+            return False
+        self.reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        self.reserved -= n
 
     def incref(self, p: int) -> None:
         self.ref[p] += 1
@@ -31,6 +53,29 @@ class NoVersionBumpAllocator:
             # BUG 1: no version bump — a recycled page is
             # indistinguishable from the page an old index entry named
             # BUG 2: <= 0 masks refcount underflow instead of failing
+            self.free.append(p)
+
+
+class PhantomReserveAllocator(NoVersionBumpAllocator):
+    """Reservation accounting without capacity checks: ``reserve``
+    always succeeds, so ``reserved`` can exceed the free list and the
+    "reserved allocs never fail" guarantee is a lie.  The interleaving
+    check must flag the overbooked state."""
+
+    def __init__(self, n_pages: int):
+        super().__init__(n_pages)
+        self.version = np.zeros(n_pages, np.int64)
+
+    def reserve(self, n: int) -> bool:
+        self.reserved += n     # BUG: no free-list capacity check
+        return True
+
+    def decref(self, p: int) -> None:
+        # keep THIS fixture's version discipline correct so the only
+        # violation the explorer reports is the reservation one
+        self.ref[p] -= 1
+        if self.ref[p] == 0:
+            self.version[p] += 1
             self.free.append(p)
 
 
