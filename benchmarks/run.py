@@ -23,6 +23,11 @@ def main() -> None:
                     help="CI chaos-smoke leg: the serve overload bench "
                     "only (undersized page pool + fault injection); any "
                     "shed, crash, or greedy-token divergence raises")
+    ap.add_argument("--spec", action="store_true",
+                    help="CI speculative-decode smoke leg: the serve "
+                    "spec bench only (off vs n-gram vs draft-model on "
+                    "the probed high-acceptance trace); any greedy "
+                    "divergence or a tok/s ratio <= 1.5x raises")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     args = ap.parse_args()
@@ -55,9 +60,12 @@ def main() -> None:
         "stability": lambda: bench_stability.run(frames=40_000 * mult),
         "roofline": lambda: bench_roofline.run(),
         "chaos": lambda: bench_serve.run_chaos(),
+        "spec": lambda: bench_serve.run_spec(),
     }
     if args.chaos:
         only = ["chaos"]
+    elif args.spec:
+        only = ["spec"]
     elif args.quick:
         only = ["prefill", "serve"]
         # one-line invariant status next to the perf rows: the cheap

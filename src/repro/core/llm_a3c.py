@@ -88,15 +88,36 @@ def make_train_step(cfg: ModelConfig, opt, *, gamma: float = 0.99,
     return train_step
 
 
-def sample_slot_tokens(logits, key, *, sample: bool = True):
-    """Per-slot sampling: logits (B, V), one threaded PRNG key.  Each batch
-    slot draws from its own ``fold_in(key, slot)`` stream, so concurrent
-    requests never share a sampling stream (and the caller folds the step
-    index into ``key``, so streams never repeat across steps either)."""
+def _stream_keys(key, sids, pos, b):
+    """One PRNG key per batch row, derived from (stream id, logical
+    position) — NOT from the engine step count, so a speculative run
+    that commits 3 tokens in one step and a plain decode that takes 3
+    steps draw identical streams for identical tokens."""
+    sids = jnp.broadcast_to(jnp.asarray(sids), (b,)).astype(jnp.uint32)
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,)).astype(jnp.uint32)
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, sids)
+    return jax.vmap(jax.random.fold_in)(keys, pos)
+
+
+def sample_slot_tokens(logits, key, *, sample: bool = True, sids=None,
+                       pos=None):
+    """Per-slot sampling: logits (B, V), one threaded PRNG key.
+
+    With ``sids``/``pos`` (the serve engine's path) each row draws from
+    the ``fold_in(fold_in(key, sids[j]), pos[j])`` stream — keyed by the
+    request's identity and the *logical position of the sampled token*,
+    so streams are invariant to batching, slot assignment, preemption
+    and speculation (a token is the same draw no matter how many verify
+    tokens committed alongside it).  Legacy callers omit both and get
+    the per-slot-index fold (caller folds the step index into ``key``).
+    """
     if not sample:
         return jnp.argmax(logits, axis=-1)
     b = logits.shape[0]
-    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(b))
+    if sids is None:
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(b))
+    else:
+        keys = _stream_keys(key, sids, pos, b)
     return jax.vmap(jax.random.categorical)(keys, logits)
 
 
@@ -105,21 +126,85 @@ def make_serve_step(cfg: ModelConfig, *, sample: bool = True):
     Returns (token (B,), value (B,), cache).
 
     ``pos`` is a lockstep scalar or per-slot (B,) (continuous batching);
-    ``key`` is a *threaded* jax PRNG key — the caller folds the step index
-    in (``jax.random.fold_in(base, step)``) and the step folds the slot
-    index per row, replacing the old ``jax.random.key(uint32_seed)``
-    rebuild whose streams were correlated across steps and identical
-    across slots."""
+    ``key`` is a *threaded* jax PRNG key.  Engine callers pass ``sids``
+    (per-slot stream ids, e.g. request ids): the generated token at
+    logical position pos + 1 then draws from the (sid, pos + 1) stream —
+    invariant to speculation and scheduling.  Legacy callers omit
+    ``sids`` and fold the step index into ``key`` themselves."""
 
-    def serve_step(params, cache, batch, pos, key):
+    def serve_step(params, cache, batch, pos, key, sids=None):
         out, cache = M.decode_step(cfg, params, cache, batch, pos)
         logits = out["logits"][:, -1].astype(jnp.float32)
-        token = sample_slot_tokens(logits, key, sample=sample)
+        if sids is None:
+            token = sample_slot_tokens(logits, key, sample=sample)
+        else:
+            token = sample_slot_tokens(logits, key, sample=sample,
+                                       sids=sids, pos=pos + 1)
         value = out["value"][:, -1] if "value" in out else \
             jnp.zeros(logits.shape[0])
         return token, value, cache
 
     return serve_step
+
+
+def make_verify_step(cfg: ModelConfig, shift: int, *, sample: bool = True):
+    """Fused speculative round for the serve engine: ONE jitted call
+    scores a (B, K) batch of per-slot draft chunks (row j's current
+    token + drafts at positions pos[j] + i), decides acceptance, and
+    commits exactly the accepted rows' KV — a single launch per round
+    (a separate host-decided commit launch doubled per-round dispatch
+    overhead, which is most of what speculation amortises).
+
+    Returns ``verify_step(params, cache, batch, pos, key, sids, k_eff,
+    remaining) -> (targets (B, K) int32, n_acc (B,) int32, cache)``:
+    ``targets[j, i]`` is the token the target model emits after
+    consuming position pos[j] + i — greedy argmax, or a draw from the
+    (sid, pos + i + 1) stream, the *same* derivation ``make_serve_step``
+    uses, so accepted sampled tokens are bit-identical to
+    non-speculative decode.  The accept rule is the longest draft
+    prefix matching the targets (within row j's effective k) plus the
+    bonus target token, clamped to ``remaining[j]`` (the request's
+    unused generation budget; 0 marks an idle row, which accepts and
+    commits nothing).  ``shift`` is the engine's logical cache length
+    (static re-basing bound).
+
+    Verify itself writes nothing — ``M.verify_step`` returns the chunk
+    K/V as ``pendings`` and ``M.commit_step`` scatters rows i <
+    n_acc[j] in the same launch, so KV rollback on rejection stays a
+    no-op by construction, and every output the host reads is forced
+    together (no partially-dispatched cache state outlives the
+    round)."""
+
+    def verify_step(params, cache, batch, pos, key, sids, k_eff,
+                    remaining):
+        out, pendings = M.verify_step(cfg, params, cache, batch, pos,
+                                      shift)
+        logits = out["logits"].astype(jnp.float32)      # (B, K, V)
+        b, kq, _ = logits.shape
+        if not sample:
+            targets = jnp.argmax(logits, axis=-1)
+        else:
+            tpos = pos[:, None] + 1 + jnp.arange(kq)[None]   # (B, K)
+            skeys = jax.vmap(jax.random.fold_in, (None, 0))(
+                key, jnp.broadcast_to(jnp.asarray(sids), (b,))
+                .astype(jnp.uint32))
+            pkeys = jax.vmap(jax.vmap(jax.random.fold_in, (None, 0)))(
+                skeys, tpos.astype(jnp.uint32))
+            targets = jax.vmap(jax.vmap(jax.random.categorical))(pkeys,
+                                                                 logits)
+        targets = targets.astype(jnp.int32)
+        # accept: a_j = leading run of draft/target matches inside row
+        # j's effective k (same rule as the old host loop: position i
+        # counts iff i < k_eff - 1 and every draft up to i matched)
+        match = batch["tokens"][:, 1:] == targets[:, :-1]    # (B, K-1)
+        in_k = jnp.arange(kq - 1)[None, :] < (k_eff[:, None] - 1)
+        run = jnp.cumprod((match & in_k).astype(jnp.int32), axis=1)
+        n_acc = jnp.minimum(run.sum(axis=1) + 1,
+                            remaining).astype(jnp.int32)
+        cache = M.commit_step(cfg, cache, pendings, pos, n_acc)
+        return targets, n_acc, cache
+
+    return verify_step
 
 
 def make_prefill_step(cfg: ModelConfig):

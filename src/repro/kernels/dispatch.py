@@ -851,6 +851,115 @@ def flash_attention_append_paged(q, k_pool, v_pool, page_table,
 
 
 # ---------------------------------------------------------------------------
+# speculative verify (ragged per-row depths as one append chunk)
+# ---------------------------------------------------------------------------
+#
+# Verification of k drafted tokens is exactly a k-token append chunk —
+# except each batch row sits at its own decode depth ``pos[j]``, while
+# ``flash_attention_append`` wants one static ``pos0``.  Both masks the
+# append kernel applies are relative: causal is ``kpos <= qpos`` and the
+# sliding window is ``kpos > qpos - window``, so adding a common constant
+# to every key position *and* every query position of one row changes
+# nothing.  Re-basing row j by ``shift - pos[j]`` (``shift`` a static
+# upper bound on pos — callers pass the logical cache length) therefore
+# turns the ragged verify batch into a single append call at
+# ``pos0 = shift``, with no new kernel and no per-row loop.  RoPE stays
+# the model layer's job at the *true* absolute positions.
+
+def flash_attention_verify(q, k, v, kpos, *, pos, shift: int,
+                           window: Optional[int] = None,
+                           k_scale=None, v_scale=None,
+                           backend: str = "auto") -> jnp.ndarray:
+    """Speculative-verify attention: score K drafted tokens per slot in
+    one fused append launch.
+
+    q (B,K,Hq,D) — row j's draft chunk at absolute positions
+    ``pos[j] + i`` (decode's per-slot depths, not prefill's static
+    pos0); k,v (B,Sk,Hkv,D) — key stream (cache prefix + the chunk's
+    own K/V); kpos (B,Sk) absolute position per key row (-1 invalid);
+    pos (B,) int32; ``shift`` static, >= every pos -> (B,K,Hq,D).
+
+    Rows shift by different amounts, so key row index no longer equals
+    shifted position: the delegated call always runs with
+    ``kpos_linear=False`` (ring layouts required that anyway).  With
+    ``k_scale``/``v_scale`` the key stream is int8 — scales ride into
+    the delegated quant arm unchanged (the shift touches positions
+    only, never payloads)."""
+    assert backend in _BACKENDS, backend
+    quant = k_scale is not None
+    b = q.shape[0]
+    sk = k.shape[1]
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos, (b, sk))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    kpos_s = jnp.where(kpos >= 0, kpos - pos[:, None] + shift, -1)
+    o = flash_attention_append(q, k, v, kpos_s, pos0=shift, window=window,
+                               kpos_linear=False, k_scale=k_scale,
+                               v_scale=v_scale, backend=backend)
+    inner = last_decision("flash_append")
+    _decide("flash_verify", inner.backend if inner else "jnp",
+            f"per-row depths re-based to static pos0 (shift={shift}), "
+            "delegated to flash_append" +
+            ("; int8 key stream + scales ride through" if quant else ""))
+    return o
+
+
+def flash_attention_verify_paged(q, k_pool, v_pool, page_table,
+                                 k_chunk, v_chunk, *, pos, length: int,
+                                 k_scale=None, v_scale=None,
+                                 ks_chunk=None, vs_chunk=None,
+                                 backend: str = "auto") -> jnp.ndarray:
+    """Paged-layout speculative verify.  q (B,K,Hq,D) at absolute
+    positions ``pos[j] + i``; pools hold the committed prefix behind
+    page_table (B,M); k_chunk/v_chunk (B,K,Hkv,D) are the draft chunk's
+    own K/V (NOT in the pool — commit happens after acceptance, so the
+    pool never needs rolling back); ``length`` statically truncates the
+    gathered view to the logical cache length.
+
+    Speculatively pre-allocated pages may already be mapped for
+    positions >= pos[j] but hold garbage rows, so the gathered prefix
+    kpos is clamped to ``<= pos - 1`` per row — uncommitted pool rows
+    are invisible no matter what the allocator did ahead of the verify.
+    Quantized pools gather their scale pools through the same table and
+    take the chunk already quantized (``ks_chunk``/``vs_chunk``), the
+    same int8 bytes a later commit writes — verify logits and
+    post-commit decode reads see identical dequantized values."""
+    assert backend in _BACKENDS, backend
+    quant = k_scale is not None
+    ps = k_pool.shape[1]
+    b, kq = q.shape[0], q.shape[1]
+    n_pre = -(-length // ps)
+    pt = page_table[:, :n_pre]
+    k_pre = ref.paged_gather_ref(k_pool, pt)[:, :length]
+    v_pre = ref.paged_gather_ref(v_pool, pt)[:, :length]
+    if not quant:
+        k_pre = k_pre.astype(q.dtype)
+        v_pre = v_pre.astype(q.dtype)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    kpos_pre = ref.paged_kpos_ref(pt, ps)[:, :length]
+    kpos_pre = jnp.where(kpos_pre <= pos[:, None] - 1, kpos_pre, -1)
+    kpos_chunk = pos[:, None] + jnp.arange(kq)
+    kpos = jnp.concatenate([kpos_pre, kpos_chunk], axis=1)
+    k_all = jnp.concatenate([k_pre, k_chunk], axis=1)
+    v_all = jnp.concatenate([v_pre, v_chunk], axis=1)
+    ks_all = vs_all = None
+    if quant:
+        ks_pre = ref.paged_gather_ref(k_scale, pt)[:, :length]
+        vs_pre = ref.paged_gather_ref(v_scale, pt)[:, :length]
+        ks_all = jnp.concatenate([ks_pre, ks_chunk], axis=1)
+        vs_all = jnp.concatenate([vs_pre, vs_chunk], axis=1)
+    o = flash_attention_verify(q, k_all, v_all, kpos, pos=pos,
+                               shift=length, k_scale=ks_all,
+                               v_scale=vs_all, backend=backend)
+    inner = last_decision("flash_verify")
+    _decide("verify_paged", inner.backend if inner else "jnp",
+            "page-gathered prefix (kpos clamped below each row's pos) "
+            "+ draft chunk, delegated to flash_verify" +
+            ("; int8 pool + scale pool gathered together" if quant else ""))
+    return o
+
+
+# ---------------------------------------------------------------------------
 # fused rmsnorm (fwd + one-pass vjp)
 # ---------------------------------------------------------------------------
 
@@ -1048,6 +1157,14 @@ KERNEL_OPS = {
                                "flash_attention_append_paged_ref",
                                "flash_attention_append_paged_quant_ref",
                                None, "flash_append"),
+    "flash_verify": OpContract(flash_attention_verify,
+                               "flash_attention_append_ref",
+                               "flash_attention_append_quant_ref",
+                               None, "flash_append"),
+    "verify_paged": OpContract(flash_attention_verify_paged,
+                               "flash_attention_append_paged_ref",
+                               "flash_attention_append_paged_quant_ref",
+                               None, "flash_verify"),
     "rmsnorm": OpContract(rmsnorm, "rmsnorm_ref", None, "_resolve_rmsnorm",
                           None),
     "rmsprop_update": OpContract(rmsprop_update, "rmsprop_update_ref",

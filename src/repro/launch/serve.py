@@ -107,6 +107,55 @@ def gen_trace(n_requests: int, *, vocab: int, prompt_range, gen_range,
     return out
 
 
+def min_accept_margin(cfg, params, trace: List[Request],
+                      cache_len: int) -> float:
+    """Smallest top-2 logit gap along completed requests' greedy streams
+    (single-slot decode chain — the non-speculative reference path).
+
+    The speculative identity contract ("accepted greedy tokens
+    bit-identical to plain decode") holds up to floating point: verify
+    scores a K-token chunk while decode scores one token, and the two
+    lowerings' logits differ by reduction-order noise (~1e-6).  That
+    noise can only flip an argmax at a near-tie, so identity tests and
+    the speculative bench pin traces whose streams keep every margin
+    orders of magnitude above it — this is the checker for that
+    precondition (and the diagnostic that separates a near-tie flip
+    from a real logic bug: a flip at a healthy margin is never noise —
+    historically an async-dispatch aliasing race, since designed out by
+    fusing accept + commit into the verify launch, see
+    ``_spec_step_all``).
+    Returns 0.0 when a stream's recorded token is not even the chain's
+    argmax (the margin is inside the noise band by construction)."""
+    import jax
+    import jax.numpy as jnp_mod
+
+    from repro.models import model as M
+
+    def _step(c, t, p):
+        return M.decode_step(cfg, params, c, {"tokens": t}, p)
+    step = jax.jit(_step)
+    worst = float("inf")
+    for r in trace:
+        if not r.tokens:
+            continue
+        seq = [int(t) for t in r.prompt] + [int(t) for t in r.tokens]
+        cache = M.init_cache(cfg, 1, cache_len, dtype=jnp_mod.float32)
+        p0 = len(r.prompt)
+        for i, t in enumerate(seq[:-1]):
+            out, cache = step(cache,
+                              jnp_mod.asarray([[t]], jnp_mod.int32),
+                              jnp_mod.asarray(i))
+            if i >= p0 - 1:
+                row = np.asarray(out["logits"][0, -1], np.float64)
+                top2 = np.argpartition(row, -2)[-2:]
+                top1 = top2[np.argmax(row[top2])]
+                if int(top1) != seq[i + 1]:
+                    return 0.0
+                worst = min(worst,
+                            float(row[top1] - row[top2[top2 != top1][0]]))
+    return worst
+
+
 def _percentiles(xs) -> dict:
     if not xs:
         return {}
@@ -116,7 +165,8 @@ def _percentiles(xs) -> dict:
 
 def _validate_trace(trace: List[Request], cache_len: int, *,
                     page_size: Optional[int] = None,
-                    usable_pages: Optional[int] = None) -> None:
+                    usable_pages: Optional[int] = None,
+                    spec_k: int = 1) -> None:
     """A full KV cache has no wrap semantics: ``slot = pos % cache_len``
     silently clobbers row 0 onward if decode runs past the end, while kpos
     keeps attributing the old positions — so reject traces that could
@@ -125,7 +175,12 @@ def _validate_trace(trace: List[Request], cache_len: int, *,
     Paged engines additionally reject any request whose worst-case page
     demand exceeds the pool: such a request can never be served even
     alone, so preempt-and-requeue would thrash forever — fail clearly at
-    startup instead of mid-run."""
+    startup instead of mid-run.  ``spec_k`` > 1 widens the worst case by
+    the speculative in-flight tail: a verify round maps pages covering up
+    to ``spec_k - 1`` tokens past the committed frontier (clamped to the
+    cache), so the same request demands more pages mid-round than its
+    final footprint — the demand ``--admission reserve`` must hold back
+    for its never-preempts guarantee to survive speculation."""
     for r in trace:
         if len(r.prompt) < 1:
             raise ValueError(f"request {r.rid}: empty prompt")
@@ -136,13 +191,14 @@ def _validate_trace(trace: List[Request], cache_len: int, *,
                 "--cache-len (a full cache would wrap and clobber "
                 "prompt rows silently)")
         if page_size:
-            need = -(-min(len(r.prompt) + r.max_new, cache_len)
-                     // page_size)
+            need = -(-min(len(r.prompt) + r.max_new + spec_k - 1,
+                          cache_len) // page_size)
             if need > usable_pages:
                 raise ValueError(
                     f"request {r.rid}: worst-case page demand {need} "
-                    f"(ceil((prompt {len(r.prompt)} + max_new {r.max_new})"
-                    f" / page_size {page_size})) exceeds the pool's "
+                    f"(ceil((prompt {len(r.prompt)} + max_new {r.max_new}"
+                    f" + spec_k {spec_k} - 1) / page_size {page_size})) "
+                    f"exceeds the pool's "
                     f"{usable_pages} usable pages — it can never be "
                     "served even alone; raise --pages or shorten the "
                     "request")
@@ -484,10 +540,23 @@ class AllocatorModel:
                          AND every outstanding reservation unit (the
                          victim's tail demand), the decode-time exhaustion
                          recovery path
+      * ``spec``       — speculative pre-allocation: a verify round maps
+                         pages covering drafted-but-unverified positions
+                         BEFORE the accept decision
+                         (``ServeEngine._spec_step_all``)
+      * ``rewind(h)``  — rollback of a speculative hold whose page turned
+                         out wholly rejected: decref-and-unmap (the
+                         optimistic-admission rollback arm)
+      * ``commit(h)``  — the accept decision lands at least one token in
+                         a speculative page: it becomes an ordinary
+                         committed hold (released later by
+                         ``_free_slot_pages``, never by rewind)
 
     State is ``(allocator, holds)`` where ``holds`` is the tuple of
-    outstanding page-table references as ``(page, version-at-acquire)``
-    pairs.  The checker asserts, at every reachable state: refcounts equal
+    outstanding page-table references as ``(page, version-at-acquire,
+    kind)`` triples — kind ``"c"`` for committed references, ``"s"`` for
+    speculative ones still awaiting their verify verdict.  The checker
+    asserts, at every reachable state: refcounts equal
     outstanding holds and never go negative, free pages are never held,
     ``0 <= reserved <= len(free)`` (reserved allocs can never fail), and
     any page recycled after an index entry was recorded carries a bumped
@@ -507,6 +576,7 @@ class AllocatorModel:
         reserved = int(getattr(alloc, "reserved", 0))
         if len(alloc.free) > reserved:
             ops.append(("alloc",))
+            ops.append(("spec",))
         # reserve is always attemptable — the ALLOCATOR's capacity check
         # is the contract under test (a refused reserve is backpressure,
         # i.e. a no-op state)
@@ -514,10 +584,17 @@ class AllocatorModel:
         if reserved > 0:
             ops.append(("alloc_r",))
             ops.append(("unreserve",))
-        for i, (p, _) in enumerate(holds):
+        for i, h in enumerate(holds):
+            p, kind = h[0], h[2]
             ops.append(("incref", i))
             ops.append(("release", i))
             ops.append(("preempt", i))
+            if kind == "s":
+                # a speculative hold resolves exactly one way per round:
+                # wholly rejected (rewind) or touched by an accepted
+                # token (commit) — never released while still pending
+                ops.append(("rewind", i))
+                ops.append(("commit", i))
             if alloc.ref[p] > 1 and len(alloc.free) > reserved:
                 ops.append(("cow", i))
         return ops
@@ -532,7 +609,12 @@ class AllocatorModel:
             p = alloc.try_alloc()
             if p is None:
                 raise RuntimeError("enabled unreserved alloc failed")
-            holds.append((p, int(alloc.version[p])))
+            holds.append((p, int(alloc.version[p]), "c"))
+        elif kind == "spec":
+            p = alloc.try_alloc()               # _spec_step_all pre-alloc
+            if p is None:
+                raise RuntimeError("enabled speculative alloc failed")
+            holds.append((p, int(alloc.version[p]), "s"))
         elif kind == "reserve":
             alloc.reserve(1)    # False = backpressure (state unchanged)
         elif kind == "alloc_r":
@@ -540,25 +622,36 @@ class AllocatorModel:
             if p is None:
                 raise RuntimeError("reserved alloc failed — the "
                                    "reservation invariant is broken")
-            holds.append((p, int(alloc.version[p])))
+            holds.append((p, int(alloc.version[p]), "c"))
         elif kind == "unreserve":
             alloc.unreserve(1)
         elif kind == "incref":
-            p, _ = holds[op[1]]
+            p = holds[op[1]][0]
             alloc.incref(p)
-            holds.append((p, int(alloc.version[p])))
+            holds.append((p, int(alloc.version[p]), "c"))
         elif kind == "release":
-            p, _ = holds.pop(op[1])
+            p = holds.pop(op[1])[0]
             alloc.decref(p)
+        elif kind == "rewind":
+            p, _, hk = holds.pop(op[1])         # rollback: decref-unmap
+            if hk != "s":
+                raise ValueError("rewind of a non-speculative hold")
+            alloc.decref(p)
+        elif kind == "commit":
+            p, ver, hk = holds[op[1]]           # accepted token landed
+            if hk != "s":
+                raise ValueError("commit of a non-speculative hold")
+            holds[op[1]] = (p, ver, "c")
         elif kind == "cow":
-            src, _ = holds[op[1]]
+            src = holds[op[1]][0]
+            hk = holds[op[1]][2]
             dst = alloc.try_alloc()             # ServeEngine._cow_into
             if dst is None:                     # order: copy rows, then
                 raise RuntimeError("enabled cow failed")  # drop the
             alloc.decref(src)                   # shared ref
-            holds[op[1]] = (dst, int(alloc.version[dst]))
+            holds[op[1]] = (dst, int(alloc.version[dst]), hk)
         elif kind == "preempt":
-            p, _ = holds.pop(op[1])
+            p = holds.pop(op[1])[0]
             alloc.decref(p)
             reserved = int(getattr(alloc, "reserved", 0))
             if reserved:
@@ -566,6 +659,203 @@ class AllocatorModel:
         else:
             raise ValueError(f"unknown op {op!r}")
         return alloc, tuple(sorted(holds))
+
+
+# ---------------------------------------------------------------------------
+# speculative draft sources
+# ---------------------------------------------------------------------------
+
+class NgramDraft:
+    """Self-drafting n-gram lookup over each slot's prompt + generated
+    tokens (zero model cost — "prompt lookup" drafting).
+
+    ``propose_one(history, k)`` matches the longest suffix of ``history``
+    (up to ``n`` tokens) against an earlier occurrence in the same
+    history and proposes the up-to-``k - 1`` tokens that followed the
+    most recent match.  No match -> no drafts: the slot rides the verify
+    batch with an effective k of 1, which is exactly one plain decode
+    step.  Repetitive generations (the regime greedy low-entropy decode
+    falls into) hit near-perfect acceptance."""
+
+    kind = "ngram"
+
+    def __init__(self, n: int = 3):
+        self.n = n
+
+    def propose_one(self, hist: List[int], k: int) -> List[int]:
+        m = len(hist)
+        for n in range(min(self.n, m - 1), 0, -1):
+            pat = hist[m - n:]
+            best: List[int] = []
+            for s in range(m - n - 1, -1, -1):
+                if hist[s:s + n] == pat:
+                    cont = hist[s + n:s + n + k - 1]
+                    if len(cont) == k - 1:
+                        # most recent match with a FULL continuation —
+                        # near the tail of a periodic stream the newest
+                        # match is truncated by the history end, so keep
+                        # scanning older occurrences for full length
+                        return [int(t) for t in cont]
+                    if cont and not best:
+                        best = [int(t) for t in cont]
+            if best:
+                return best
+        return []
+
+    def admit(self, req: "Request", j: int) -> None:
+        pass
+
+    def observe(self, js, new_pos) -> None:
+        pass
+
+    def reset(self) -> None:
+        pass
+
+
+class DraftModel:
+    """Tiny-config greedy draft model sharing the engine's dispatch mesh.
+
+    Keeps its own batched contiguous cache (one row per engine slot) and
+    a host ``dpos[j]`` high-water mark: the draft cache holds KV for
+    positions ``[0, dpos[j])`` of slot ``j``'s accepted token stream.
+    Drafting runs ``k - 1`` batched greedy ``serve_step`` calls (the
+    same jitted decode the target uses, under whatever mesh context the
+    engine runs in); after the engine's accept decision ``observe`` drops
+    ``dpos`` to the new committed frontier, and the next round's
+    catch-up loop re-feeds accepted tokens from the request's own token
+    history — stale rows past ``dpos`` written for rejected drafts are
+    invisible (the decode kpos mask hides positions past ``pos``) and
+    get overwritten in place.
+
+    The draft config is ``get_config(arch).reduced()`` with the TARGET's
+    vocab size, so draft tokens index the same logit space the verify
+    step scores."""
+
+    kind = "draft"
+
+    def __init__(self, target_cfg, n_slots: int, cache_len: int,
+                 chunk: int, *, arch: Optional[str] = None, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs import get_config
+        from repro.core import llm_a3c
+        from repro.models import model as M
+
+        dcfg = get_config(arch or "stablelm-1.6b").reduced()
+        dcfg = dataclasses.replace(dcfg, vocab_size=target_cfg.vocab_size)
+        if not M.supports_chunked_prefill(dcfg):
+            raise ValueError(
+                f"draft arch {dcfg.name}: no chunked-prefill path — the "
+                "draft cache can't admit prompts in blocks")
+        self.cfg, self.jax, self.jnp, self.M = dcfg, jax, jnp, M
+        self.n_slots, self.cache_len, self.chunk = n_slots, cache_len, \
+            chunk
+        self.params = M.init_params(dcfg, jax.random.key(seed + 9173))
+        self.step = jax.jit(llm_a3c.make_serve_step(dcfg, sample=False))
+        self.prefill = llm_a3c.make_prefill_step(dcfg)
+        self.key = jax.random.key(seed)          # greedy: never consumed
+        self.cache = M.init_cache(dcfg, n_slots, cache_len,
+                                  dtype=jnp.float32)
+        self.dpos = np.zeros(n_slots, np.int32)
+        s1 = jax.eval_shape(lambda: M.init_cache(dcfg, 1, cache_len))
+        s2 = jax.eval_shape(lambda: M.init_cache(dcfg, 2, cache_len))
+        self._bdim = jax.tree.map(
+            lambda a, b: next((d for d in range(a.ndim)
+                               if a.shape[d] != b.shape[d]), -1), s1, s2)
+        bdims = self._bdim
+
+        def write_row(big, small, j):
+            def one(bd, b, s):
+                if bd < 0:
+                    return b
+                row = jnp.take(s, 0, axis=bd).astype(b.dtype)
+                return jax.lax.dynamic_update_index_in_dim(b, row, j, bd)
+            return jax.tree.map(one, bdims, big, small)
+
+        self._write_row = jax.jit(write_row, static_argnames=("j",))
+
+    def warm_prefill(self, plen: int) -> None:
+        """Compile every chunk offset a ``plen``-token admission can
+        reach (called from the engine's warmup, outside timed regions)."""
+        toks, plens, grid = _pad_group([np.zeros(plen, np.int32)], 1,
+                                       self.chunk, self.cache_len)
+        cache = self.M.init_cache(self.cfg, 1, self.cache_len,
+                                  dtype=self.jnp.float32)
+        _chunked_prefill(self.prefill, self.params, cache, toks, plens,
+                         grid)
+
+    def admit(self, req: "Request", j: int) -> None:
+        """Chunk-prefill the slot's effective prompt into draft row ``j``
+        (generated tokens fold in on a preempted restore, so the draft
+        frontier re-syncs to the committed token stream)."""
+        prompt = _eff_prompt(req)
+        toks, plens, grid = _pad_group([prompt], 1, self.chunk,
+                                       self.cache_len)
+        cache = self.M.init_cache(self.cfg, 1, self.cache_len,
+                                  dtype=self.jnp.float32)
+        _, cache = _chunked_prefill(self.prefill, self.params, cache,
+                                    toks, plens, grid)
+        self.cache = self._write_row(self.cache, cache, j)
+        self.dpos[j] = len(prompt)
+
+    def propose(self, active: np.ndarray, hist: List[Optional[List[int]]],
+                pos: np.ndarray, tok: np.ndarray,
+                kmax: int) -> np.ndarray:
+        """Return an (n_slots, kmax - 1) int32 draft matrix.  First the
+        catch-up loop replays accepted tokens the draft cache hasn't
+        consumed (at most one in steady state: the full-accept bonus
+        token); rows already synced idempotently re-feed their last token
+        — rewriting identical KV at the same position is a no-op.  Then
+        ``kmax - 1`` greedy steps draft the continuation for every row at
+        once; rows speculating with a smaller per-slot k just ignore the
+        tail columns."""
+        jnp = self.jnp
+        n = self.n_slots
+        while True:
+            gap = np.where(active, pos - self.dpos, 0)
+            if gap.max() <= 0:
+                break
+            feed_pos = np.where(gap > 0, self.dpos,
+                                np.maximum(self.dpos - 1, 0))
+            feed_tok = np.array(
+                [hist[j][feed_pos[j]] if active[j] else 0
+                 for j in range(n)], np.int32)
+            _, _, self.cache = self.step(
+                self.params, self.cache,
+                {"tokens": jnp.asarray(feed_tok[:, None])},
+                jnp.asarray(feed_pos), self.key)
+            self.dpos = np.where(gap > 0, self.dpos + 1, self.dpos)
+        drafts = np.zeros((n, max(kmax - 1, 1)), np.int32)
+        cur = np.where(active, tok, 0).astype(np.int32)
+        dp = np.where(active, pos, 0).astype(np.int32)
+        for i in range(kmax - 1):
+            out, _, self.cache = self.step(
+                self.params, self.cache,
+                {"tokens": jnp.asarray(cur[:, None])},
+                jnp.asarray(dp), self.key)
+            cur = np.asarray(out, np.int32)
+            drafts[:, i] = cur
+            dp = dp + 1
+        self._drafted = kmax - 1
+        return drafts
+
+    def observe(self, js, new_pos) -> None:
+        """Accept verdict: slot ``j``'s committed frontier moved to
+        ``new_pos``.  Drafting wrote rows up to ``dpos + drafted - 1``
+        with tokens that match the accepted stream exactly as far as the
+        accepted prefix reaches, so the new draft frontier is
+        ``min(new_pos, dpos + drafted)`` — a full accept leaves a gap of
+        one (the bonus token's KV) for next round's catch-up loop."""
+        drafted = getattr(self, "_drafted", 0)
+        for j, p in zip(js, new_pos):
+            self.dpos[j] = min(int(p), int(self.dpos[j]) + drafted)
+
+    def reset(self) -> None:
+        self.dpos[:] = 0
+        self.cache = self.M.init_cache(self.cfg, self.n_slots,
+                                       self.cache_len,
+                                       dtype=self.jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -589,7 +879,9 @@ class ServeEngine:
                  prefix_cache: bool = True, paged: Optional[bool] = None,
                  kv_dtype="f32", admission: str = "reserve",
                  fault_plan: Optional[FaultPlan] = None, clock=None,
-                 retry_backoff: float = 0.05):
+                 retry_backoff: float = 0.05, spec: str = "off",
+                 spec_k: int = 4, draft_arch: Optional[str] = None,
+                 draft_ngram: int = 3):
         import jax
         import jax.numpy as jnp
 
@@ -605,6 +897,10 @@ class ServeEngine:
             raise ValueError(f"admission policy {admission!r} (want "
                              "'reserve' or 'optimistic')")
         self.admission = admission
+        if spec not in ("off", "ngram", "draft"):
+            raise ValueError(f"spec mode {spec!r} (want 'off', 'ngram' "
+                             "or 'draft')")
+        self.spec = spec
         self.fault_plan = fault_plan
         # time authority: a custom clock makes time (and thus deadlines)
         # fully virtual — FaultPlan latencies advance it deterministically
@@ -663,10 +959,40 @@ class ServeEngine:
                                   dtype=jnp.float32,
                                   paged=self.paged_layout,
                                   kv_dtype=self.kv_dtype)
+        # sampling keys are (request id, logical position) streams off the
+        # session key — NOT the engine step count — so a slot that commits
+        # three verified tokens in one speculative round and a slot that
+        # takes three plain decode steps draw identical streams
         self.sample_first = jax.jit(
-            lambda lg, key: llm_a3c.sample_slot_tokens(lg, key,
-                                                       sample=sample))
+            lambda lg, key, sids, pos: llm_a3c.sample_slot_tokens(
+                lg, key, sample=sample, sids=sids, pos=pos))
         self.base_key = jax.random.key(seed)
+        # speculative decode: jitted verify (one fused k-position append
+        # chunk per round, no cache writes) + deferred commit (scatter of
+        # the accepted prefix), a draft source, per-slot adaptive k
+        if spec != "off" and self.prefill_step is None:
+            raise ValueError(
+                f"--spec {spec}: {cfg.name} has no chunked-append path — "
+                "recurrent caches can't score a k-token chunk in one "
+                "call, so speculation has nothing to verify against")
+        self.spec_k = max(2, int(spec_k)) if spec != "off" else 1
+        if spec == "ngram":
+            self.draft_src = NgramDraft(n=draft_ngram)
+        elif spec == "draft":
+            self.draft_src = DraftModel(cfg, n_slots, cache_len, chunk,
+                                        arch=draft_arch, seed=seed)
+        else:
+            self.draft_src = None
+        if spec != "off":
+            # fused verify + accept + commit: one launch per round
+            self.verify_step = jax.jit(
+                llm_a3c.make_verify_step(cfg, cache_len, sample=sample))
+        self.k_of = np.full(n_slots, self.spec_k, np.int32)
+        self.accept_ema = np.full(n_slots, 1.0)
+        self.spec_rounds = self.spec_drafted = 0
+        self.spec_drafts_accepted = self.spec_wasted_tokens = 0
+        self.spec_pages_rewound = 0
+        self.accepted_k: List[int] = []
         # slot state (host side; shapes are static so no retraces)
         self.pos = np.zeros(n_slots, np.int32)
         self.tok = np.zeros(n_slots, np.int32)
@@ -675,6 +1001,7 @@ class ServeEngine:
         self.step_count = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        self.prefill_wall = 0.0
         self.occupancy: List[float] = []
         self.page_occupancy: List[float] = []
         self.pages_requested = self.pages_alloced = 0
@@ -847,12 +1174,19 @@ class ServeEngine:
         ceil((prompt + max_new)/page_size) clamped to the cache — decode
         can never exhaust.  ``optimistic``: just the effective prompt's
         pages — generation growth is overcommitted and recovered by
-        preempt-and-requeue."""
+        preempt-and-requeue.
+
+        Speculation widens the reserve worst case by ``spec_k - 1``: a
+        verify round pre-maps pages covering up to that many tokens past
+        the committed frontier, and under ``reserve`` those pages stay
+        mapped through a rejection (the reservation already paid for
+        them), so the never-preempts guarantee must cover the speculative
+        in-flight tail too."""
         if not self.paged:
             return 0
         plen = len(req.prompt) + len(req.tokens)
         total = plen if self.admission == "optimistic" \
-            else len(req.prompt) + req.max_new
+            else len(req.prompt) + req.max_new + self.spec_k - 1
         return -(-min(total, self.cache_len) // self.page_size)
 
     def enqueue(self, req: Request) -> None:
@@ -1047,7 +1381,7 @@ class ServeEngine:
         self.pt_host[j] = row
         return cov
 
-    def _prefill_group(self, pairs: List[tuple], key, shared=None):
+    def _prefill_group(self, pairs: List[tuple], shared=None):
         """Chunked flash prefill for up to ``n_slots`` requests in ONE
         batched call chain (effective prompts right-padded to a shared
         chunk grid, rows beyond len(pairs) are dummies) — admission costs
@@ -1084,7 +1418,14 @@ class ServeEngine:
                                        in_cache, toks, plens, grid,
                                        skip=skip)
         self._group_cache = cache
-        first = self.sample_first(jnp.asarray(last), key)
+        # first token at logical position plen draws from the (rid, plen)
+        # stream — same derivation every later decode/verify sample uses
+        rids = np.zeros(self.n_slots, np.int32)
+        for i, (r, _) in enumerate(pairs):
+            rids[i] = r.rid
+        first = self.sample_first(jnp.asarray(last), self.base_key,
+                                  jnp.asarray(rids),
+                                  jnp.asarray(plens, dtype=np.int32))
         return np.asarray(first), cache
 
     def _prefill_loop(self, req: Request, key):
@@ -1112,6 +1453,17 @@ class ServeEngine:
         hits pool exhaustion is unwound (no leak) and requeued at the
         queue front — it drops out of this admission group instead of
         crashing it."""
+        t0 = self.now()
+        try:
+            return self._admit(pairs, now)
+        finally:
+            # admission wall (prompt prefill + mapping + bookkeeping)
+            # accumulates separately so _report can expose a decode-only
+            # token rate — short-generation benches would otherwise
+            # dilute decode-path comparisons with identical prefill cost
+            self.prefill_wall += self.now() - t0
+
+    def _admit(self, pairs: List[tuple], now: float) -> List[Request]:
         if not pairs:
             return []
         shared = None
@@ -1131,10 +1483,8 @@ class ServeEngine:
             pairs = kept
             if not pairs:
                 return []
-        key = self.jax.random.fold_in(
-            self.base_key, np.uint32(2 ** 31 + pairs[0][0].rid))
         if self.prefill_step is not None:
-            first, cache = self._prefill_group(pairs, key, shared)
+            first, cache = self._prefill_group(pairs, shared)
             self._write_rows(cache, [(i, j) for i, (_, j)
                                      in enumerate(pairs)])
             firsts = [int(first[i]) for i in range(len(pairs))]
@@ -1166,6 +1516,10 @@ class ServeEngine:
             self.tok[j] = f
             self.active[j] = True
             self.req_of[j] = req
+            if self.draft_src is not None:
+                # sync the draft source's frontier to the committed
+                # stream (a preempted restore folds accepted tokens in)
+                self.draft_src.admit(req, j)
         if freed:
             self._push_pt()
         return finished
@@ -1182,8 +1536,12 @@ class ServeEngine:
         self._release_reservation(j)
 
     def _push_pt(self) -> None:
+        # snapshot: pt_host is mutated in place between pushes, and on
+        # CPU both device_put and an identity-forwarding jit output can
+        # alias an aligned numpy buffer — the device-side table must not
+        # see later host edits
         self.cache = self._set_pt(self.cache,
-                                  self.jnp.asarray(self.pt_host))
+                                  self.jnp.asarray(self.pt_host.copy()))
 
     def _cow_into(self, src: int, dst: int) -> int:
         """Fork a shared page before the first divergent write: copy the
@@ -1198,6 +1556,250 @@ class ServeEngine:
         self.pages_alloced += 1
         return dst
 
+    def _sids(self):
+        """Per-slot sampling stream ids (request ids; idle rows draw
+        from a garbage stream that is never consumed)."""
+        return self.jnp.asarray(np.asarray(
+            [r.rid if r is not None else 0 for r in self.req_of],
+            np.int32))
+
+    def _spec_step_all(self):
+        """One speculative decode round over the slot table: draft up to
+        ``k_j - 1`` tokens per slot, then score the whole (n_slots,
+        spec_k) chunk, accept the longest matching draft prefix plus the
+        bonus target token, and commit exactly the accepted rows' KV —
+        all inside ONE fused jit launch — then roll back page-table
+        state mapped for wholly-rejected positions on the host.
+
+        Layout rules (DESIGN.md §spec-decode):
+
+          * contiguous / ring: verify never writes, so KV rollback is a
+            no-op by construction — ``pos`` simply doesn't advance past
+            the accepted prefix and the kpos mask hides everything
+            beyond it;
+          * paged: pages covering ``[pos, pos + k_j)`` are pre-mapped
+            before the verify (through ``_alloc_with_preemption``,
+            consuming the slot's reservation first); a page whose every
+            token was rejected is decref'd-and-unmapped under
+            ``optimistic`` admission, or kept mapped under ``reserve``
+            (the reservation already paid for it, and the kpos mask
+            keeps its unwritten rows invisible until decode really
+            reaches them — no churn, no new failure point);
+          * a COW fork triggered for the round's first page (the only
+            one that can be shared — shared pages hold prompt prefix)
+            never rolls back: the accept rule commits at least one
+            token, which is exactly the write the fork was for.
+
+        Adaptive k: a per-slot EMA of the draft accept rate raises
+        ``k_j`` back toward ``--spec-k`` on streaks of full accepts and
+        drops it toward 2 when drafts keep missing, so a low-acceptance
+        slot degenerates toward plain decode instead of burning verify
+        positions.  Non-speculating and draft-less slots ride the same
+        verify batch with an effective k of 1 (shape-stable: the batch
+        is always (n_slots, spec_k))."""
+        jnp = self.jnp
+        step = self.step_count
+        now = self.now()
+        kk = self.spec_k
+        if self.fault_plan is not None:
+            lat = self.fault_plan.step_latency(step)
+            if lat:
+                self._virtual += lat
+                now = self.now()
+            forced = False
+            for _ in range(self.fault_plan.forced_preempts(step)):
+                v = self._choose_victim()
+                if v is None:
+                    break
+                self._preempt(v)
+                self.forced_preemptions += 1
+                forced = True
+            if forced and self.paged:
+                self._push_pt()
+        # -- per-slot draft chunks: row j = [tok_j, d_1 .. d_{k-1}] -----
+        k_eff = np.ones(self.n_slots, np.int32)
+        toks = np.zeros((self.n_slots, kk), np.int32)
+        hist: List[Optional[List[int]]] = [None] * self.n_slots
+        active = np.zeros(self.n_slots, bool)
+        for j in range(self.n_slots):
+            req = self.req_of[j]
+            if req is None:
+                continue
+            active[j] = True
+            toks[j, 0] = self.tok[j]
+            # k_j clamps to the cache END only, never to the request's
+            # remaining budget: verify may range past it (commit clamps
+            # n_acc), which is the in-flight tail _need_pages and
+            # _validate_trace charge for
+            k_eff[j] = max(1, min(int(self.k_of[j]),
+                                  self.cache_len - int(self.pos[j])))
+            hist[j] = [int(t) for t in req.prompt] + req.tokens
+        if self.spec == "draft":
+            drafts = self.draft_src.propose(active, hist, self.pos,
+                                            self.tok, kk)
+            if kk > 1:
+                toks[:, 1:] = drafts[:, :kk - 1]
+        else:
+            for j in range(self.n_slots):
+                if active[j] and k_eff[j] >= 2:
+                    props = self.draft_src.propose_one(hist[j],
+                                                       int(k_eff[j]))
+                    k_eff[j] = min(int(k_eff[j]), 1 + len(props))
+                    if props:
+                        toks[j, 1:k_eff[j]] = props[:int(k_eff[j]) - 1]
+        # -- paged: pre-map every page the speculative span can touch --
+        ps = self.page_size
+        new_idx: dict = {}
+        if self.paged:
+            dirty = False
+            for j in range(self.n_slots):
+                if self.req_of[j] is None:
+                    continue
+                lo = int(self.pos[j]) // ps
+                hi = (int(self.pos[j]) + int(k_eff[j]) - 1) // ps
+                for idx in range(lo, hi + 1):
+                    if self.req_of[j] is None:
+                        break       # evicted as a victim mid-loop
+                    page = int(self.pt_host[j, idx])
+                    if page < 0:
+                        p = self._alloc_with_preemption(j)
+                        if p is None:
+                            dirty = True     # j preempted itself
+                            break
+                        self.pt_host[j, idx] = p
+                        self.pages_requested += 1
+                        self.pages_alloced += 1
+                        new_idx.setdefault(j, []).append(idx)
+                        dirty = True
+                    elif self.alloc.ref[page] > 1:
+                        p = self._alloc_with_preemption(j)
+                        if p is None:
+                            dirty = True
+                            break
+                        # re-read: a preemption inside the alloc may
+                        # have un-shared the page
+                        page = int(self.pt_host[j, idx])
+                        if page >= 0 and self.alloc.ref[page] > 1:
+                            self.pt_host[j, idx] = self._cow_into(page, p)
+                        else:
+                            self.alloc.decref(p)  # fork no longer needed
+                        dirty = True
+            if dirty:
+                self._push_pt()
+        # preemptions above may have evicted slots already drafted
+        for j in range(self.n_slots):
+            if active[j] and self.req_of[j] is None:
+                active[j] = False
+                new_idx.pop(j, None)
+        # remaining budget per slot: the fused accept clamps n_acc to it
+        # (verify may range past it — the in-flight tail _need_pages and
+        # _validate_trace charge for); 0 marks an idle row, which
+        # accepts and commits nothing
+        remaining = np.zeros(self.n_slots, np.int32)
+        for j in range(self.n_slots):
+            if active[j]:
+                req = self.req_of[j]
+                remaining[j] = req.max_new - len(req.tokens)
+        # -- one fused verify + accept + commit over the whole table ---
+        # single launch per round; syncing targets/n_acc below forces
+        # the commit too, so every host-mutated buffer the call read
+        # (pos, toks) is provably consumed before bookkeeping advances
+        # it in place — the async zero-copy aliasing hazard a separate
+        # commit launch had (see min_accept_margin's docstring) can't
+        # recur by construction
+        targets, n_acc, self.cache = self.verify_step(
+            self.params, self.cache, {"tokens": jnp.asarray(toks)},
+            jnp.asarray(self.pos), self.base_key, self._sids(),
+            jnp.asarray(k_eff), jnp.asarray(remaining))
+        targets = np.asarray(targets)
+        n_acc = np.asarray(n_acc)
+        # -- host bookkeeping of the device accept decision ------------
+        for j in range(self.n_slots):
+            if not active[j]:
+                continue
+            kj = int(k_eff[j])
+            self.spec_drafted += kj - 1
+            self.spec_drafts_accepted += int(n_acc[j]) - 1
+            self.spec_wasted_tokens += kj - int(n_acc[j])
+            self.accepted_k.append(int(n_acc[j]))
+        self.spec_rounds += 1
+        # -- paged rollback: unmap wholly-rejected pre-mapped pages ----
+        if self.paged:
+            dirty = False
+            for j, idxs in new_idx.items():
+                pos_new = int(self.pos[j]) + int(n_acc[j])
+                for idx in idxs:
+                    if idx * ps >= pos_new \
+                            and self.admission == "optimistic":
+                        self.alloc.decref(int(self.pt_host[j, idx]))
+                        self.pt_host[j, idx] = -1
+                        self.spec_pages_rewound += 1
+                        dirty = True
+            if dirty:
+                self._push_pt()
+        # -- bookkeeping: tokens, pos, adaptive k, finish/shed ---------
+        finished = []
+        freed_any = False
+        obs_j, obs_pos = [], []
+        for j in range(self.n_slots):
+            if not active[j]:
+                continue
+            req = self.req_of[j]
+            na = int(n_acc[j])
+            req.tokens.extend(int(t) for t in targets[j, :na])
+            self.decode_tokens += na
+            self.pos[j] += na
+            self.tok[j] = int(targets[j, na - 1])
+            obs_j.append(j)
+            obs_pos.append(int(self.pos[j]))
+            if int(k_eff[j]) > 1:
+                rate = (na - 1) / (int(k_eff[j]) - 1)
+                self.accept_ema[j] = (0.7 * self.accept_ema[j]
+                                      + 0.3 * rate)
+                if self.accept_ema[j] > 0.75:
+                    self.k_of[j] = min(int(self.k_of[j]) + 1,
+                                       self.spec_k)
+                elif self.accept_ema[j] < 0.35:
+                    self.k_of[j] = max(int(self.k_of[j]) - 1, 2)
+            if len(req.tokens) >= req.max_new:
+                req.t_done = now
+                self.active[j] = False
+                self.req_of[j] = None
+                self.pos[j] = 0
+                self.tok[j] = 0
+                self.k_of[j] = self.spec_k
+                self.accept_ema[j] = 1.0
+                finished.append(req)
+                if self.paged:
+                    self._free_slot_pages(j)
+                    freed_any = True
+            elif req.deadline_total is not None \
+                    and now - req.arrival > req.deadline_total:
+                req.t_done = now
+                req.shed_reason = "total-deadline"
+                self.sheds_decode += 1
+                self.shed_requests.append(req)
+                self.active[j] = False
+                self.req_of[j] = None
+                self.pos[j] = 0
+                self.tok[j] = 0
+                self.k_of[j] = self.spec_k
+                self.accept_ema[j] = 1.0
+                if self.paged:
+                    self._free_slot_pages(j)
+                    freed_any = True
+        if self.spec == "draft":
+            self.draft_src.observe(obs_j, obs_pos)
+        self.step_count += 1
+        if self.paged:
+            if freed_any:
+                self._push_pt()
+            self.page_occupancy.append(
+                self.alloc.used_pages / max(self.n_pages - 1, 1))
+        self.occupancy.append(float(np.mean([r is not None
+                                             for r in self.req_of])))
+        return finished
+
     def decode_step_all(self):
         """One per-slot decode step over the whole slot table.
 
@@ -1205,7 +1807,13 @@ class ServeEngine:
         pool exhaustion evicts a victim (requeued, not lost) instead of
         raising.  Total-deadline misses shed mid-decode.  FaultPlan hooks
         run first: injected latency advances the virtual clock, forced
-        preemptions evict the victim-policy choice."""
+        preemptions evict the victim-policy choice.
+
+        With speculation on, every decode step is a speculative round
+        (non-speculating slots ride the verify batch with an effective
+        k of 1 — the shape-stable degenerate case)."""
+        if self.spec != "off":
+            return self._spec_step_all()
         jnp = self.jnp
         step = self.step_count
         now = self.now()
@@ -1258,11 +1866,10 @@ class ServeEngine:
                     dirty = True
             if dirty:
                 self._push_pt()
-        key = self.jax.random.fold_in(self.base_key, self.step_count)
         tok, _, self.cache = self.serve_step(
             self.params, self.cache,
             {"tokens": jnp.asarray(self.tok[:, None])},
-            jnp.asarray(self.pos), key)
+            jnp.asarray(self.pos), self.base_key, self._sids())
         self.step_count += 1
         tok = np.asarray(tok)
         finished = []
@@ -1324,6 +1931,7 @@ class ServeEngine:
         self.req_of = [None] * self.n_slots
         self.step_count = 0
         self.prefill_tokens = self.decode_tokens = 0
+        self.prefill_wall = 0.0
         self.occupancy = []
         if self.paged:
             self.alloc = PageAllocator(self.n_pages)
@@ -1347,6 +1955,17 @@ class ServeEngine:
         self._alloc_calls = 0
         self._t0 = None
         self._virtual = 0.0
+        # speculative state: adaptive k back to the CLI ceiling, EMA
+        # optimistic (first rounds draft at full k), counters zeroed,
+        # draft cache re-synced to the empty slot table
+        self.k_of[:] = self.spec_k
+        self.accept_ema[:] = 1.0
+        self.spec_rounds = self.spec_drafted = 0
+        self.spec_drafts_accepted = self.spec_wasted_tokens = 0
+        self.spec_pages_rewound = 0
+        self.accepted_k = []
+        if self.draft_src is not None:
+            self.draft_src.reset()
         self._apply_fault_pressure()
 
 
@@ -1385,6 +2004,10 @@ def _warmup(eng: ServeEngine, trace: List[Request]) -> float:
                               kv_dtype=eng.kv_dtype)
         _chunked_prefill(eng.prefill_step, eng.params, wc, toks, plens,
                          grid)
+        if eng.spec == "draft":
+            # draft admissions are single-row prefills over the same
+            # chunk grid — compile those offsets too
+            eng.draft_src.warm_prefill(pmax)
     warm = Request(rid=-1, prompt=np.zeros(min(8, eng.cache_len - 1),
                                            np.int32),
                    max_new=2, arrival=0.0)
@@ -1433,6 +2056,26 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
         "injected_alloc_failures": eng.injected_alloc_failures,
         "forced_preemptions": eng.forced_preemptions,
     }
+    speculative = {"spec": eng.spec}
+    if eng.spec != "off":
+        from repro.launch import traffic
+        drafted = eng.spec_drafted
+        speculative.update({
+            "spec_k": eng.spec_k,
+            "draft_source": eng.draft_src.kind,
+            "rounds": eng.spec_rounds,
+            "drafted_tokens": drafted,
+            "accepted_draft_tokens": eng.spec_drafts_accepted,
+            "accept_rate": round(
+                eng.spec_drafts_accepted / drafted, 3) if drafted else 0.0,
+            "mean_accepted_k": round(
+                float(np.mean(eng.accepted_k)), 3)
+            if eng.accepted_k else 0.0,
+            "wasted_tokens": eng.spec_wasted_tokens,
+            "wasted_bytes": traffic.spec_wasted_bytes(
+                eng.cfg, eng.spec_wasted_tokens),
+            "pages_rewound": eng.spec_pages_rewound,
+        })
     return {
         "paged": eng.paged, **paged,
         "kv_dtype": eng.kv_dtype_name,
@@ -1442,12 +2085,19 @@ def _report(mode: str, eng: ServeEngine, done: List[Request], wall: float,
         "prefill_tokens": eng.prefill_tokens,
         "generated_tokens": total_new,
         "tokens_per_s": round(total_new / wall, 1) if wall else 0.0,
+        # decode-phase rate: admission (prefill) wall subtracted, so legs
+        # differing only in decode strategy compare undiluted
+        "prefill_wall_s": round(eng.prefill_wall, 3),
+        "decode_tokens_per_s": round(
+            total_new / max(wall - eng.prefill_wall, 1e-9), 1)
+        if wall else 0.0,
         "latency_s": _percentiles(lat),
         "ttft_s": _percentiles(ttft),
         "occupancy": round(float(np.mean(eng.occupancy)), 3)
         if eng.occupancy else 0.0,
         "chunked_prefill": eng.prefill_step is not None,
         "robustness": robustness,
+        "speculative": speculative,
         # the FIRST REQUEST's first generated tokens, not the first decode
         # step across the batch
         "sample_tokens": first_req.tokens[:4] if first_req else [],
@@ -1487,7 +2137,8 @@ def run_engine(cfg, params, trace: List[Request], *, n_slots: int,
                paged: Optional[bool] = None, kv_dtype="f32",
                admission: str = "reserve",
                fault_plan: Optional[FaultPlan] = None, clock=None,
-               retry_backoff: float = 0.05) -> dict:
+               retry_backoff: float = 0.05, spec: str = "off",
+               spec_k: int = 4, draft_arch: Optional[str] = None) -> dict:
     """Continuous batching: arrivals feed the engine queue, the scheduler
     admits under reservation backpressure into freed slots, per-slot
     decode (with preempt-and-requeue on pool exhaustion)."""
@@ -1497,10 +2148,12 @@ def run_engine(cfg, params, trace: List[Request], *, n_slots: int,
                       prefix_cache=prefix_cache, paged=paged,
                       kv_dtype=kv_dtype, admission=admission,
                       fault_plan=fault_plan, clock=clock,
-                      retry_backoff=retry_backoff)
+                      retry_backoff=retry_backoff, spec=spec,
+                      spec_k=spec_k, draft_arch=draft_arch)
     _validate_trace(trace, cache_len,
                     page_size=eng.page_size if eng.paged else None,
-                    usable_pages=eng.usable_pages if eng.paged else None)
+                    usable_pages=eng.usable_pages if eng.paged else None,
+                    spec_k=eng.spec_k)
     warmup_s = _warmup(eng, trace)
 
     pending = sorted(trace, key=lambda r: r.arrival)
@@ -1631,6 +2284,21 @@ def main():
                     "to one (FaultPlan schema: fail_alloc_at, preempt_at, "
                     "latency_at, hold_pages) — deterministic overload "
                     "replay")
+    ap.add_argument("--spec", choices=("off", "ngram", "draft"),
+                    default="off",
+                    help="speculative decoding: 'ngram' self-drafts from "
+                    "each request's own history (prompt lookup, zero "
+                    "model cost); 'draft' runs a tiny reduced-config "
+                    "draft model on the same mesh; accepted tokens are "
+                    "bit-identical to --spec off")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max verify-chunk length per slot (1 current "
+                    "token + up to k-1 drafts); per-slot adaptive k "
+                    "throttles below this on low acceptance")
+    ap.add_argument("--draft-arch", default=None,
+                    help="--spec draft: architecture name for the "
+                    "reduced draft config (default stablelm-1.6b "
+                    "reduced, re-vocabed to the target)")
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-seed", type=int, default=0)
@@ -1727,8 +2395,13 @@ def main():
         if args.mode == "engine":
             rec = run_engine(cfg, params, trace,
                              admission=args.admission,
-                             fault_plan=fault_plan, **kw)
+                             fault_plan=fault_plan, spec=args.spec,
+                             spec_k=args.spec_k,
+                             draft_arch=args.draft_arch, **kw)
         else:
+            if args.spec != "off":
+                raise SystemExit("--spec needs --mode engine (lockstep "
+                                 "is the non-speculative baseline)")
             rec = run_lockstep(cfg, params, trace, **kw)
 
     rec.update({
@@ -1742,7 +2415,8 @@ def main():
             r for r in hlo_analysis.kernel_dispatch_summary()
             if r["op"] in ("decode_attention", "flash_attention",
                            "flash_append", "decode_paged",
-                           "append_paged")],
+                           "append_paged", "flash_verify",
+                           "verify_paged")],
     })
     print(json.dumps(rec))
 

@@ -145,13 +145,17 @@ def paged_capacity(cfg: ModelConfig, *, n_slots: int, cache_len: int,
 
 def reservation_capacity(*, n_pages: int, page_size: int,
                          prompt_tokens: int, max_new: int,
-                         shared_tokens: int = 0) -> dict:
+                         shared_tokens: int = 0, spec_k: int = 1) -> dict:
     """Admission-control capacity of a page pool under the serve engine's
     two policies (ISSUE: reservation/overcommit math).
 
-    ``reserve`` holds back the worst case — ceil((prompt + max_new) /
-    page_size) pages per live request — so decode can NEVER exhaust the
-    pool: concurrency is what fits whole worst-case reservations.
+    ``reserve`` holds back the worst case — ceil((prompt + max_new +
+    spec_k - 1) / page_size) pages per live request — so decode can NEVER
+    exhaust the pool: concurrency is what fits whole worst-case
+    reservations.  ``spec_k`` > 1 is speculative decoding's in-flight
+    tail: a verify round pre-maps pages covering up to ``spec_k - 1``
+    drafted tokens past the committed frontier before knowing how many
+    commit, so the never-preempts guarantee must reserve for them too.
     ``optimistic`` reserves only the prompt's pages and overcommits the
     generated tail; decode-time exhaustion is recovered by
     preempt-and-requeue, buying ``overcommit_ratio`` more admitted
@@ -161,7 +165,7 @@ def reservation_capacity(*, n_pages: int, page_size: int,
     capacity here counts steady-state extra requests)."""
     usable = n_pages - 1                       # page 0 is the sink
     shared_pages = min(shared_tokens, prompt_tokens) // page_size
-    worst = -(-(prompt_tokens + max_new) // page_size)
+    worst = -(-(prompt_tokens + max_new + spec_k - 1) // page_size)
     opt = -(-prompt_tokens // page_size)
     worst_u = max(worst - shared_pages, 1)
     opt_u = max(opt - shared_pages, 1)
@@ -176,6 +180,31 @@ def reservation_capacity(*, n_pages: int, page_size: int,
         "slots_optimistic": slots_opt,
         "overcommit_ratio": slots_opt / max(slots_reserve, 1),
     }
+
+
+def spec_verify_bytes_per_token(cfg: ModelConfig) -> int:
+    """Marginal HBM bytes ONE verify position adds to a speculative round:
+    its block in/out activations, its q/o streams through the append
+    kernel, and its logits row.  The param sweep and the KV-prefix read
+    are paid once per round and amortized over every position in the
+    chunk — that amortization IS the speculative win — so a REJECTED
+    position wastes only this marginal term, not a full
+    ``decode_bytes_per_token``.  Multiply by the engine's
+    ``spec_wasted_tokens`` counter for the round-trip waste a bench
+    reports next to its accept rate."""
+    n_attn = sum(1 for k in cfg.layer_kinds()
+                 if k in ("attn", "attn_local"))
+    acts = 4 * cfg.n_layers * cfg.d_model            # block in/out, bf16
+    qo = n_attn * 2 * cfg.n_heads * cfg.head_dim * 4  # q read + o write
+    logits = 4 * cfg.vocab_size                       # f32 row + argmax read
+    return acts + qo + logits
+
+
+def spec_wasted_bytes(cfg: ModelConfig, wasted_tokens: int) -> int:
+    """Total marginal HBM bytes burned on rejected (and over-drafted)
+    verify positions across a run — the serve report's wasted-bytes
+    column: ``wasted_tokens * spec_verify_bytes_per_token``."""
+    return wasted_tokens * spec_verify_bytes_per_token(cfg)
 
 
 def decode_bytes_per_token(cfg: ModelConfig, batch: int, cache_len: int, *,

@@ -558,6 +558,165 @@ def attend_prefill(params: dict, x: jnp.ndarray, cache: dict, pos0: int,
 
 
 # ---------------------------------------------------------------------------
+# speculative verify + deferred commit
+# ---------------------------------------------------------------------------
+
+def attend_verify(params: dict, x: jnp.ndarray, cache: dict,
+                  pos: jnp.ndarray, cfg, *, shift: int,
+                  window: Optional[int] = None, use_rope: bool = True,
+                  backend: str = "auto"):
+    """Score a K-token draft chunk per slot WITHOUT touching the cache.
+
+    x (B, K, d_model) — row j's drafted tokens at absolute positions
+    ``pos[j] + i`` (per-slot depths; rows whose real draft is shorter
+    than K carry pad tokens — pad keys sit at positions the causal mask
+    already hides from every valid query, and pad-query outputs are
+    discarded by the caller).  ``shift`` is a static upper bound on
+    ``pos`` (the engine's logical cache length) for the dispatch
+    re-basing trick.
+
+    Returns (out (B, K, d_model), pending) where ``pending`` holds the
+    chunk's K/V rows (already quantized for int8 caches — the exact
+    bytes ``commit_kv`` writes) so acceptance can commit 1..K rows
+    *after* the host-side accept decision.  Because nothing is written
+    here, KV rollback on rejection is a no-op by construction; only the
+    page table (engine side) carries speculative state."""
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, kq, _ = x.shape
+    q = _split_heads(cm.linear(params["wq"], x), n_h, hd)
+    k = _split_heads(cm.linear(params["wk"], x), n_kv, hd)
+    v = _split_heads(cm.linear(params["wv"], x), n_kv, hd)
+    if use_rope:
+        positions = pos[:, None] + jnp.arange(kq)[None]  # (B, K) true qpos
+        cos, sin = cm.rope_cos_sin(positions, hd, cfg.rope_theta)
+        rd = getattr(cfg, "rotary_dim", None)
+        q = cm.apply_rope(q, cos, sin, rotary_dim=rd)
+        k = cm.apply_rope(k, cos, sin, rotary_dim=rd)
+
+    if "kp" in cache:
+        if window is not None:
+            raise ValueError("paged KV caches do not support sliding "
+                             "windows; keep ring layers contiguous")
+        quant = "kps" in cache
+        ps = cache["kp"].shape[1]
+        cache_len = cache["pt"].shape[1] * ps
+        k_sc = v_sc = None
+        if quant:
+            # quantize once: these bytes feed the verify attention AND are
+            # what commit_kv later writes, so verify logits match
+            # post-commit decode reads exactly
+            k, k_sc = kv_quant.quantize(k)               # (B,K,Hkv,{D,1})
+            v, v_sc = kv_quant.quantize(v)
+        o = dispatch.flash_attention_verify_paged(
+            q, cache["kp"], cache["vp"], cache["pt"], k, v, pos=pos,
+            length=cache_len, k_scale=cache.get("kps"),
+            v_scale=cache.get("vps"), ks_chunk=k_sc, vs_chunk=v_sc,
+            backend=backend)
+        pending = {"k": k, "v": v}
+        if quant:
+            pending["ks"], pending["vs"] = k_sc, v_sc
+        return cm.linear(params["wo"], o.reshape(b, kq, n_h * hd)), pending
+
+    quant = "ks" in cache
+    k_sc = v_sc = None
+    if quant:
+        k, k_sc = kv_quant.quantize(k)
+        v, v_sc = kv_quant.quantize(v)
+    cache_len = cache["k"].shape[1]
+    cast = (lambda t: t) if quant else (lambda t: t.astype(q.dtype))
+    # key stream: the whole (pre-write) cache + the chunk's own K/V.  The
+    # prefix kpos masks everything at or past each row's pos — cache rows
+    # there are stale (verify never wrote them) — and the chunk rows carry
+    # their true absolute positions.  The decode convention (`pos` = the
+    # row currently being processed) means committed rows end at pos - 1.
+    k_all = jnp.concatenate([cast(cache["k"]), k], axis=1)
+    v_all = jnp.concatenate([cast(cache["v"]), v], axis=1)
+    ks_all = vs_all = None
+    if quant:
+        ks_all = jnp.concatenate([cache["ks"], k_sc], axis=1)
+        vs_all = jnp.concatenate([cache["vs"], v_sc], axis=1)
+    kpos_pre = _cache_positions(cache_len, pos - 1, window)    # (B, L)
+    kpos_all = jnp.concatenate(
+        [kpos_pre, pos[:, None] + jnp.arange(kq)[None]], axis=1)
+    o = dispatch.flash_attention_verify(q, k_all, v_all, kpos_all,
+                                        pos=pos, shift=shift,
+                                        window=window, k_scale=ks_all,
+                                        v_scale=vs_all, backend=backend)
+    pending = {"k": k, "v": v}
+    if quant:
+        pending["ks"], pending["vs"] = k_sc, v_sc
+    return cm.linear(params["wo"], o.reshape(b, kq, n_h * hd)), pending
+
+
+def commit_kv(cache: dict, pending: dict, pos: jnp.ndarray,
+              n_acc: jnp.ndarray, *, window: Optional[int] = None) -> dict:
+    """Scatter the accepted prefix of a verify chunk into the cache.
+
+    ``pending`` is ``attend_verify``'s per-layer chunk K/V (B,K,...);
+    row j commits rows i < n_acc[j] at positions pos[j] + i (ring wrap
+    for window caches, page-table indirection for paged).  Rejected and
+    pad rows write nowhere: masked paged writes land in the page-0
+    garbage sink, masked contiguous writes rewrite the row's current
+    value.  K is small and static, so this unrolls to K scatters."""
+    b, kq = pending["k"].shape[0], pending["k"].shape[1]
+    rows = jnp.arange(b)
+    if "kp" in cache:
+        quant = "kps" in cache
+        ps = cache["kp"].shape[1]
+        m = cache["pt"].shape[1]
+        pt = cache["pt"]
+        kp, vp = cache["kp"], cache["vp"]
+        kps, vps = cache.get("kps"), cache.get("vps")
+        for i in range(kq):
+            p = pos + i
+            pidx = jnp.minimum(p // ps, m - 1)
+            off = p % ps
+            page = pt[rows, pidx]
+            ok = (i < n_acc) & (page > 0)
+            page_w = jnp.where(ok, page, 0)
+            kp = kp.at[page_w, off].set(pending["k"][:, i].astype(kp.dtype))
+            vp = vp.at[page_w, off].set(pending["v"][:, i].astype(vp.dtype))
+            if quant:
+                kps = kps.at[page_w, off].set(pending["ks"][:, i])
+                vps = vps.at[page_w, off].set(pending["vs"][:, i])
+        new_cache = {"kp": kp, "vp": vp, "pt": pt,
+                     "index": jnp.max(pos + n_acc).astype(jnp.int32)}
+        if quant:
+            new_cache["kps"], new_cache["vps"] = kps, vps
+        return new_cache
+
+    quant = "ks" in cache
+    cache_len = cache["k"].shape[1]
+    ck, cv = cache["k"], cache["v"]
+    cks, cvs = cache.get("ks"), cache.get("vs")
+    for i in range(kq):
+        p = pos + i
+        if window is not None:
+            slot = p % cache_len
+        else:
+            # masked rows may sit past the cache end; clamp the index and
+            # let the where() below rewrite the current value harmlessly
+            slot = jnp.minimum(p, cache_len - 1)
+        sel = (i < n_acc)[:, None, None]
+        ck = ck.at[rows, slot].set(
+            jnp.where(sel, pending["k"][:, i].astype(ck.dtype),
+                      ck[rows, slot]))
+        cv = cv.at[rows, slot].set(
+            jnp.where(sel, pending["v"][:, i].astype(cv.dtype),
+                      cv[rows, slot]))
+        if quant:
+            cks = cks.at[rows, slot].set(
+                jnp.where(sel, pending["ks"][:, i], cks[rows, slot]))
+            cvs = cvs.at[rows, slot].set(
+                jnp.where(sel, pending["vs"][:, i], cvs[rows, slot]))
+    new_cache = {"k": ck, "v": cv,
+                 "index": jnp.max(pos + n_acc).astype(jnp.int32)}
+    if quant:
+        new_cache["ks"], new_cache["vs"] = cks, cvs
+    return new_cache
+
+
+# ---------------------------------------------------------------------------
 # cross attention (Whisper decoder)
 # ---------------------------------------------------------------------------
 

@@ -460,6 +460,120 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
 
 
 # ---------------------------------------------------------------------------
+# speculative verify + deferred commit
+# ---------------------------------------------------------------------------
+
+def _apply_block_verify(cfg: ModelConfig, kind: str, p: Params, x, cache,
+                        pos, shift: int):
+    """One residual block over a per-slot K-token draft chunk, cache
+    read-only.  Returns (x, pending) — the chunk K/V ``commit_step``
+    scatters for accepted rows."""
+    window = cfg.sliding_window if kind == "attn_local" else None
+    if kind not in ("attn", "attn_local"):
+        raise NotImplementedError(
+            f"speculative verify is KV-cache only, got block kind {kind}")
+    h, pending = attn.attend_verify(
+        p["attn"], cm.apply_norm(cfg.norm, p["ln1"], x), cache, pos, cfg,
+        shift=shift, window=window)
+    x = x + h
+    y = cm.apply_norm(cfg.norm, p["ln2"], x)
+    if cfg.n_experts:
+        y, _ = moe_mod.moe_apply(p["moe"], y, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 act=cfg.act)
+    else:
+        y = mlp_mod.gated_mlp(p["mlp"], y, act=cfg.act)
+    return x + y, pending
+
+
+def verify_step(cfg: ModelConfig, params: Params, cache: Params,
+                batch: Dict[str, jnp.ndarray], pos: jnp.ndarray,
+                shift: int):
+    """Speculative verify: batch {"tokens": (B, K)} — row j's current
+    token + drafts at absolute positions pos[j] + i; pos (B,) int32;
+    ``shift`` a static upper bound on pos (the logical cache length).
+
+    Unlike ``decode_step`` this writes NOTHING: it returns
+    (out {"logits" (B, K, V)}, pendings) where ``pendings`` mirrors
+    ``cache["layers"]`` with each attention layer's chunk K/V, and the
+    caller commits the accepted prefix via ``commit_step`` after the
+    host-side accept decision — KV rollback on rejection is therefore a
+    no-op by construction.  Requires ``supports_chunked_prefill`` (the
+    engine gates speculation the same way)."""
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: speculative verify needs attention-only caches")
+    params = cast_params(cfg, params)
+    x = _embed_inputs(cfg, params, batch)
+    kinds = cfg.layer_kinds()
+
+    if _use_scan(cfg):
+        cyc_kinds = cfg.block_cycle
+
+        def body(x, inp):
+            cyc_params, cyc_cache = inp
+            pendings = []
+            for j, kind in enumerate(cyc_kinds):
+                x, pend = _apply_block_verify(cfg, kind, cyc_params[j], x,
+                                              cyc_cache[j], pos, shift)
+                pendings.append(pend)
+            return x, tuple(pendings)
+
+        x, pendings = jax.lax.scan(body, x,
+                                   (params["layers"], cache["layers"]))
+    else:
+        pendings = []
+        for i, kind in enumerate(kinds):
+            x, pend = _apply_block_verify(cfg, kind, params["layers"][i], x,
+                                          cache["layers"][i], pos, shift)
+            pendings.append(pend)
+
+    x = cm.apply_norm(cfg.norm, params["final_norm"], x)
+    out = {}
+    if cfg.tie_embeddings:
+        out["logits"] = (x @ params["embed"]["table"].T.astype(x.dtype))
+    else:
+        out["logits"] = cm.linear(params["lm_head"], x, dtype=x.dtype)
+    return out, pendings
+
+
+def commit_step(cfg: ModelConfig, cache: Params, pendings,
+                pos: jnp.ndarray, n_acc: jnp.ndarray) -> Params:
+    """Commit the accepted prefix of a verify chunk: row j writes pending
+    rows i < n_acc[j] at positions pos[j] + i into every layer's cache
+    (ring wrap / page-table indirection per layout).  n_acc[j] == 0
+    writes nothing for that row."""
+    kinds = cfg.layer_kinds()
+
+    if _use_scan(cfg):
+        cyc_kinds = cfg.block_cycle
+
+        def body(carry, inp):
+            cyc_cache, cyc_pend = inp
+            new_caches = []
+            for j, kind in enumerate(cyc_kinds):
+                window = cfg.sliding_window if kind == "attn_local" else None
+                new_caches.append(attn.commit_kv(cyc_cache[j], cyc_pend[j],
+                                                 pos, n_acc, window=window))
+            return carry, tuple(new_caches)
+
+        _, new_cache = jax.lax.scan(body, jnp.zeros(()),
+                                    (cache["layers"], pendings))
+        cache = dict(cache)
+        cache["layers"] = new_cache
+    else:
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            window = cfg.sliding_window if kind == "attn_local" else None
+            new_caches.append(attn.commit_kv(cache["layers"][i],
+                                             pendings[i], pos, n_acc,
+                                             window=window))
+        cache = dict(cache)
+        cache["layers"] = new_caches
+    return cache
+
+
+# ---------------------------------------------------------------------------
 # chunked flash prefill
 # ---------------------------------------------------------------------------
 

@@ -51,6 +51,8 @@ def test_strict_audit_clean_on_tree(tmp_path):
     assert am["cow_forks"] > 0
     assert am["recycle_reuse"] > 0
     assert am["reserved_allocs"] > 0 and am["preempts"] > 0
+    assert am["spec_allocs"] > 0 and am["rewinds"] > 0 \
+        and am["spec_commits"] > 0
     # the kernel checker exercised multi-block grids
     kstats = next(p["stats"] for p in report["passes"]
                   if p["name"] == "kernel-check")
@@ -229,6 +231,24 @@ def test_alloc_replay_flags_refcount_underflow():
         [x.format() for x in v]
 
 
+def test_alloc_replay_flags_rollback_leak():
+    """A verify round that pre-allocates two speculative pages but only
+    rewinds one leaks the other's refcount — the replay harness must
+    report the unresolved hold when the trace ends."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.launch.serve import PageAllocator
+    bad = _load_fixture("bad_alloc.py")
+    v = alloc_model.replay_trace(PageAllocator(4),
+                                 bad.LEAKY_ROLLBACK_TRACE)
+    assert any("never rewound or committed" in x.message for x in v), \
+        [x.format() for x in v]
+    # the balanced round is clean: both pages resolved
+    ok = alloc_model.replay_trace(
+        PageAllocator(4), (("spec_alloc",), ("spec_alloc",),
+                           ("rewind", 2), ("commit", 1)))
+    assert not ok, [x.format() for x in ok]
+
+
 def test_alloc_model_flags_phantom_reservation():
     """An allocator whose ``reserve`` never checks capacity breaks the
     "reserved allocs cannot fail" contract — the explorer must reach an
@@ -256,6 +276,11 @@ def test_alloc_model_real_allocator_is_clean():
     assert stats["reserve_ops"] > 0
     assert stats["reserved_allocs"] > 0
     assert stats["preempts"] > 0
+    # the speculative family (verify pre-alloc, rejected-draft rewind,
+    # accepted-draft commit) is modeled and reached
+    assert stats["spec_allocs"] > 0
+    assert stats["rewinds"] > 0
+    assert stats["spec_commits"] > 0
     assert stats["states_explored"] >= alloc_model.STATE_FLOOR
 
 

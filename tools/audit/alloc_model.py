@@ -37,11 +37,11 @@ from tools.audit.framework import PassResult, Violation, ensure_importable
 
 DEPTH = 6
 N_PAGES = 4
-# the full op vocabulary reaches 217 states at DEPTH=6/N_PAGES=4 (the
-# pre-reservation model reached 145): the floor sits between the two, so
-# dropping the reserve/preempt families trips it while honest refactors
-# keep slack
-STATE_FLOOR = 180
+# the full op vocabulary reaches 762 states at DEPTH=6/N_PAGES=4 (the
+# pre-speculation model reached 217, pre-reservation 145): the floor sits
+# between the last two, so dropping the spec/rewind/commit families — or
+# the reserve/preempt ones — trips it while honest refactors keep slack
+STATE_FLOOR = 600
 
 
 def _canon(alloc, holds):
@@ -56,8 +56,8 @@ def _invariants(alloc, holds, loc: str) -> List[Violation]:
     def V(msg):
         v.append(Violation("alloc-interleaving", loc, 0, msg))
     counts = {}
-    for p, _ in holds:
-        counts[p] = counts.get(p, 0) + 1
+    for h in holds:                    # (page, version, kind) triples
+        counts[h[0]] = counts.get(h[0], 0) + 1
     for p in range(alloc.n_pages):
         r = int(alloc.ref[p])
         if r < 0:
@@ -81,7 +81,8 @@ def _invariants(alloc, holds, loc: str) -> List[Violation]:
     if reserved > len(alloc.free):
         V(f"reserved {reserved} exceeds free {len(alloc.free)} — a "
           "reserved allocation admission already promised could fail")
-    for p, ver in holds:
+    for h in holds:
+        p, ver = h[0], h[1]
         cur = int(alloc.version[p])
         if cur != ver:
             V(f"page {p}: version moved {ver} -> {cur} while a reference "
@@ -102,13 +103,14 @@ def explore(model, depth: int = DEPTH) -> "tuple[List[Violation], dict]":
     stats = {"depth": depth, "n_pages": model.n_pages,
              "states_explored": 1, "ops_applied": 0,
              "cow_forks": 0, "recycle_reuse": 0,
-             "reserve_ops": 0, "reserved_allocs": 0, "preempts": 0}
+             "reserve_ops": 0, "reserved_allocs": 0, "preempts": 0,
+             "spec_allocs": 0, "rewinds": 0, "spec_commits": 0}
     for _ in range(depth):
         nxt = []
         for alloc, holds in frontier:
             for op in model.enabled_ops(alloc, holds):
                 will_pop = alloc.free[-1] \
-                    if op[0] in ("alloc", "alloc_r", "cow") \
+                    if op[0] in ("alloc", "alloc_r", "cow", "spec") \
                     and alloc.free else None
                 recycled = will_pop is not None and \
                     int(alloc.version[will_pop]) > 0
@@ -133,6 +135,12 @@ def explore(model, depth: int = DEPTH) -> "tuple[List[Violation], dict]":
                     stats["reserved_allocs"] += 1
                 elif op[0] == "preempt":
                     stats["preempts"] += 1
+                elif op[0] == "spec":
+                    stats["spec_allocs"] += 1
+                elif op[0] == "rewind":
+                    stats["rewinds"] += 1
+                elif op[0] == "commit":
+                    stats["spec_commits"] += 1
                 if recycled:
                     stats["recycle_reuse"] += 1
                 errs = _invariants(a2, h2, loc)
@@ -169,10 +177,21 @@ def explore(model, depth: int = DEPTH) -> "tuple[List[Violation], dict]":
 
 def replay_trace(allocator, trace) -> List[Violation]:
     """Apply a raw op trace (``("alloc",) | ("incref", p) |
-    ("decref", p)``) to a live allocator, checking invariant basics after
-    every op — the harness the known-bad underflow fixture runs under."""
+    ("decref", p) | ("spec_alloc",) | ("rewind", p) | ("commit", p)``)
+    to a live allocator, checking invariant basics after every op — the
+    harness the known-bad fixtures run under.
+
+    ``spec_alloc`` marks the page it hands out as a speculative hold;
+    ``rewind`` is the rejected-draft rollback (decref + unmark) and
+    ``commit`` resolves a speculative hold into a committed one.  A
+    verify round resolves EVERY page it pre-allocated, one way or the
+    other, so any page still marked speculative when the trace ends is a
+    rollback leak — the engine would never decref it (``rewind`` skips
+    committed pages, ``_free_slot_pages`` only walks the table) and the
+    pool shrinks by one page per leaky round."""
     v: List[Violation] = []
     loc = f"allocator:{type(allocator).__name__}"
+    spec_held: set = set()
     for i, op in enumerate(trace):
         try:
             if op[0] == "alloc":
@@ -181,10 +200,34 @@ def replay_trace(allocator, trace) -> List[Violation]:
                     v.append(Violation("alloc-interleaving", loc, 0,
                                        f"step {i}: alloc handed out the "
                                        "reserved sink page 0"))
+            elif op[0] == "spec_alloc":
+                p = allocator.alloc()
+                if p == 0:
+                    v.append(Violation("alloc-interleaving", loc, 0,
+                                       f"step {i}: spec_alloc handed out "
+                                       "the reserved sink page 0"))
+                spec_held.add(p)
             elif op[0] == "incref":
                 allocator.incref(op[1])
             elif op[0] == "decref":
                 allocator.decref(op[1])
+            elif op[0] == "rewind":
+                if op[1] not in spec_held:
+                    v.append(Violation(
+                        "alloc-interleaving", loc, 0,
+                        f"step {i}: rewind of page {op[1]} which holds "
+                        "no speculative reference"))
+                    return v
+                allocator.decref(op[1])
+                spec_held.discard(op[1])
+            elif op[0] == "commit":
+                if op[1] not in spec_held:
+                    v.append(Violation(
+                        "alloc-interleaving", loc, 0,
+                        f"step {i}: commit of page {op[1]} which holds "
+                        "no speculative reference"))
+                    return v
+                spec_held.discard(op[1])
             else:
                 raise ValueError(f"unknown op {op!r}")
         except (RuntimeError, ValueError) as e:
@@ -199,6 +242,13 @@ def replay_trace(allocator, trace) -> List[Violation]:
                 f"step {i}: op {op!r} drove refcount(s) negative on "
                 f"page(s) {neg} — decref without a matching reference"))
             return v
+    leaked = sorted(p for p in spec_held if allocator.ref[p] > 0)
+    if leaked:
+        v.append(Violation(
+            "alloc-interleaving", loc, 0,
+            f"trace ended with speculative hold(s) on page(s) {leaked} "
+            "never rewound or committed — each leaky verify round "
+            "shrinks the pool by a page (refcount leak on rollback)"))
     return v
 
 
@@ -228,6 +278,21 @@ def run_allocator_checks(root: str, *, depth: int = DEPTH,
             "alloc-interleaving", "tools/audit/alloc_model.py", 0,
             "interleaving never preempted a hold — the decode-exhaustion "
             "recovery path is unexercised"))
+    if not stats["spec_allocs"]:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            "interleaving never pre-allocated a speculative page — the "
+            "verify-round pre-map path is unexercised"))
+    if not stats["rewinds"]:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            "interleaving never rewound a speculative hold — the "
+            "rejected-draft rollback path is unexercised"))
+    if not stats["spec_commits"]:
+        violations.append(Violation(
+            "alloc-interleaving", "tools/audit/alloc_model.py", 0,
+            "interleaving never committed a speculative hold — the "
+            "accepted-draft path is unexercised"))
     if depth >= DEPTH and n_pages >= N_PAGES \
             and stats["states_explored"] < STATE_FLOOR:
         violations.append(Violation(

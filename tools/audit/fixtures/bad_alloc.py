@@ -82,3 +82,10 @@ class PhantomReserveAllocator(NoVersionBumpAllocator):
 # alloc on a fresh 4-page pool hands out page 3 (LIFO); the second decref
 # has no matching reference and must be reported as underflow
 UNDERFLOW_TRACE = (("alloc",), ("decref", 3), ("decref", 3))
+
+# a verify round pre-allocates two speculative pages (a fresh 4-page pool
+# hands out 1 then 2) but only rewinds the second: page 1's reference is
+# never resolved, so the replay harness must flag it as a rollback leak —
+# the bug class where the engine's rejected-token rewind loop misses a
+# page that verify mapped
+LEAKY_ROLLBACK_TRACE = (("spec_alloc",), ("spec_alloc",), ("rewind", 2))

@@ -276,6 +276,17 @@ def _cases():
                 qc, k8, k8, kpos(S), pos0=POS0, block_q=128, block_k=128,
                 k_scale=s8, v_scale=s8, interpret=True)),
         ],
+        # speculative verify delegates to flash_append after re-basing
+        # per-row depths to a static pos0 = cache_len: one q block of
+        # drafted tokens against a deep prefix keystream.  The q-offset
+        # index maps run far off the origin here (pos0 >> chunk), the
+        # regime a bad offset map walks out of bounds in.
+        "flash_verify": [
+            ("verify_append", lambda: fa.flash_attention_append(
+                z((B, 128, HQ, D)), z((B, L + 128, HKV, D)),
+                z((B, L + 128, HKV, D)), kpos(L + 128), pos0=L,
+                block_q=128, block_k=128, interpret=True)),
+        ],
         "decode_attention": [
             ("decode_fwd", lambda: da.decode_attention_fwd(
                 qd, cache, cache, kpos(L), pos, block_k=256,
